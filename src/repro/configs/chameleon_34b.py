@@ -1,0 +1,21 @@
+"""chameleon-34b — early-fusion VLM [arXiv:2405.09818].
+
+48L d_model=8192, 64 heads (GQA kv=8), d_ff=22016, vocab=65536 with VQ
+image codes interleaved in the token stream (the VQ tokenizer is the
+frontend STUB: input_specs feeds token ids only), qk-norm per the paper.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=65536, qk_norm=True,
+    source="arXiv:2405.09818 (Chameleon), 34B config",
+)
+
+SMOKE = ModelConfig(
+    arch_id="chameleon-smoke", family="vlm",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, d_ff=512,
+    vocab_size=512, qk_norm=True,
+    source="reduced chameleon family",
+)

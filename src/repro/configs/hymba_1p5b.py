@@ -1,0 +1,28 @@
+"""hymba-1.5b — parallel attention + mamba heads [arXiv:2411.13676].
+
+32L d_model=1600, 25 attn heads (GQA kv=5, head_dim 64) in parallel with
+SSD heads (d_inner=3200, head_dim 64 -> 50 SSD heads, state 16); sliding
+window 1024 everywhere except 3 global full-attention layers
+(first/middle/last), per the paper.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    ssm_chunk=256, ssm_groups=1,
+    swa_window=1024, global_layers=(0, 15, 31),
+    source="arXiv:2411.13676 (Hymba), 1.5B config",
+)
+
+SMOKE = ModelConfig(
+    arch_id="hymba-smoke", family="hybrid",
+    n_layers=3, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab_size=512,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=32, ssm_conv=4,
+    ssm_chunk=8, ssm_groups=1,
+    swa_window=8, global_layers=(1,),
+    source="reduced hymba family",
+)

@@ -1,0 +1,20 @@
+"""llama-3.1-8b — extra pool architecture (beyond the assigned 10)
+[hf:meta-llama/Llama-3.1-8B].
+
+32L d_model=4096, 32 heads (GQA kv=8), d_ff=14336, vocab=128256.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=128256, rope_theta=5e5,
+    source="hf:meta-llama/Llama-3.1-8B (extra, beyond assignment)",
+)
+
+SMOKE = ModelConfig(
+    arch_id="llama3-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=1, d_ff=256,
+    vocab_size=512,
+    source="reduced llama3 family",
+)

@@ -1,0 +1,24 @@
+"""mamba2-2.7b — SSD (state-space duality) [arXiv:2405.21060].
+
+64L d_model=2560, attention-free, vocab=50280, ssm_state=128.
+d_inner = 2*d_model = 5120, head_dim 64 -> 80 SSD heads, 1 B/C group.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    ssm_chunk=256, ssm_groups=1,
+    source="arXiv:2405.21060 (Mamba-2), 2.7B config",
+)
+
+SMOKE = ModelConfig(
+    arch_id="mamba2-smoke", family="ssm",
+    n_layers=2, d_model=128, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=512,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=32, ssm_conv=4,
+    ssm_chunk=16, ssm_groups=1,
+    source="reduced mamba2 family",
+)

@@ -1,0 +1,20 @@
+"""mistral-large-123b [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288, 96 heads (GQA kv=8, head_dim 128), d_ff=28672,
+vocab=32768.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=32768, rope_theta=1e6,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)
+
+SMOKE = ModelConfig(
+    arch_id="mistral-smoke", family="dense",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+    d_ff=512, vocab_size=512,
+    source="reduced mistral family",
+)

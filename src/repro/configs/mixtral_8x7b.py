@@ -1,0 +1,22 @@
+"""mixtral-8x7b — extra pool architecture (beyond the assigned 10)
+[hf:mistralai/Mixtral-8x7B-v0.1].
+
+32L d_model=4096, 32 heads (GQA kv=8), 8 experts top-2 with per-expert
+d_ff=14336, vocab=32000.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=32000, rope_theta=1e6,
+    n_experts=8, top_k=2, moe_d_ff=14336, capacity_factor=1.25,
+    source="hf:mistralai/Mixtral-8x7B-v0.1 (extra, beyond assignment)",
+)
+
+SMOKE = ModelConfig(
+    arch_id="mixtral-smoke", family="moe",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=512, n_experts=4, top_k=2, moe_d_ff=96, capacity_factor=2.0,
+    source="reduced mixtral family",
+)

@@ -1,0 +1,20 @@
+"""qwen2-0.5b — GQA + QKV bias [arXiv:2407.10671].
+
+24L d_model=896, 14 heads (GQA kv=2), d_ff=4864, vocab=151936,
+tied embeddings.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab_size=151936, qkv_bias=True, tie_embeddings=True, rope_theta=1e6,
+    source="arXiv:2407.10671 (Qwen2), 0.5B config",
+)
+
+SMOKE = ModelConfig(
+    arch_id="qwen2-0.5b-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab_size=512, qkv_bias=True, tie_embeddings=True,
+    source="reduced qwen2 family",
+)

@@ -1,0 +1,24 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048, 16 heads (kv=16, MHA), per-expert d_ff=1408,
+shared-expert width 4*1408=5632, vocab=151936, QKV bias.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab_size=151936, qkv_bias=True, rope_theta=1e6,
+    n_experts=60, top_k=4, moe_d_ff=1408,
+    n_shared_experts=4, shared_d_ff=5632, capacity_factor=1.25,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)
+
+SMOKE = ModelConfig(
+    arch_id="qwen2-moe-smoke", family="moe",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab_size=512, qkv_bias=True,
+    n_experts=4, top_k=2, moe_d_ff=96,
+    n_shared_experts=1, shared_d_ff=192, capacity_factor=2.0,
+    source="reduced qwen2-moe family",
+)

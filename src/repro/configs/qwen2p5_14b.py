@@ -1,0 +1,19 @@
+"""qwen2.5-14b — GQA + QKV bias [hf:Qwen/Qwen2.5-14B].
+
+48L d_model=5120, 40 heads (GQA kv=8), d_ff=13824, vocab=152064.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=13824,
+    vocab_size=152064, qkv_bias=True, rope_theta=1e6,
+    source="hf:Qwen/Qwen2.5-14B (assignment cites Qwen2.5 card)",
+)
+
+SMOKE = ModelConfig(
+    arch_id="qwen2.5-smoke", family="dense",
+    n_layers=2, d_model=160, n_heads=5, n_kv_heads=1, d_ff=384,
+    vocab_size=512, qkv_bias=True,
+    source="reduced qwen2.5 family",
+)

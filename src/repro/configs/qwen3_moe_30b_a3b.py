@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+48L d_model=2048, 32 q heads (GQA kv=4) head_dim=128, per-expert
+d_ff=768, vocab=151936, qk-norm.  No shared experts.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    n_experts=128, top_k=8, moe_d_ff=768, capacity_factor=1.25,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)
+
+SMOKE = ModelConfig(
+    arch_id="qwen3-moe-smoke", family="moe",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=96, vocab_size=512, qk_norm=True,
+    n_experts=4, top_k=2, moe_d_ff=96, capacity_factor=2.0,
+    source="reduced qwen3-moe family",
+)

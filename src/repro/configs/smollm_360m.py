@@ -1,0 +1,19 @@
+"""smollm-360m — llama-arch small [hf:HuggingFaceTB/SmolLM-360M].
+
+32L d_model=960, 15 heads (GQA kv=5), d_ff=2560, vocab=49152, tied.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab_size=49152, tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-360M",
+)
+
+SMOKE = ModelConfig(
+    arch_id="smollm-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=3, n_kv_heads=1, d_ff=256,
+    vocab_size=512, tie_embeddings=True,
+    source="reduced smollm family",
+)

@@ -1,0 +1,23 @@
+"""whisper-large-v3 — enc-dec audio backbone [arXiv:2212.04356].
+
+32L decoder (+32L encoder), d_model=1280, 20 heads (MHA), d_ff=5120,
+vocab=51866.  Mel+conv frontend is a STUB: input_specs feeds precomputed
+frame embeddings (B, 1500, 1280).  GELU (non-gated) MLPs, whisper-style.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-large-v3", family="encdec",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, d_ff=5120,
+    vocab_size=51866, act="gelu",
+    n_enc_layers=32, enc_seq=1500,
+    source="arXiv:2212.04356 (Whisper), large-v3 card",
+)
+
+SMOKE = ModelConfig(
+    arch_id="whisper-smoke", family="encdec",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab_size=512, act="gelu",
+    n_enc_layers=2, enc_seq=24,
+    source="reduced whisper family",
+)

@@ -1,0 +1,23 @@
+"""repro.core — the paper's dataflow-graph system (TensorFlow, 2015).
+
+Public surface:
+  Graph / Node / TensorRef      §2 graph IR
+  GraphBuilder                  §2 Python front-end
+  Session                       §2 Sessions (Extend/Run), §4.2 partial execution
+  gradients                     §4.1 autodiff by graph extension
+  while_loop / cond             §4.4 control flow builders
+  compile_subgraph              §10 JIT lowering to a pure JAX function
+"""
+from .graph import Graph, Node, TensorRef, GraphError, as_ref
+from .ops import GraphBuilder, register, register_gradient, register_kernel, REGISTRY
+from .session import Session
+from .autodiff import gradients
+from .control_flow import while_loop, cond
+from .lowering import compile_subgraph, Lowered, LoweringError
+
+__all__ = [
+    "Graph", "Node", "TensorRef", "GraphError", "as_ref",
+    "GraphBuilder", "register", "register_gradient", "register_kernel", "REGISTRY",
+    "Session", "gradients", "while_loop", "cond",
+    "compile_subgraph", "Lowered", "LoweringError",
+]

@@ -1,0 +1,128 @@
+"""§4.1 automatic gradient computation by *extending the graph*.
+
+``gradients(g, ys, xs)`` finds the forward path from each ``x`` to ``y``,
+then backtracks from ``y`` to ``x`` adding one gradient node per forward
+operation, composing partial gradients along the backward path with the
+chain rule.  Each gradient node invokes the *gradient function registered
+for the forward operation* and — exactly as the paper describes — receives
+not only the partial gradients already computed along the backward path
+but also (optionally) the inputs and outputs of the forward operation.
+Unused output ports get a zero gradient ("the first input to O's gradient
+function is set to 0 since dC/dy1 = 0").
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+
+from .graph import Graph, Node, TensorRef, as_ref
+from . import ops as ops_mod
+
+
+def _zeros_like_node(g: Graph, ref: TensorRef) -> TensorRef:
+    node = g.add_node("Call", [ref], name=f"grad/zeros_{ref.node}_{ref.port}",
+                      attrs={"fn": lambda x: jnp.zeros_like(x), "n_out": 1})
+    return node.ref
+
+
+def _add_n(g: Graph, refs: List[TensorRef], base: str) -> TensorRef:
+    if len(refs) == 1:
+        return refs[0]
+    acc = refs[0]
+    for i, r in enumerate(refs[1:]):
+        acc = g.add_node("Add", [acc, r], name=f"{base}/acc{i}").ref
+    return acc
+
+
+def gradients(
+    g: Graph,
+    ys: Sequence["Node | TensorRef | str"],
+    xs: Sequence["Node | TensorRef | str"],
+    grad_ys: Optional[Sequence[TensorRef]] = None,
+) -> List[Optional[TensorRef]]:
+    """Extend ``g`` with gradient nodes; return dC/dx refs (None if unreachable)."""
+    y_refs = [as_ref(y) for y in ys]
+    x_refs = [as_ref(x) for x in xs]
+
+    # --- forward reachability: nodes on a path from any x to any y.
+    consumers = g.consumers()
+    from_x: Set[str] = set()
+    stack = [r.node for r in x_refs]
+    while stack:
+        n = stack.pop()
+        if n in from_x:
+            continue
+        from_x.add(n)
+        stack.extend(consumers[n])
+    to_y: Set[str] = g.transitive_closure([r.node for r in y_refs])
+    active = from_x & to_y
+
+    # --- seed gradients.
+    grads: Dict[Tuple[str, int], List[TensorRef]] = {}
+    for i, yr in enumerate(y_refs):
+        if grad_ys is not None:
+            seed = as_ref(grad_ys[i])
+        else:
+            seed = g.add_node(
+                "Call", [yr], name=f"grad/ones_{yr.node}",
+                attrs={"fn": lambda v: jnp.ones_like(v), "n_out": 1},
+            ).ref
+        grads.setdefault((yr.node, yr.port), []).append(seed)
+
+    # --- backward pass in reverse topological order over the active set.
+    order = [n for n in g.topo_sort(g.transitive_closure([r.node for r in y_refs]))
+             if n in active]
+    for name in reversed(order):
+        node = g.nodes[name]
+        od = ops_mod.opdef(node.op)
+        n_out = od.num_outputs(node)
+        out_grad_refs = [grads.get((name, p)) for p in range(n_out)]
+        if all(r is None for r in out_grad_refs):
+            continue  # no gradient flows through this node
+        if od.grad is None:
+            continue  # non-differentiable: gradient stops (leaf or opaque op)
+
+        # Materialize zero grads for unused ports (§4.1).
+        gout_refs: List[TensorRef] = []
+        for p, refs in enumerate(out_grad_refs):
+            if refs is None:
+                gout_refs.append(_zeros_like_node(g, TensorRef(name, p)))
+            else:
+                gout_refs.append(_add_n(g, refs, f"grad/{name}/out{p}"))
+
+        n_in = len(node.inputs)
+        fwd_out_refs = [TensorRef(name, p) for p in range(n_out)]
+
+        def make_grad_fn(node=node, od=od, n_in=n_in, n_out=n_out):
+            def grad_fn(*vals):
+                ins = vals[:n_in]
+                outs = vals[n_in:n_in + n_out]
+                gouts = vals[n_in + n_out:]
+                gins = od.grad(node, list(ins), list(outs), list(gouts))
+                return tuple(
+                    jnp.zeros_like(ins[i]) if gi is None else gi
+                    for i, gi in enumerate(gins)
+                )
+            return grad_fn
+
+        gnode = g.add_node(
+            "Call",
+            list(node.inputs) + fwd_out_refs + gout_refs,
+            name=f"grad/{name}",
+            attrs={"fn": make_grad_fn(), "n_out": n_in, "is_grad_of": name},
+        )
+        for i, in_ref in enumerate(node.inputs):
+            if in_ref.node in active or in_ref.node in {r.node for r in x_refs}:
+                grads.setdefault((in_ref.node, in_ref.port), []).append(
+                    TensorRef(gnode.name, i))
+
+    # --- collect dC/dx.
+    results: List[Optional[TensorRef]] = []
+    for xr in x_refs:
+        refs = grads.get((xr.node, xr.port))
+        if refs is None:
+            results.append(None)
+        else:
+            results.append(_add_n(g, refs, f"grad/wrt_{xr.node}_{xr.port}"))
+    return results

@@ -1,0 +1,38 @@
+"""§5.5 lossy compression on cross-device edges.
+
+The paper truncates an IEEE float32 to a "32-bit float with 16 bits less
+mantissa" for transmission and zero-fills on the receiving side (cheaper
+than probabilistic rounding).  Keeping the top 16 bits of a float32 —
+sign, 8 exponent bits, 7 mantissa bits — is exactly the bfloat16 bit
+pattern, which is why this 2015 trick is native TPU arithmetic today
+(DESIGN.md §2).  We implement the bit-level contract faithfully: the wire
+type is uint16 and decompression is a zero-fill shift, deterministic,
+never a hardware cast.  A Pallas TPU kernel with the same semantics lives
+in ``repro.kernels.compress16``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_f32_to_16(x: jax.Array) -> jax.Array:
+    """float32 -> uint16 wire format (truncate low 16 mantissa bits)."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    return (bits >> 16).astype(jnp.uint16)
+
+
+def decompress_16_to_f32(w: jax.Array) -> jax.Array:
+    """uint16 wire format -> float32 by zero-filling the lost mantissa."""
+    bits = w.astype(jnp.uint32) << 16
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def roundtrip(x: jax.Array) -> jax.Array:
+    return decompress_16_to_f32(compress_f32_to_16(x))
+
+
+def max_relative_error() -> float:
+    """Truncating 16 mantissa bits leaves 7; worst-case rel err < 2**-7."""
+    return 2.0 ** -7

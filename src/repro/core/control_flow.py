@@ -1,0 +1,158 @@
+"""§4.4 control flow: Switch/Merge/Enter/Exit/NextIteration + builders.
+
+High-level ``cond``/``while_loop`` constructs are compiled into the five
+primitive operators exactly as the paper describes; the eager executor
+interprets the primitives with tagged frames (executor.py).  The builders
+additionally record a structured spec (graph.loop_specs / cond_specs) so
+the JIT lowering can emit ``lax.cond`` / ``lax.while_loop`` for the same
+subgraphs — the §10 compiler path for cyclic dataflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+from .graph import Graph, Node, TensorRef, as_ref
+from .ops import GraphBuilder
+
+
+@dataclasses.dataclass
+class LoopSpec:
+    name: str
+    init_refs: List[TensorRef]          # initial loop-variable values (outside)
+    merge_names: List[str]              # per-var Merge node (loop-var binding point)
+    pred_ref: TensorRef                 # cond output
+    cond_nodes: List[str]               # nodes built by cond_fn
+    body_nodes: List[str]               # nodes built by body_fn
+    body_out_refs: List[TensorRef]      # per-var next value
+    switch_names: List[str]
+    exit_names: List[str]               # per-var Exit node (loop results)
+
+
+@dataclasses.dataclass
+class CondSpec:
+    name: str
+    pred_ref: TensorRef
+    input_refs: List[TensorRef]
+    switch_names: List[str]
+    true_nodes: List[str]
+    false_nodes: List[str]
+    true_out_refs: List[TensorRef]
+    false_out_refs: List[TensorRef]
+    merge_names: List[str]              # per-output Merge (results)
+
+
+def while_loop(
+    b: GraphBuilder,
+    cond_fn: Callable[..., "Node | TensorRef"],
+    body_fn: Callable[..., Sequence["Node | TensorRef"]],
+    loop_vars: Sequence["Node | TensorRef"],
+    name: str = "while",
+) -> List[TensorRef]:
+    """Build Enter -> Merge -> [cond] -> Switch -> ([body] -> NextIteration | Exit)."""
+    g = b.graph
+    name = g.unique_name(name)
+    init_refs = [as_ref(v) for v in loop_vars]
+
+    enters = [
+        g.add_node("Enter", [r], name=f"{name}/enter{i}", attrs={"frame": name})
+        for i, r in enumerate(init_refs)
+    ]
+    # Merge gets its back edge appended after NextIteration exists (cyclic graph).
+    merges = [
+        g.add_node("Merge", [e], name=f"{name}/merge{i}") for i, e in enumerate(enters)
+    ]
+    merge_refs = [m.ref for m in merges]
+
+    before = set(g.nodes)
+    pred = as_ref(cond_fn(*merge_refs))
+    cond_nodes = [n for n in g.nodes if n not in before]
+    loop_cond = g.add_node("LoopCond", [pred], name=f"{name}/cond")
+
+    switches = [
+        g.add_node("Switch", [m, loop_cond], name=f"{name}/switch{i}")
+        for i, m in enumerate(merge_refs)
+    ]
+    exits = [
+        g.add_node("Exit", [TensorRef(s.name, 0)], name=f"{name}/exit{i}")
+        for i, s in enumerate(switches)
+    ]
+    body_in = [TensorRef(s.name, 1) for s in switches]
+
+    before = set(g.nodes)
+    body_out = body_fn(*body_in)
+    if not isinstance(body_out, (list, tuple)):
+        body_out = [body_out]
+    body_out_refs = [as_ref(r) for r in body_out]
+    body_nodes = [n for n in g.nodes if n not in before]
+
+    for i, (m, out_ref) in enumerate(zip(merges, body_out_refs)):
+        nxt = g.add_node("NextIteration", [out_ref], name=f"{name}/next{i}")
+        m.inputs.append(nxt.ref)  # the back edge
+
+    g.loop_specs[name] = LoopSpec(
+        name=name,
+        init_refs=init_refs,
+        merge_names=[m.name for m in merges],
+        pred_ref=pred,
+        cond_nodes=cond_nodes,
+        body_nodes=body_nodes,
+        body_out_refs=body_out_refs,
+        switch_names=[s.name for s in switches],
+        exit_names=[e.name for e in exits],
+    )
+    return [e.ref for e in exits]
+
+
+def cond(
+    b: GraphBuilder,
+    pred: "Node | TensorRef",
+    true_fn: Callable[..., Sequence["Node | TensorRef"]],
+    false_fn: Callable[..., Sequence["Node | TensorRef"]],
+    inputs: Sequence["Node | TensorRef"],
+    name: str = "cond",
+) -> List[TensorRef]:
+    """Switch each input on pred; Merge the branch results (§4.4)."""
+    g = b.graph
+    name = g.unique_name(name)
+    pred_ref = as_ref(pred)
+    input_refs = [as_ref(x) for x in inputs]
+
+    switches = [
+        g.add_node("Switch", [r, pred_ref], name=f"{name}/switch{i}")
+        for i, r in enumerate(input_refs)
+    ]
+    t_in = [TensorRef(s.name, 1) for s in switches]
+    f_in = [TensorRef(s.name, 0) for s in switches]
+
+    before = set(g.nodes)
+    t_out = true_fn(*t_in)
+    t_out = t_out if isinstance(t_out, (list, tuple)) else [t_out]
+    t_refs = [as_ref(r) for r in t_out]
+    true_nodes = [n for n in g.nodes if n not in before]
+
+    before = set(g.nodes)
+    f_out = false_fn(*f_in)
+    f_out = f_out if isinstance(f_out, (list, tuple)) else [f_out]
+    f_refs = [as_ref(r) for r in f_out]
+    false_nodes = [n for n in g.nodes if n not in before]
+
+    if len(t_refs) != len(f_refs):
+        raise ValueError("true_fn and false_fn must return the same number of outputs")
+
+    merges = [
+        g.add_node("Merge", [tr, fr], name=f"{name}/merge{i}")
+        for i, (tr, fr) in enumerate(zip(t_refs, f_refs))
+    ]
+    g.cond_specs[name] = CondSpec(
+        name=name,
+        pred_ref=pred_ref,
+        input_refs=input_refs,
+        switch_names=[s.name for s in switches],
+        true_nodes=true_nodes,
+        false_nodes=false_nodes,
+        true_out_refs=t_refs,
+        false_out_refs=f_refs,
+        merge_names=[m.name for m in merges],
+    )
+    return [m.ref for m in merges]

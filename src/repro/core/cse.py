@@ -1,0 +1,66 @@
+"""§5.1 common subexpression elimination (after Click's GVN).
+
+Canonicalises multiple copies of operations with identical op types,
+attributes and (canonicalised) inputs to a single node and redirects
+edges.  Stateful ops, placeholders and ops with unhashable attrs (e.g.
+closures on ``Call`` nodes, unless they are the *same* function object)
+are never merged.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from .graph import Graph, TensorRef
+from . import ops as ops_mod
+
+_NEVER_MERGE = {"Placeholder", "Variable", "Recv", "Switch", "Merge", "Enter",
+                "Exit", "NextIteration"}
+
+
+def _attr_key(attrs) -> Tuple:
+    items = []
+    for k in sorted(attrs):
+        v = attrs[k]
+        try:
+            hash(v)
+        except TypeError:
+            v = id(v)  # closures: identical only if the same object
+        items.append((k, v))
+    return tuple(items)
+
+
+def eliminate_common_subexpressions(g: Graph) -> Dict[str, str]:
+    """Rewrite ``g`` in place; return {eliminated_node: survivor}."""
+    canonical: Dict[Tuple, str] = {}
+    replaced: Dict[str, str] = {}
+
+    def resolve(ref: TensorRef) -> TensorRef:
+        while ref.node in replaced:
+            ref = TensorRef(replaced[ref.node], ref.port)
+        return ref
+
+    for name in g.topo_sort():
+        node = g.nodes[name]
+        node.inputs = [resolve(r) for r in node.inputs]
+        node.control_inputs = [replaced.get(c, c) for c in node.control_inputs]
+        if node.op in _NEVER_MERGE or ops_mod.opdef(node.op).stateful:
+            continue
+        key = (
+            node.op,
+            tuple(str(r) for r in node.inputs),
+            tuple(sorted(node.control_inputs)),
+            _attr_key(node.attrs),
+            node.device,
+        )
+        if key in canonical:
+            replaced[name] = canonical[key]
+        else:
+            canonical[key] = name
+
+    for dead in replaced:
+        del g.nodes[dead]
+    # fix edges in survivors that pointed at eliminated nodes
+    for node in g.nodes.values():
+        node.inputs = [resolve(r) for r in node.inputs]
+        node.control_inputs = [replaced.get(c, c) for c in node.control_inputs]
+    return replaced

@@ -1,0 +1,390 @@
+"""§3.1 single-device eager executor + §4.4 tagged-frame control flow.
+
+The executor keeps, per node-execution, a count of not-yet-available
+dependencies; when the count drops to zero the node joins a ready queue,
+which delegates the node's kernel to its device (§3.1).  Control-flow
+primitives (Switch/Merge/Enter/Exit/NextIteration) are interpreted with a
+tags-and-frames scheme conceptually similar to the MIT Tagged-Token
+machine (§4.4): every value is tagged with a frame context
+``((frame_name, iteration), ...)`` so multiple loop iterations can be in
+flight; dead tensors propagate through untaken branches, and dead
+``NextIteration`` values are swallowed, which terminates loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .graph import Graph, Node, TensorRef
+from . import ops as ops_mod
+
+# A frame context: tuple of (frame_name, iteration) pairs; () is the root.
+FrameCtx = Tuple[Tuple[str, int], ...]
+
+_DEAD = object()  # dead-tensor marker
+
+MAX_ITERATIONS = 100_000
+
+
+class ExecutorError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class ExecutionContext:
+    """Runtime state handed to stateful kernels."""
+
+    variables: Any  # runtime.containers.VariableStore
+    rendezvous: Any = None
+    queues: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    checkpoint_io: Any = None
+    device_kind: str = "cpu"
+
+    def read_variable(self, node: Node):
+        return self.variables.read(node.name, node.attrs)
+
+    def write_variable(self, var_name: str, value):
+        self.variables.write(var_name, value)
+
+    def queue(self, name: str):
+        return self.queues[name]
+
+    def save_checkpoint(self, path: str, values: Dict[str, Any]):
+        self.checkpoint_io.save(path, values)
+
+    def load_checkpoint(self, path: str) -> Dict[str, Any]:
+        return self.checkpoint_io.load(path)
+
+
+def run_kernel(ctx: ExecutionContext, node: Node, inputs: Sequence[Any],
+               device_kind: Optional[str] = None) -> Tuple[Any, ...]:
+    """Dispatch to the device kernel for ``node`` (§2 Operations and Kernels)."""
+    od = ops_mod.opdef(node.op)
+    kind = device_kind or ctx.device_kind
+    fn = od.kernels.get(kind, od.compute)
+    outs = fn(ctx, node, *inputs)
+    n_out = od.num_outputs(node)
+    if len(outs) != n_out:
+        raise ExecutorError(
+            f"op {node.op} ({node.name}) produced {len(outs)} outputs, expected {n_out}")
+    return outs
+
+
+class Executor:
+    """Reference single-device executor over a (sub)graph."""
+
+    def __init__(self, graph: Graph, ctx: ExecutionContext,
+                 node_filter: Optional[Set[str]] = None,
+                 trace: Optional[List[str]] = None,
+                 tracer: Any = None,
+                 device_label: str = "/job:localhost/device:cpu:0") -> None:
+        self.graph = graph
+        self.ctx = ctx
+        self.names = set(node_filter) if node_filter is not None else set(graph.nodes)
+        self.trace = trace  # records execution order for tests
+        self.tracer = tracer  # §9.2 EEG-style fine-grained tracing
+        self.device_label = device_label
+
+        # static consumer index restricted to the executed node set
+        self.consumers: Dict[Tuple[str, int], List[Tuple[str, int]]] = {}
+        self.ctrl_consumers: Dict[str, List[str]] = {}
+        for name in self.names:
+            node = graph.nodes[name]
+            for slot, ref in enumerate(node.inputs):
+                self.consumers.setdefault((ref.node, ref.port), []).append((name, slot))
+            for c in node.control_inputs:
+                self.ctrl_consumers.setdefault(c, []).append(name)
+        self.frames = self._static_frames()
+
+    def _static_frames(self) -> Dict[str, Tuple[str, ...]]:
+        """Static frame path (tuple of frame names) per node.
+
+        Loop-invariant values produced in an *outer* frame are read from
+        the outer context by consumers in inner frames — TF's
+        is_constant-Enter semantics without materialising extra nodes.
+        """
+        frames: Dict[str, Tuple[str, ...]] = {n: () for n in self.names}
+        for _ in range(64):  # fixpoint (depth increases monotonically)
+            changed = False
+            for name in self.names:
+                node = self.graph.nodes[name]
+                if node.op == "Enter":
+                    base = frames.get(node.inputs[0].node, ()) if node.inputs else ()
+                    f = base + (node.attrs["frame"],)
+                elif node.op == "Exit":
+                    f = frames.get(node.inputs[0].node, ())[:-1] if node.inputs else ()
+                else:
+                    f = frames[name]
+                    for ref in node.inputs:
+                        pf = frames.get(ref.node, ())
+                        if len(pf) > len(f):
+                            f = pf
+                if f != frames[name]:
+                    frames[name] = f
+                    changed = True
+            if not changed:
+                break
+        return frames
+
+    # ------------------------------------------------------------------
+    def run(self, fetches: Sequence[TensorRef],
+            feeds: Optional[Dict[TensorRef, Any]] = None) -> List[Any]:
+        feeds = feeds or {}
+        g = self.graph
+        root: FrameCtx = ()
+
+        # value store: (node, port, frame_ctx) -> value (may be _DEAD)
+        values: Dict[Tuple[str, int, FrameCtx], Any] = {}
+        # per-(node, ctx) countdown of outstanding deps
+        pending: Dict[Tuple[str, FrameCtx], int] = {}
+        merge_fired: Set[Tuple[str, FrameCtx]] = set()
+        ready: List[Tuple[str, FrameCtx]] = []
+        done: Set[Tuple[str, FrameCtx]] = set()
+        # loop-invariant inputs not yet produced: (producer, port|None) -> waiters
+        waiters: Dict[Tuple[str, Any], List[Tuple[str, FrameCtx]]] = {}
+
+        def trunc(ctx: FrameCtx, producer: str) -> FrameCtx:
+            return ctx[: len(self.frames.get(producer, ()))]
+
+        def exec_depth(name: str) -> int:
+            # self.frames holds OUTPUT frames; Enter executes one frame up
+            # (it consumes the parent value), Exit one frame down.
+            node = g.nodes[name]
+            d = len(self.frames.get(name, ()))
+            if node.op == "Enter":
+                return d - 1
+            if node.op == "Exit":
+                return d + 1
+            return d
+
+        def dep_count(name: str, ctx: FrameCtx) -> int:
+            node = g.nodes[name]
+            if node.op == "Merge":
+                # Merge is ready as soon as ANY live input arrives (§4.4);
+                # handled event-style below, so it never enters via counting.
+                return -1
+            depth = exec_depth(name)
+            n = 0
+            for ref in node.inputs:
+                if TensorRef(ref.node, ref.port) in feeds:
+                    continue
+                if len(self.frames.get(ref.node, ())) < depth:
+                    # loop-invariant: read from the outer frame when available
+                    if (ref.node, ref.port, trunc(ctx, ref.node)) in values:
+                        continue
+                    waiters.setdefault((ref.node, ref.port), []).append((name, ctx))
+                n += 1
+            for c in node.control_inputs:
+                if len(self.frames.get(c, ())) < depth:
+                    if (c, trunc(ctx, c)) in done:
+                        continue
+                    waiters.setdefault((c, None), []).append((name, ctx))
+                n += 1
+            return n
+
+        def init_pending(name: str, ctx: FrameCtx) -> None:
+            key = (name, ctx)
+            if key in pending or key in done:
+                return
+            node = g.nodes[name]
+            cnt = dep_count(name, ctx)
+            if cnt == 0:
+                pending[key] = 0
+                ready.append(key)
+            else:
+                pending[key] = cnt
+
+        def notify_waiters(wkey: Tuple[str, Any]) -> None:
+            for (cname, cctx) in waiters.pop(wkey, []):
+                ckey = (cname, cctx)
+                if ckey in done or ckey not in pending:
+                    continue
+                pending[ckey] -= 1
+                if pending[ckey] == 0:
+                    ready.append(ckey)
+
+        def output_ctx(node: Node, ctx: FrameCtx) -> FrameCtx:
+            if node.op == "Enter":
+                return ctx + ((node.attrs["frame"], 0),)
+            if node.op == "Exit":
+                return ctx[:-1]
+            if node.op == "NextIteration":
+                frame, it = ctx[-1]
+                return ctx[:-1] + ((frame, it + 1),)
+            return ctx
+
+        def deliver(src: str, port: int, ctx: FrameCtx, value: Any) -> None:
+            """A value for (src:port) became available in frame ``ctx``."""
+            values[(src, port, ctx)] = value
+            for (cname, _slot) in self.consumers.get((src, port), []):
+                if exec_depth(cname) != len(ctx):
+                    continue  # cross-frame edge: handled by the waiter table
+                cnode = g.nodes[cname]
+                ckey = (cname, ctx)
+                if cnode.op == "Merge":
+                    if value is not _DEAD and ckey not in merge_fired and ckey not in done:
+                        merge_fired.add(ckey)
+                        ready.append(ckey)
+                        pending.setdefault(ckey, 0)
+                    elif value is _DEAD:
+                        # fire dead Merge only if every input is dead
+                        if ckey not in merge_fired and ckey not in done and all(
+                            values.get((r.node, r.port, ctx), None) is _DEAD
+                            for r in cnode.inputs
+                        ):
+                            merge_fired.add(ckey)
+                            ready.append(ckey)
+                            pending.setdefault(ckey, 0)
+                    continue
+                init_pending(cname, ctx)
+                if ckey in done:
+                    continue
+                pending[ckey] -= 1
+                if pending[ckey] == 0:
+                    ready.append(ckey)
+            notify_waiters((src, port))
+
+        def deliver_control(src: str, ctx: FrameCtx) -> None:
+            for cname in self.ctrl_consumers.get(src, []):
+                if exec_depth(cname) != len(ctx):
+                    continue  # cross-frame control edge: waiter table
+                ckey = (cname, ctx)
+                init_pending(cname, ctx)
+                if ckey in done:
+                    continue
+                pending[ckey] -= 1
+                if pending[ckey] == 0:
+                    ready.append(ckey)
+            notify_waiters((src, None))
+
+        # --- seed: feeds + source nodes -------------------------------
+        # Fed edges were excluded from dep_count, so only Merge consumers
+        # (event-fired) need notification; the value itself is read from
+        # ``feeds`` at execution time (§4.2 feed-node semantics).
+        for ref, val in feeds.items():
+            values[(ref.node, ref.port, root)] = val
+            for (cname, _slot) in self.consumers.get((ref.node, ref.port), []):
+                cnode = g.nodes[cname]
+                if cnode.op == "Merge":
+                    ckey = (cname, root)
+                    if ckey not in merge_fired and ckey not in done:
+                        merge_fired.add(ckey)
+                        ready.append(ckey)
+                        pending.setdefault(ckey, 0)
+        for name in self.names:
+            node = g.nodes[name]
+            if dep_count(name, root) == 0 and node.op != "Merge":
+                init_pending(name, root)
+
+        # --- main loop --------------------------------------------------
+        steps = 0
+        while ready:
+            steps += 1
+            if steps > MAX_ITERATIONS:
+                raise ExecutorError("executor exceeded MAX_ITERATIONS (livelock?)")
+            name, ctx = ready.pop(0)
+            key = (name, ctx)
+            if key in done:
+                continue
+            done.add(key)
+            node = g.nodes[name]
+            octx = output_ctx(node, ctx)
+
+            # gather inputs (feeds shadow node outputs, §4.2)
+            ins: List[Any] = []
+            any_dead = False
+            for ref in node.inputs:
+                fed = feeds.get(TensorRef(ref.node, ref.port))
+                if fed is not None or TensorRef(ref.node, ref.port) in feeds:
+                    v = feeds[TensorRef(ref.node, ref.port)]
+                else:
+                    v = values.get(
+                        (ref.node, ref.port, trunc(ctx, ref.node)),
+                        _DEAD if node.op == "Merge" else None)
+                    if v is None:
+                        raise ExecutorError(f"input {ref} of {name} missing in {ctx}")
+                if v is _DEAD:
+                    any_dead = True
+                ins.append(v)
+
+            if self.trace is not None:
+                self.trace.append(name)
+
+            od = ops_mod.opdef(node.op)
+
+            # ---- control-flow interpretation --------------------------
+            if node.op == "Switch":
+                data, pred = ins
+                if any_dead:
+                    deliver(name, 0, octx, _DEAD)
+                    deliver(name, 1, octx, _DEAD)
+                else:
+                    live_port = 1 if bool(pred) else 0
+                    deliver(name, live_port, octx, data)
+                    deliver(name, 1 - live_port, octx, _DEAD)
+                deliver_control(name, octx)
+                continue
+            if node.op == "Merge":
+                live = [(i, v) for i, v in enumerate(ins) if v is not _DEAD and v is not None]
+                if live:
+                    idx, v = live[0]
+                    deliver(name, 0, octx, v)
+                    import jax.numpy as jnp
+
+                    deliver(name, 1, octx, jnp.asarray(idx, dtype=jnp.int32))
+                else:
+                    deliver(name, 0, octx, _DEAD)
+                    deliver(name, 1, octx, _DEAD)
+                deliver_control(name, octx)
+                continue
+            if node.op in ("Enter", "Exit", "LoopCond", "Identity"):
+                v = ins[0]
+                deliver(name, 0, octx, v)
+                deliver_control(name, octx)
+                continue
+            if node.op == "NextIteration":
+                v = ins[0]
+                if v is _DEAD:
+                    continue  # dead NextIteration is swallowed: loop terminates
+                deliver(name, 0, octx, v)
+                deliver_control(name, octx)
+                continue
+
+            # ---- normal ops: dead-in -> dead-out -----------------------
+            if any_dead:
+                for p in range(od.num_outputs(node)):
+                    deliver(name, p, octx, _DEAD)
+                deliver_control(name, octx)
+                continue
+
+            if self.tracer is not None:
+                t_start = self.tracer.now()
+                outs = run_kernel(self.ctx, node, ins)
+                self.tracer.record(name, node.op, self.device_label,
+                                   t_start, self.tracer.now(), ctx)
+            else:
+                outs = run_kernel(self.ctx, node, ins)
+            for p, v in enumerate(outs):
+                deliver(name, p, octx, v)
+            deliver_control(name, octx)
+
+        # --- collect fetches --------------------------------------------
+        results = []
+        for ref in fetches:
+            if ref in feeds:
+                results.append(feeds[ref])
+                continue
+            v = values.get((ref.node, ref.port, root))
+            if v is None:
+                # fetching an operation with no outputs (e.g. a train_op
+                # group) just means "make sure it ran" — TF semantics.
+                node = g.nodes.get(ref.node)
+                if node is not None and ops_mod.opdef(node.op).num_outputs(node) == 0 \
+                        and (ref.node, root) in done:
+                    results.append(None)
+                    continue
+                raise ExecutorError(f"fetch {ref} was never produced")
+            if v is _DEAD:
+                raise ExecutorError(f"fetch {ref} is dead (untaken branch)")
+            results.append(v)
+        return results

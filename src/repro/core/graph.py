@@ -1,0 +1,209 @@
+"""Dataflow graph IR — the paper's §2 programming model.
+
+A computation is a directed graph of :class:`Node`\\ s.  Each node
+instantiates an *operation* (registered in :mod:`repro.core.ops`), has zero
+or more data inputs (edges carrying tensors, identified by
+``"node_name:port"``), zero or more *control* inputs (happens-before edges
+carrying no data), a dict of attributes fixed at graph-construction time,
+and an optional device constraint string (§4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorRef:
+    """A reference to output ``port`` of node ``node`` (§4.2 "name:port")."""
+
+    node: str
+    port: int = 0
+
+    @staticmethod
+    def parse(spec: "TensorRef | str | Tuple[str, int]") -> "TensorRef":
+        if isinstance(spec, TensorRef):
+            return spec
+        if isinstance(spec, tuple):
+            return TensorRef(spec[0], int(spec[1]))
+        if ":" in spec:
+            name, port = spec.rsplit(":", 1)
+            return TensorRef(name, int(port))
+        return TensorRef(spec, 0)
+
+    def __str__(self) -> str:
+        return f"{self.node}:{self.port}"
+
+
+@dataclasses.dataclass
+class Node:
+    """One operation instance in the graph."""
+
+    name: str
+    op: str
+    inputs: List[TensorRef] = dataclasses.field(default_factory=list)
+    control_inputs: List[str] = dataclasses.field(default_factory=list)
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    device: Optional[str] = None  # §4.3 partial device constraint
+
+    def output(self, port: int = 0) -> TensorRef:
+        return TensorRef(self.name, port)
+
+    # Convenience: node used directly where a TensorRef is expected.
+    @property
+    def ref(self) -> TensorRef:
+        return TensorRef(self.name, 0)
+
+
+def as_ref(x: "Node | TensorRef | str") -> TensorRef:
+    if isinstance(x, Node):
+        return x.ref
+    return TensorRef.parse(x)
+
+
+class GraphError(Exception):
+    pass
+
+
+class Graph:
+    """A mutable dataflow graph (the Session's ``Extend`` target)."""
+
+    def __init__(self) -> None:
+        self.nodes: Dict[str, Node] = {}  # insertion-ordered
+        self._name_counts: Dict[str, int] = {}
+        # §4.4 structured-loop metadata recorded by control_flow builders so
+        # the JIT lowering can emit lax.while_loop for loops that the eager
+        # executor runs via the Switch/Merge/Enter/... primitives.
+        self.loop_specs: Dict[str, Any] = {}
+        self.cond_specs: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    def unique_name(self, base: str) -> str:
+        if base not in self.nodes and base not in self._name_counts:
+            self._name_counts[base] = 0
+            return base
+        while True:
+            self._name_counts[base] = self._name_counts.get(base, 0) + 1
+            cand = f"{base}_{self._name_counts[base]}"
+            if cand not in self.nodes:
+                return cand
+
+    def add_node(
+        self,
+        op: str,
+        inputs: Sequence["Node | TensorRef | str"] = (),
+        *,
+        name: Optional[str] = None,
+        attrs: Optional[Dict[str, Any]] = None,
+        control_inputs: Sequence["Node | str"] = (),
+        device: Optional[str] = None,
+    ) -> Node:
+        name = self.unique_name(name or op)
+        if not _NAME_RE.match(name):
+            raise GraphError(f"invalid node name {name!r}")
+        node = Node(
+            name=name,
+            op=op,
+            inputs=[as_ref(i) for i in inputs],
+            control_inputs=[c.name if isinstance(c, Node) else str(c) for c in control_inputs],
+            attrs=dict(attrs or {}),
+            device=device,
+        )
+        for ref in node.inputs:
+            if ref.node not in self.nodes:
+                raise GraphError(f"node {name!r} references unknown input {ref}")
+        for cname in node.control_inputs:
+            if cname not in self.nodes:
+                raise GraphError(f"node {name!r} references unknown control input {cname!r}")
+        self.nodes[name] = node
+        return node
+
+    def extend(self, other: "Graph") -> None:
+        """Session.Extend — merge ``other`` into this graph (§2)."""
+        for node in other.nodes.values():
+            if node.name in self.nodes:
+                raise GraphError(f"duplicate node {node.name!r} in Extend")
+            self.nodes[node.name] = node
+        self.loop_specs.update(other.loop_specs)
+        self.cond_specs.update(other.cond_specs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.nodes
+
+    def __getitem__(self, name: str) -> Node:
+        return self.nodes[name]
+
+    # ------------------------------------------------------------------
+    def deps(self, node: Node) -> List[str]:
+        """All predecessor node names (data + control)."""
+        return [r.node for r in node.inputs] + list(node.control_inputs)
+
+    def consumers(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {n: [] for n in self.nodes}
+        for node in self.nodes.values():
+            for d in self.deps(node):
+                out[d].append(node.name)
+        return out
+
+    def transitive_closure(self, targets: Iterable[str]) -> Set[str]:
+        """§2 Run: the set of nodes that must execute to produce ``targets``."""
+        needed: Set[str] = set()
+        stack = [t for t in targets]
+        while stack:
+            n = stack.pop()
+            if n in needed:
+                continue
+            if n not in self.nodes:
+                raise GraphError(f"unknown node {n!r}")
+            needed.add(n)
+            stack.extend(self.deps(self.nodes[n]))
+        return needed
+
+    def subgraph(self, names: Iterable[str]) -> "Graph":
+        """Copy of the induced subgraph.  Nodes are shallow-copied (fresh
+        input/control lists) so passes like §3.2.2 partitioning can rewire
+        edges without corrupting the Session's graph."""
+        keep = set(names)
+        g = Graph()
+        for name, node in self.nodes.items():
+            if name in keep:
+                g.nodes[name] = Node(
+                    name=node.name, op=node.op, inputs=list(node.inputs),
+                    control_inputs=list(node.control_inputs),
+                    attrs=dict(node.attrs), device=node.device)
+        g.loop_specs = dict(self.loop_specs)
+        g.cond_specs = dict(self.cond_specs)
+        return g
+
+    def topo_sort(self, names: Optional[Iterable[str]] = None) -> List[str]:
+        """Dependency-respecting order (construction order used as tiebreak,
+        the paper's §4.1 memory heuristic)."""
+        keep = set(names) if names is not None else set(self.nodes)
+        indeg: Dict[str, int] = {}
+        consumers: Dict[str, List[str]] = {n: [] for n in keep}
+        for n in self.nodes:  # insertion order => deterministic tie-break
+            if n not in keep:
+                continue
+            node = self.nodes[n]
+            ds = [d for d in self.deps(node) if d in keep]
+            indeg[n] = len(ds)
+            for d in ds:
+                consumers[d].append(n)
+        # stable: iterate in insertion order repeatedly
+        order: List[str] = []
+        ready = [n for n in self.nodes if n in keep and indeg[n] == 0]
+        seen_ready = set(ready)
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for c in consumers[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0 and c not in seen_ready:
+                    ready.append(c)
+                    seen_ready.add(c)
+        if len(order) != len(keep):
+            raise GraphError("graph contains a cycle (use control_flow builders for loops)")
+        return order

@@ -1,0 +1,296 @@
+"""§10 JIT lowering: a pruned dataflow subgraph -> one pure JAX function.
+
+The paper's "future work" compiler ("take a subgraph of a TensorFlow
+execution ... and generate an optimized routine for this subgraph") is the
+production path of this reproduction: ``compile_subgraph`` prunes the
+graph to the fetches (§4.2 semantics), optionally runs CSE (§5.1), then
+evaluates the subgraph symbolically under JAX tracing.  Variables become
+explicit function inputs and (for written variables) outputs, so the
+lowered function is pure and pjit-able under any mesh:
+
+    fn(feeds: dict[str, Array], var_values: dict[str, Any])
+        -> (fetch_values: list, new_var_values: dict)
+
+Control-flow subgraphs recorded by the §4.4 builders are emitted as
+``lax.while_loop`` / ``lax.cond``; stateful runtime ops that have no
+compiled analogue (queues, Send/Recv, Save/Restore) are rejected — they
+belong to the eager runtime and to the data pipeline *around* the step.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+from .graph import Graph, Node, TensorRef, as_ref
+from . import ops as ops_mod
+from . import cse as cse_mod
+
+_UNSUPPORTED = {"Send", "Recv", "Save", "Restore", "QueueEnqueue", "QueueDequeue"}
+
+
+class LoweringError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Lowered:
+    fn: Callable  # (feeds: dict, vars: dict) -> (list fetches, dict new_vars)
+    feed_refs: List[TensorRef]
+    fetch_refs: List[TensorRef]
+    var_reads: List[str]
+    var_writes: List[str]
+    n_nodes: int
+
+
+class _LoweringState:
+    """Tracks current variable values during symbolic evaluation."""
+
+    def __init__(self, var_values: Dict[str, Any]):
+        self.var_current = dict(var_values)
+        self.var_reads: Set[str] = set()
+        self.var_writes: Set[str] = set()
+
+    # ExecutionContext protocol subset used by pure/stateful op kernels:
+    def read_variable(self, node: Node):
+        name = node.name
+        self.var_reads.add(name)
+        if name not in self.var_current:
+            init = node.attrs.get("init")
+            if init is None:
+                raise LoweringError(f"variable {name!r} has no value and no init")
+            self.var_current[name] = init() if callable(init) else init
+        return self.var_current[name]
+
+    def write_variable(self, var_name: str, value):
+        self.var_writes.add(var_name)
+        self.var_current[var_name] = value
+
+
+class _Evaluator:
+    def __init__(self, g: Graph, node_set: Set[str], state: _LoweringState,
+                 bindings: Dict[Tuple[str, int], Any]):
+        self.g = g
+        self.node_set = node_set
+        self.state = state
+        self.bindings = dict(bindings)  # (node, port) -> value
+        self.memo: Dict[Tuple[str, int], Any] = {}
+        self.executed: Set[str] = set()
+        # node -> owning loop/cond spec name
+        self.loop_of: Dict[str, str] = {}
+        self.cond_of: Dict[str, str] = {}
+        for lname, spec in g.loop_specs.items():
+            members = (
+                spec.cond_nodes + spec.body_nodes + spec.merge_names
+                + spec.switch_names + spec.exit_names
+                + [f"{lname}/enter{i}" for i in range(len(spec.init_refs))]
+                + [f"{lname}/next{i}" for i in range(len(spec.init_refs))]
+                + [f"{lname}/cond"]
+            )
+            for m in members:
+                self.loop_of[m] = lname
+        for cname, spec in g.cond_specs.items():
+            for m in (spec.switch_names + spec.true_nodes + spec.false_nodes
+                      + spec.merge_names):
+                self.cond_of[m] = cname
+
+    # ------------------------------------------------------------------
+    def value(self, ref: TensorRef):
+        key = (ref.node, ref.port)
+        if key in self.bindings:
+            return self.bindings[key]
+        if key in self.memo:
+            return self.memo[key]
+        name = ref.node
+        if name in self.loop_of:
+            self._run_loop(self.loop_of[name])
+            if key not in self.memo:
+                raise LoweringError(f"loop {self.loop_of[name]} did not produce {ref}")
+            return self.memo[key]
+        if name in self.cond_of:
+            self._run_cond(self.cond_of[name])
+            if key not in self.memo:
+                raise LoweringError(f"cond {self.cond_of[name]} did not produce {ref}")
+            return self.memo[key]
+        self.execute(name)
+        if key not in self.memo:
+            raise LoweringError(f"node {name} produced no output port {ref.port}")
+        return self.memo[key]
+
+    def execute(self, name: str) -> None:
+        if name in self.executed:
+            return
+        node = self.g.nodes.get(name)
+        if node is None:
+            raise LoweringError(f"unknown node {name!r}")
+        if node.op in _UNSUPPORTED:
+            raise LoweringError(
+                f"op {node.op} ({name}) is eager-runtime-only and cannot be lowered")
+        # control dependencies first (effect ordering)
+        for c in node.control_inputs:
+            if c in self.node_set:
+                self.execute(c)
+        if node.op == "Placeholder":
+            raise LoweringError(f"placeholder {name!r} must be fed at compile time")
+        if node.op == "Variable":
+            # not memoized: reads observe the current (possibly updated) value
+            self.executed.add(name)
+            self.memo[(name, 0)] = self.state.read_variable(node)
+            return
+        ins = [self.value(r) for r in node.inputs]
+        self.executed.add(name)
+        od = ops_mod.opdef(node.op)
+        outs = od.compute(self.state, node, *ins)
+        for p, v in enumerate(outs):
+            self.memo[(name, p)] = v
+        # Variable re-read support: invalidate variable memo after writes
+        if node.op in ("Assign", "AssignAdd"):
+            var_name = node.inputs[0].node
+            self.memo[(var_name, 0)] = self.state.var_current[var_name]
+
+    # ------------------------------------------------------------------
+    def _sub_eval(self, extra_bindings: Dict[Tuple[str, int], Any],
+                  release: Set[str] = frozenset()) -> "_Evaluator":
+        ev = _Evaluator(self.g, self.node_set, self.state, {})
+        ev.bindings = dict(self.bindings)
+        ev.bindings.update({k: v for k, v in self.memo.items()})
+        ev.bindings.update(extra_bindings)
+        # nodes of the spec being expanded must evaluate as plain ops inside
+        # the branch/body function, not re-trigger the macro
+        for n in release:
+            ev.loop_of.pop(n, None)
+            ev.cond_of.pop(n, None)
+        return ev
+
+    def _external_refs(self, node_names: Sequence[str], internal: Set[str]) -> List[TensorRef]:
+        refs = []
+        for n in node_names:
+            node = self.g.nodes[n]
+            for r in node.inputs:
+                if r.node not in internal:
+                    refs.append(r)
+        return refs
+
+    def _run_loop(self, lname: str) -> None:
+        spec = self.g.loop_specs[lname]
+        internal = set(spec.cond_nodes + spec.body_nodes + spec.merge_names
+                       + spec.switch_names + spec.exit_names
+                       + [f"{lname}/enter{i}" for i in range(len(spec.init_refs))]
+                       + [f"{lname}/next{i}" for i in range(len(spec.init_refs))]
+                       + [f"{lname}/cond"])
+        init_vals = tuple(self.value(r) for r in spec.init_refs)
+        # pin external closure values (evaluated once, outside the loop)
+        for r in self._external_refs(spec.cond_nodes + spec.body_nodes, internal):
+            if (r.node, r.port) not in self.memo and (r.node, r.port) not in self.bindings:
+                self.value(r)
+
+        def cond_f(carry):
+            binds = {(m, 0): c for m, c in zip(spec.merge_names, carry)}
+            ev = self._sub_eval(binds, release=internal)
+            return ev.value(spec.pred_ref)
+
+        def body_f(carry):
+            binds = {(m, 0): c for m, c in zip(spec.merge_names, carry)}
+            binds.update({(s, 1): c for s, c in zip(spec.switch_names, carry)})
+            ev = self._sub_eval(binds, release=internal)
+            return tuple(ev.value(r) for r in spec.body_out_refs)
+
+        results = jax.lax.while_loop(cond_f, body_f, init_vals)
+        for ename, v in zip(spec.exit_names, results):
+            self.memo[(ename, 0)] = v
+            self.executed.add(ename)
+
+    def _run_cond(self, cname: str) -> None:
+        spec = self.g.cond_specs[cname]
+        pred = self.value(spec.pred_ref)
+        in_vals = tuple(self.value(r) for r in spec.input_refs)
+        internal = set(spec.switch_names + spec.true_nodes + spec.false_nodes
+                       + spec.merge_names)
+        for r in self._external_refs(spec.true_nodes + spec.false_nodes, internal):
+            if (r.node, r.port) not in self.memo and (r.node, r.port) not in self.bindings:
+                self.value(r)
+
+        def branch(port: int, out_refs):
+            def f(vals):
+                binds = {(s, port): v for s, v in zip(spec.switch_names, vals)}
+                ev = self._sub_eval(binds, release=internal)
+                return tuple(ev.value(r) for r in out_refs)
+            return f
+
+        results = jax.lax.cond(pred, branch(1, spec.true_out_refs),
+                               branch(0, spec.false_out_refs), in_vals)
+        for mname, v in zip(spec.merge_names, results):
+            self.memo[(mname, 0)] = v
+            self.executed.add(mname)
+
+
+# ---------------------------------------------------------------------------
+
+
+def compile_subgraph(
+    session,
+    fetches,
+    feeds: Sequence,
+    *,
+    run_cse: bool = True,
+    extra_updates: Sequence[str] = (),
+) -> Lowered:
+    """Lower the (feeds -> fetches) subgraph of ``session.graph``.
+
+    ``extra_updates``: names of stateful nodes (e.g. the optimizer's update
+    group) that must execute even if no fetch depends on them by data edge.
+    """
+    fetch_list = fetches if isinstance(fetches, (list, tuple)) else [fetches]
+    fetch_refs = [as_ref(f) for f in fetch_list]
+    feed_refs = [as_ref(f) for f in feeds]
+
+    roots = [r.node for r in fetch_refs] + list(extra_updates)
+    node_set = session.pruned_nodes(
+        [TensorRef(r, 0) for r in roots], {fr: None for fr in feed_refs})
+
+    g = copy.deepcopy(session.graph.subgraph(node_set))
+    g.loop_specs = session.graph.loop_specs
+    g.cond_specs = session.graph.cond_specs
+    if run_cse:
+        # CSE must not run across control-flow boundaries; cheap guard:
+        if not g.loop_specs and not g.cond_specs:
+            cse_mod.eliminate_common_subexpressions(g)
+    node_set = set(g.nodes)
+
+    var_read_candidates = [n for n in g.nodes if g.nodes[n].op == "Variable"]
+    write_ops = [n for n in g.nodes if g.nodes[n].op in ("Assign", "AssignAdd")]
+    var_write_names = sorted({g.nodes[n].inputs[0].node for n in write_ops})
+
+    def fn(feed_values: Dict[str, Any], var_values: Dict[str, Any]):
+        state = _LoweringState(var_values)
+        bindings = {}
+        for r in feed_refs:
+            key = str(r)
+            if key not in feed_values and r.node in feed_values and r.port == 0:
+                key = r.node
+            bindings[(r.node, r.port)] = feed_values[key]
+        ev = _Evaluator(g, node_set, state, bindings)
+
+        def fetch(r):
+            node = g.nodes.get(r.node)
+            if node is not None and ops_mod.opdef(node.op).num_outputs(node) == 0:
+                ev.execute(r.node)  # operation fetch: run for effect
+                return None
+            return ev.value(r)
+
+        outs = [fetch(r) for r in fetch_refs]
+        for extra in extra_updates:
+            ev.execute(extra)
+        new_vars = {n: state.var_current[n] for n in state.var_writes}
+        return outs, new_vars
+
+    return Lowered(
+        fn=fn,
+        feed_refs=feed_refs,
+        fetch_refs=fetch_refs,
+        var_reads=sorted(var_read_candidates),
+        var_writes=var_write_names,
+        n_nodes=len(node_set),
+    )

@@ -1,0 +1,559 @@
+"""Operation registry + the core op set of Table 1.
+
+An *operation* is an abstract computation; a *kernel* is a device-specific
+implementation (§2 "Operations and Kernels").  ``OpDef.compute`` is the
+reference kernel written with ``jax.numpy`` so the same definition serves
+both the eager executor (running on concrete arrays) and the JIT lowering
+(running on tracers).  Per-device kernel overrides (e.g. a Pallas TPU
+kernel for MatMul) are registered in ``OpDef.kernels`` keyed by device
+type, mirroring the paper's kernel-registration mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, Node, TensorRef
+
+# ---------------------------------------------------------------------------
+# Registry
+
+
+@dataclasses.dataclass
+class OpDef:
+    name: str
+    compute: Callable[..., Tuple[Any, ...]]  # (ctx, node, *inputs) -> tuple outputs
+    num_outputs: Callable[[Node], int]
+    grad: Optional[Callable[..., List[Any]]] = None  # (node, inputs, outputs, gouts) -> gins
+    stateful: bool = False
+    # device kinds that provide a kernel for this op (§3.2.1 feasibility)
+    device_kinds: Tuple[str, ...] = ("cpu", "tpu", "gpu")
+    # per-device-kind kernel overrides: {"tpu": fn(ctx, node, *inputs)}
+    kernels: Dict[str, Callable[..., Tuple[Any, ...]]] = dataclasses.field(default_factory=dict)
+
+
+REGISTRY: Dict[str, OpDef] = {}
+
+
+def register(
+    name: str,
+    *,
+    num_outputs: "int | Callable[[Node], int]" = 1,
+    grad: Optional[Callable[..., List[Any]]] = None,
+    stateful: bool = False,
+    device_kinds: Tuple[str, ...] = ("cpu", "tpu", "gpu"),
+) -> Callable[[Callable], Callable]:
+    def deco(fn: Callable) -> Callable:
+        n_out = num_outputs if callable(num_outputs) else (lambda node, k=num_outputs: k)
+        REGISTRY[name] = OpDef(
+            name=name, compute=fn, num_outputs=n_out, grad=grad,
+            stateful=stateful, device_kinds=device_kinds,
+        )
+        return fn
+
+    return deco
+
+
+def register_gradient(op_name: str) -> Callable[[Callable], Callable]:
+    """§4.1: "A gradient function may be registered by any operation"."""
+
+    def deco(fn: Callable) -> Callable:
+        REGISTRY[op_name].grad = fn
+        return fn
+
+    return deco
+
+
+def register_kernel(op_name: str, device_kind: str) -> Callable[[Callable], Callable]:
+    def deco(fn: Callable) -> Callable:
+        REGISTRY[op_name].kernels[device_kind] = fn
+        return fn
+
+    return deco
+
+
+def opdef(name: str) -> OpDef:
+    if name not in REGISTRY:
+        raise KeyError(f"unregistered op {name!r}")
+    return REGISTRY[name]
+
+
+def is_stateful(node: Node) -> bool:
+    return opdef(node.op).stateful
+
+
+# ---------------------------------------------------------------------------
+# Graph-builder helpers (the Python "front end" of §2, Figure 1)
+
+
+class GraphBuilder:
+    """Thin convenience layer used by clients and tests to build graphs."""
+
+    def __init__(self, graph: Optional[Graph] = None) -> None:
+        self.graph = graph or Graph()
+
+    def _op(self, op, inputs=(), name=None, attrs=None, control_inputs=(), device=None) -> Node:
+        return self.graph.add_node(op, inputs, name=name, attrs=attrs,
+                                   control_inputs=control_inputs, device=device)
+
+    # --- leaf / stateful
+    def placeholder(self, name="placeholder", shape=None, dtype=None) -> Node:
+        return self._op("Placeholder", name=name, attrs={"shape": shape, "dtype": dtype})
+
+    def constant(self, value, name="const", device=None) -> Node:
+        return self._op("Const", name=name, attrs={"value": value}, device=device)
+
+    def variable(self, name, init_value=None, *, container="", sharding=None, device=None) -> Node:
+        return self._op("Variable", name=name, device=device,
+                        attrs={"init": init_value, "container": container, "sharding": sharding})
+
+    def assign(self, var: Node, value, name=None, control_inputs=()) -> Node:
+        return self._op("Assign", [var, value], name=name or f"{var.name}/assign",
+                        control_inputs=control_inputs)
+
+    def assign_add(self, var: Node, value, name=None, control_inputs=()) -> Node:
+        return self._op("AssignAdd", [var, value], name=name or f"{var.name}/assign_add",
+                        control_inputs=control_inputs)
+
+    def group(self, deps: Sequence[Node], name="group") -> Node:
+        """A no-output op that completes when all ``deps`` complete."""
+        return self._op("NoOp", name=name, control_inputs=list(deps))
+
+    # --- math
+    def add(self, a, b, name="add", device=None):
+        return self._op("Add", [a, b], name=name, device=device)
+
+    def sub(self, a, b, name="sub", device=None):
+        return self._op("Sub", [a, b], name=name, device=device)
+
+    def mul(self, a, b, name="mul", device=None):
+        return self._op("Mul", [a, b], name=name, device=device)
+
+    def div(self, a, b, name="div", device=None):
+        return self._op("Div", [a, b], name=name, device=device)
+
+    def exp(self, a, name="exp", device=None):
+        return self._op("Exp", [a], name=name, device=device)
+
+    def log(self, a, name="log", device=None):
+        return self._op("Log", [a], name=name, device=device)
+
+    def neg(self, a, name="neg", device=None):
+        return self._op("Neg", [a], name=name, device=device)
+
+    def square(self, a, name="square", device=None):
+        return self._op("Square", [a], name=name, device=device)
+
+    def greater(self, a, b, name="greater"):
+        return self._op("Greater", [a, b], name=name)
+
+    def less(self, a, b, name="less"):
+        return self._op("Less", [a, b], name=name)
+
+    def equal(self, a, b, name="equal"):
+        return self._op("Equal", [a, b], name=name)
+
+    # --- array
+    def concat(self, xs, axis=0, name="concat"):
+        return self._op("Concat", list(xs), name=name, attrs={"axis": axis})
+
+    def slice_(self, x, begin, size, name="slice"):
+        return self._op("Slice", [x], name=name, attrs={"begin": tuple(begin), "size": tuple(size)})
+
+    def reshape(self, x, shape, name="reshape"):
+        return self._op("Reshape", [x], name=name, attrs={"shape": tuple(shape)})
+
+    def shape(self, x, name="shape"):
+        return self._op("Shape", [x], name=name)
+
+    def rank(self, x, name="rank"):
+        return self._op("Rank", [x], name=name)
+
+    def reduce_sum(self, x, axis=None, name="reduce_sum", device=None):
+        return self._op("ReduceSum", [x], name=name, attrs={"axis": axis}, device=device)
+
+    def reduce_mean(self, x, axis=None, name="reduce_mean", device=None):
+        return self._op("ReduceMean", [x], name=name, attrs={"axis": axis}, device=device)
+
+    def cast(self, x, dtype, name="cast"):
+        return self._op("Cast", [x], name=name, attrs={"dtype": jnp.dtype(dtype).name})
+
+    # --- matrix / NN
+    def matmul(self, a, b, name="matmul", device=None):
+        return self._op("MatMul", [a, b], name=name, device=device)
+
+    def relu(self, x, name="relu", device=None):
+        return self._op("ReLU", [x], name=name, device=device)
+
+    def sigmoid(self, x, name="sigmoid"):
+        return self._op("Sigmoid", [x], name=name)
+
+    def tanh(self, x, name="tanh"):
+        return self._op("Tanh", [x], name=name)
+
+    def softmax(self, x, name="softmax"):
+        return self._op("SoftMax", [x], name=name)
+
+    def softmax_xent(self, logits, labels, name="softmax_xent"):
+        """Mean softmax cross-entropy with integer labels."""
+        return self._op("SoftmaxXent", [logits, labels], name=name)
+
+    # --- composite escape hatch: any pure jax-traceable function as one node.
+    def call(self, fn: Callable, inputs: Sequence, name="call", n_out=1, attrs=None, device=None):
+        a = dict(attrs or {})
+        a["fn"] = fn
+        a["n_out"] = n_out
+        return self._op("Call", list(inputs), name=name, attrs=a, device=device)
+
+    # --- io / checkpoint / queues (stateful)
+    def save(self, variables: Sequence[Node], path_attr: str, name="save"):
+        return self._op("Save", list(variables), name=name,
+                        attrs={"path": path_attr, "var_names": [v.name for v in variables]})
+
+    def restore(self, variables: Sequence[Node], path_attr: str, name="restore"):
+        return self._op("Restore", [], name=name,
+                        attrs={"path": path_attr, "var_names": [v.name for v in variables]})
+
+
+# ---------------------------------------------------------------------------
+# Op implementations.  compute(ctx, node, *inputs) -> tuple of outputs.
+
+
+def _unary(fn):
+    def compute(ctx, node, x):
+        return (fn(x),)
+    return compute
+
+
+def _binary(fn):
+    def compute(ctx, node, a, b):
+        return (fn(a, b),)
+    return compute
+
+
+# --- leaves ---------------------------------------------------------------
+
+@register("Placeholder")
+def _placeholder(ctx, node):
+    raise RuntimeError(f"placeholder {node.name!r} was not fed")
+
+
+@register("Const")
+def _const(ctx, node):
+    return (jnp.asarray(node.attrs["value"]),)
+
+
+@register("NoOp", num_outputs=0)
+def _noop(ctx, node):
+    return ()
+
+
+@register("Identity", grad=lambda node, ins, outs, g: [g[0]])
+def _identity(ctx, node, x):
+    return (x,)
+
+
+# --- stateful variables (§2 Variables) -------------------------------------
+
+@register("Variable", stateful=True)
+def _variable(ctx, node):
+    return (ctx.read_variable(node),)
+
+
+@register("Assign", stateful=True)
+def _assign(ctx, node, var_val, new_val):
+    ctx.write_variable(node.inputs[0].node, new_val)
+    return (new_val,)
+
+
+@register("AssignAdd", stateful=True)
+def _assign_add(ctx, node, var_val, delta):
+    new = var_val + delta
+    ctx.write_variable(node.inputs[0].node, new)
+    return (new,)
+
+
+# --- element-wise math ------------------------------------------------------
+
+register("Add", grad=lambda n, i, o, g: [_unbroadcast(g[0], jnp.shape(i[0])),
+                                         _unbroadcast(g[0], jnp.shape(i[1]))])(_binary(jnp.add))
+register("Sub", grad=lambda n, i, o, g: [_unbroadcast(g[0], jnp.shape(i[0])),
+                                         _unbroadcast(-g[0], jnp.shape(i[1]))])(_binary(jnp.subtract))
+register("Mul", grad=lambda n, i, o, g: [_unbroadcast(g[0] * i[1], jnp.shape(i[0])),
+                                         _unbroadcast(g[0] * i[0], jnp.shape(i[1]))])(_binary(jnp.multiply))
+register("Div", grad=lambda n, i, o, g: [_unbroadcast(g[0] / i[1], jnp.shape(i[0])),
+                                         _unbroadcast(-g[0] * i[0] / (i[1] * i[1]), jnp.shape(i[1]))])(_binary(jnp.divide))
+register("Exp", grad=lambda n, i, o, g: [g[0] * o[0]])(_unary(jnp.exp))
+register("Log", grad=lambda n, i, o, g: [g[0] / i[0]])(_unary(jnp.log))
+register("Neg", grad=lambda n, i, o, g: [-g[0]])(_unary(jnp.negative))
+register("Square", grad=lambda n, i, o, g: [2.0 * i[0] * g[0]])(_unary(jnp.square))
+register("Greater", device_kinds=("cpu", "tpu", "gpu"))(_binary(jnp.greater))
+register("Less")(_binary(jnp.less))
+register("Equal")(_binary(jnp.equal))
+
+
+def _unbroadcast(g, shape):
+    """Sum ``g`` down to ``shape`` (gradient of implicit broadcasting)."""
+    if jnp.shape(g) == tuple(shape):
+        return g
+    g_shape = jnp.shape(g)
+    ndiff = len(g_shape) - len(shape)
+    axes = tuple(range(ndiff)) + tuple(
+        i + ndiff for i, s in enumerate(shape) if s == 1 and g_shape[i + ndiff] != 1
+    )
+    return jnp.sum(g, axis=axes, keepdims=False).reshape(shape)
+
+
+# --- array ops ---------------------------------------------------------------
+
+@register("Concat", grad=lambda n, i, o, g: _concat_grad(n, i, g))
+def _concat(ctx, node, *xs):
+    return (jnp.concatenate(xs, axis=node.attrs["axis"]),)
+
+
+def _concat_grad(node, ins, g):
+    axis = node.attrs["axis"]
+    sizes = [jnp.shape(x)[axis] for x in ins]
+    splits = list(jnp.cumsum(jnp.array(sizes))[:-1])
+    return list(jnp.split(g[0], [int(s) for s in splits], axis=axis))
+
+
+@register("Slice", grad=lambda n, i, o, g: [_slice_grad(n, i[0], g[0])])
+def _slice(ctx, node, x):
+    begin, size = node.attrs["begin"], node.attrs["size"]
+    return (jax.lax.slice(x, begin, tuple(b + s for b, s in zip(begin, size))),)
+
+
+def _slice_grad(node, x, g):
+    begin = node.attrs["begin"]
+    pads = [(b, jnp.shape(x)[d] - b - jnp.shape(g)[d], 0) for d, b in enumerate(begin)]
+    return jax.lax.pad(g, jnp.zeros((), g.dtype), pads)
+
+
+@register("Reshape", grad=lambda n, i, o, g: [jnp.reshape(g[0], jnp.shape(i[0]))])
+def _reshape(ctx, node, x):
+    return (jnp.reshape(x, node.attrs["shape"]),)
+
+
+@register("Shape")
+def _shape(ctx, node, x):
+    return (jnp.asarray(jnp.shape(x), dtype=jnp.int32),)
+
+
+@register("Rank")
+def _rank(ctx, node, x):
+    return (jnp.asarray(jnp.ndim(x), dtype=jnp.int32),)
+
+
+@register("Cast", grad=lambda n, i, o, g: [g[0].astype(jnp.result_type(i[0]))])
+def _cast(ctx, node, x):
+    return (x.astype(node.attrs["dtype"]),)
+
+
+@register("ReduceSum", grad=lambda n, i, o, g: [_reduce_sum_grad(n, i[0], g[0])])
+def _reduce_sum(ctx, node, x):
+    return (jnp.sum(x, axis=node.attrs["axis"]),)
+
+
+def _reduce_sum_grad(node, x, g):
+    axis = node.attrs["axis"]
+    if axis is None:
+        return jnp.broadcast_to(g, jnp.shape(x))
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    g = jnp.expand_dims(g, axes)
+    return jnp.broadcast_to(g, jnp.shape(x))
+
+
+@register("ReduceMean", grad=lambda n, i, o, g: [_reduce_mean_grad(n, i[0], g[0])])
+def _reduce_mean(ctx, node, x):
+    return (jnp.mean(x, axis=node.attrs["axis"]),)
+
+
+def _reduce_mean_grad(node, x, g):
+    axis = node.attrs["axis"]
+    shape = jnp.shape(x)
+    if axis is None:
+        denom = 1
+        for s in shape:
+            denom *= s
+        return jnp.broadcast_to(g / denom, shape)
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    denom = 1
+    for a in axes:
+        denom *= shape[a]
+    g = jnp.expand_dims(g, axes)
+    return jnp.broadcast_to(g / denom, shape)
+
+
+# --- matrix / NN -------------------------------------------------------------
+
+@register("MatMul", grad=lambda n, i, o, g: [g[0] @ i[1].T, i[0].T @ g[0]])
+def _matmul(ctx, node, a, b):
+    return (a @ b,)
+
+
+register("ReLU", grad=lambda n, i, o, g: [g[0] * (i[0] > 0).astype(g[0].dtype)])(
+    _unary(jax.nn.relu))
+register("Sigmoid", grad=lambda n, i, o, g: [g[0] * o[0] * (1 - o[0])])(
+    _unary(jax.nn.sigmoid))
+register("Tanh", grad=lambda n, i, o, g: [g[0] * (1 - o[0] * o[0])])(_unary(jnp.tanh))
+
+
+@register("SoftMax", grad=lambda n, i, o, g: [_softmax_grad(o[0], g[0])])
+def _softmax(ctx, node, x):
+    return (jax.nn.softmax(x, axis=-1),)
+
+
+def _softmax_grad(y, g):
+    return y * (g - jnp.sum(y * g, axis=-1, keepdims=True))
+
+
+@register("SoftmaxXent", grad=lambda n, i, o, g: [_xent_grad(i[0], i[1], g[0]), None])
+def _softmax_xent(ctx, node, logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return (jnp.mean(nll),)
+
+
+def _xent_grad(logits, labels, g):
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    denom = 1
+    for s in logits.shape[:-1]:
+        denom *= s
+    return g * (p - onehot) / denom
+
+
+# --- composite (arbitrary pure jax function as a node) ----------------------
+
+
+def _call_num_outputs(node: Node) -> int:
+    return int(node.attrs.get("n_out", 1))
+
+
+def _call_grad(node, ins, outs, gouts):
+    fn = node.attrs["fn"]
+
+    def scalar_fn(*args):
+        res = fn(*args)
+        return res if isinstance(res, tuple) else (res,)
+
+    _, vjp = jax.vjp(scalar_fn, *ins)
+    gouts_full = tuple(
+        jnp.zeros_like(o) if g is None else g for o, g in zip(outs, gouts)
+    )
+    return list(vjp(gouts_full))
+
+
+@register("Call", num_outputs=_call_num_outputs, grad=_call_grad)
+def _call(ctx, node, *ins):
+    res = node.attrs["fn"](*ins)
+    return res if isinstance(res, tuple) else (res,)
+
+
+# --- checkpoint (§3.3) -------------------------------------------------------
+
+@register("Save", num_outputs=0, stateful=True)
+def _save(ctx, node, *var_vals):
+    ctx.save_checkpoint(node.attrs["path"], dict(zip(node.attrs["var_names"], var_vals)))
+    return ()
+
+
+@register("Restore", num_outputs=0, stateful=True)
+def _restore(ctx, node):
+    values = ctx.load_checkpoint(node.attrs["path"])
+    for vname in node.attrs["var_names"]:
+        ctx.write_variable(vname, values[vname])
+    return ()
+
+
+# --- queues (§4.6) -----------------------------------------------------------
+
+@register("QueueEnqueue", num_outputs=0, stateful=True)
+def _enqueue(ctx, node, *vals):
+    ctx.queue(node.attrs["queue"]).enqueue(tuple(vals))
+    return ()
+
+
+def _dequeue_num_outputs(node: Node) -> int:
+    return int(node.attrs.get("n_components", 1))
+
+
+@register("QueueDequeue", num_outputs=_dequeue_num_outputs, stateful=True)
+def _dequeue(ctx, node):
+    return tuple(ctx.queue(node.attrs["queue"]).dequeue())
+
+
+# --- §5.5 lossy compression ops (inserted on cross-device edges) -------------
+
+@register("CompressF32ToB16", grad=lambda n, i, o, g: [g[0]])
+def _compress(ctx, node, x):
+    from . import compression
+
+    return (compression.compress_f32_to_16(x),)
+
+
+@register("DecompressB16ToF32", grad=lambda n, i, o, g: [g[0]])
+def _decompress(ctx, node, x):
+    from . import compression
+
+    return (compression.decompress_16_to_f32(x),)
+
+
+# --- control flow primitives (§4.4) — executor gives these special handling --
+
+@register("Switch", num_outputs=2)
+def _switch(ctx, node, data, pred):
+    raise RuntimeError("Switch must be interpreted by the executor")
+
+
+@register("Merge", num_outputs=2)
+def _merge(ctx, node, *ins):
+    raise RuntimeError("Merge must be interpreted by the executor")
+
+
+@register("Enter")
+def _enter(ctx, node, x):
+    raise RuntimeError("Enter must be interpreted by the executor")
+
+
+@register("Exit")
+def _exit(ctx, node, x):
+    raise RuntimeError("Exit must be interpreted by the executor")
+
+
+@register("NextIteration")
+def _next_iteration(ctx, node, x):
+    raise RuntimeError("NextIteration must be interpreted by the executor")
+
+
+@register("LoopCond")
+def _loop_cond(ctx, node, x):
+    raise RuntimeError("LoopCond must be interpreted by the executor")
+
+
+# --- Send/Recv (§3.2.2) — inserted by partitioning, executed via rendezvous --
+
+@register("Send", num_outputs=0, stateful=True)
+def _send(ctx, node, x):
+    key = node.attrs["rendezvous_key"]
+    if node.attrs.get("compress", False):
+        from . import compression
+
+        x = compression.compress_f32_to_16(x)
+    ctx.rendezvous.send(key, x)
+    return ()
+
+
+@register("Recv", stateful=True)
+def _recv(ctx, node):
+    key = node.attrs["rendezvous_key"]
+    x = ctx.rendezvous.recv(key)
+    if node.attrs.get("compress", False):
+        from . import compression
+
+        x = compression.decompress_16_to_f32(x)
+    return (x,)

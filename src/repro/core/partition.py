@@ -1,0 +1,91 @@
+"""§3.2.2 graph partitioning with Send/Recv insertion.
+
+After placement, the graph is split into one subgraph per device.  Every
+cross-device data edge x:p -> y is replaced by x -> Send (on x's device)
+and Recv -> y (on y's device), where Send/Recv coordinate through the
+rendezvous.  All users of a given (tensor, destination-device) pair are
+canonicalised onto a *single* Recv node so each tensor crosses each
+device pair at most once and is allocated once at the destination.
+Cross-device *control* edges become a zero-byte token transfer.
+
+Optionally (§5.5) Send/Recv pairs carry the lossy 32->16-bit compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .graph import Graph, Node, TensorRef
+from ..runtime import rendezvous as rdv
+
+
+@dataclasses.dataclass
+class Partitioned:
+    graph: Graph                      # rewritten graph containing Send/Recv
+    device_nodes: Dict[str, Set[str]]  # device -> node names
+    placement: Dict[str, str]          # node -> device (incl. new nodes)
+    n_transfers: int = 0
+
+
+def partition(
+    g: Graph,
+    placement: Dict[str, str],
+    node_names=None,
+    compress: bool = False,
+) -> Partitioned:
+    names = set(node_names) if node_names is not None else set(placement)
+    pg = g.subgraph(names)
+    place = dict(placement)
+
+    # one Recv per (src_node, port, dst_device); one Send per (src_node, port, src->dst)
+    recv_cache: Dict[Tuple[str, int, str], str] = {}
+    n_transfers = 0
+
+    def get_recv(ref: TensorRef, dst_dev: str) -> str:
+        nonlocal n_transfers
+        key = (ref.node, ref.port, dst_dev)
+        if key in recv_cache:
+            return recv_cache[key]
+        src_dev = place[ref.node]
+        rkey = rdv.make_key(str(ref), src_dev, dst_dev)
+        send = pg.add_node(
+            "Send", [ref], name=f"send/{ref.node}_{ref.port}/to_{len(recv_cache)}",
+            attrs={"rendezvous_key": rkey, "compress": compress}, device=src_dev)
+        recv = pg.add_node(
+            "Recv", [], name=f"recv/{ref.node}_{ref.port}/at_{len(recv_cache)}",
+            attrs={"rendezvous_key": rkey, "compress": compress}, device=dst_dev)
+        place[send.name] = src_dev
+        place[recv.name] = dst_dev
+        recv_cache[key] = recv.name
+        n_transfers += 1
+        return recv.name
+
+    for name in list(names):
+        node = pg.nodes[name]
+        dst_dev = place[name]
+        new_inputs: List[TensorRef] = []
+        for ref in node.inputs:
+            if ref.node in names and place[ref.node] != dst_dev:
+                new_inputs.append(TensorRef(get_recv(ref, dst_dev), 0))
+            else:
+                new_inputs.append(ref)
+        node.inputs = new_inputs
+        new_ctrl: List[str] = []
+        for c in node.control_inputs:
+            if c in names and place[c] != dst_dev:
+                # zero-byte control token across devices
+                src_dev = place[c]
+                tok = pg.add_node("Const", [], name=f"ctok/{c}/{name}",
+                                  attrs={"value": 0}, control_inputs=[c], device=src_dev)
+                place[tok.name] = src_dev
+                recv_name = get_recv(tok.ref, dst_dev)
+                new_ctrl.append(recv_name)
+            else:
+                new_ctrl.append(c)
+        node.control_inputs = new_ctrl
+
+    device_nodes: Dict[str, Set[str]] = {}
+    for n in pg.nodes:
+        device_nodes.setdefault(place[n], set()).add(n)
+    return Partitioned(graph=pg, device_nodes=device_nodes, placement=place,
+                       n_transfers=n_transfers)

@@ -1,0 +1,179 @@
+"""§3.2.1 cost-model-driven greedy placement + §4.3 device constraints.
+
+The placer runs a *simulated execution* of the graph: it walks nodes in
+dependency order, and for each node examines the set of feasible devices
+(a device is feasible if it provides a kernel for the op and satisfies the
+node's partial constraint).  Placing the node on each candidate is scored
+by simulated completion time = max(device free time, inputs ready time +
+cross-device transfer time) + estimated compute time; the device where the
+node would *finish soonest* wins.  Colocation constraints are resolved
+first with union-find over the colocation graph, intersecting feasible
+sets per component (§4.3).
+
+The cost model is either static (bytes/FLOP heuristics per op type) or
+measured (fed back from executor traces) — both paths the paper describes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import Graph, Node, TensorRef
+from . import ops as ops_mod
+from ..runtime.devices import DeviceSet
+
+WIRE_LATENCY_S = 25e-6  # per cross-device hop
+WIRE_BYTES_PER_S = 12.5e9  # ~100 Gb/s interconnect
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Tensor sizes + per-(node, device-kind) compute-time estimates."""
+
+    # measured overrides: {(node_name): seconds}, {(node_name, port): bytes}
+    measured_time: Dict[str, float] = dataclasses.field(default_factory=dict)
+    measured_bytes: Dict[Tuple[str, int], int] = dataclasses.field(default_factory=dict)
+
+    def output_bytes(self, node: Node, port: int = 0) -> int:
+        if (node.name, port) in self.measured_bytes:
+            return self.measured_bytes[(node.name, port)]
+        shape = node.attrs.get("shape")
+        if shape:
+            return int(np.prod(shape)) * 4
+        val = node.attrs.get("value")
+        if val is not None:
+            return int(np.asarray(val).nbytes)
+        return 4 * 1024  # default guess
+
+    def compute_seconds(self, node: Node, device) -> float:
+        if node.name in self.measured_time:
+            return self.measured_time[node.name]
+        # static heuristic: matmul-ish ops are compute bound, others move bytes
+        heavy = {"MatMul": 100.0, "Call": 10.0, "SoftmaxXent": 5.0}
+        weight = heavy.get(node.op, 1.0)
+        nbytes = self.output_bytes(node)
+        return weight * nbytes / device.bytes_per_sec + 1e-6
+
+    def record_measurement(self, node_name: str, seconds: float,
+                           out_bytes: Optional[List[int]] = None) -> None:
+        self.measured_time[node_name] = seconds
+        for p, b in enumerate(out_bytes or []):
+            self.measured_bytes[(node_name, p)] = b
+
+
+class _UnionFind:
+    def __init__(self):
+        self.parent: Dict[str, str] = {}
+
+    def find(self, x: str) -> str:
+        self.parent.setdefault(x, x)
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a: str, b: str) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[rb] = ra
+
+
+class PlacementError(Exception):
+    pass
+
+
+def feasible_devices(node: Node, devices: DeviceSet) -> List[str]:
+    od = ops_mod.opdef(node.op)
+    by_kind = set(devices.feasible(od.device_kinds))
+    by_constraint = set(devices.matches(node.device))
+    out = [n for n in devices.names() if n in by_kind and n in by_constraint]
+    return out
+
+
+def colocation_groups(g: Graph, node_names) -> Dict[str, List[str]]:
+    """§4.3: union-find over 'colocate_with' attrs; Assign ops colocate with
+    their Variable (state must live with its mutations)."""
+    uf = _UnionFind()
+    for name in node_names:
+        node = g.nodes[name]
+        uf.find(name)
+        target = node.attrs.get("colocate_with")
+        if target:
+            uf.union(target, name)
+        if node.op in ("Assign", "AssignAdd", "Variable") and node.inputs:
+            uf.union(node.inputs[0].node, name)
+    groups: Dict[str, List[str]] = {}
+    for name in node_names:
+        groups.setdefault(uf.find(name), []).append(name)
+    return groups
+
+
+def place(
+    g: Graph,
+    devices: DeviceSet,
+    cost_model: Optional[CostModel] = None,
+    node_names=None,
+) -> Dict[str, str]:
+    """Greedy simulated placement; returns {node_name: device_name}."""
+    cm = cost_model or CostModel()
+    names = list(node_names) if node_names is not None else list(g.nodes)
+    name_set = set(names)
+
+    groups = colocation_groups(g, names)
+    group_of = {n: root for root, members in groups.items() for n in members}
+    group_feasible: Dict[str, List[str]] = {}
+    for root, members in groups.items():
+        feas = None
+        for m in members:
+            f = set(feasible_devices(g.nodes[m], devices))
+            feas = f if feas is None else (feas & f)
+        if not feas:
+            raise PlacementError(f"no feasible device for colocation group of {root!r}")
+        group_feasible[root] = [d for d in devices.names() if d in feas]
+
+    placement: Dict[str, str] = {}
+    group_device: Dict[str, str] = {}
+    device_free: Dict[str, float] = {d: 0.0 for d in devices.names()}
+    finish: Dict[str, float] = {}
+
+    for name in g.topo_sort(name_set):
+        node = g.nodes[name]
+        root = group_of[name]
+        if root in group_device:
+            dev_name = group_device[root]
+            # still advance the simulation clocks for this node
+            start = device_free[dev_name]
+            for ref in node.inputs:
+                if ref.node not in name_set:
+                    continue
+                t = finish.get(ref.node, 0.0)
+                if placement.get(ref.node) != dev_name:
+                    t += WIRE_LATENCY_S + cm.output_bytes(g.nodes[ref.node], ref.port) / WIRE_BYTES_PER_S
+                start = max(start, t)
+            end = start + cm.compute_seconds(node, devices[dev_name])
+            device_free[dev_name] = end
+            finish[name] = end
+            placement[name] = dev_name
+            continue
+
+        best: Tuple[float, str] = (float("inf"), "")
+        for dev_name in group_feasible[root]:
+            start = device_free[dev_name]
+            for ref in node.inputs:
+                if ref.node not in name_set:
+                    continue
+                t = finish.get(ref.node, 0.0)
+                if placement.get(ref.node) != dev_name:
+                    t += WIRE_LATENCY_S + cm.output_bytes(g.nodes[ref.node], ref.port) / WIRE_BYTES_PER_S
+                start = max(start, t)
+            end = start + cm.compute_seconds(node, devices[dev_name])
+            if end < best[0]:
+                best = (end, dev_name)
+        dev_name = best[1]
+        group_device[root] = dev_name
+        placement[name] = dev_name
+        device_free[dev_name] = best[0]
+        finish[name] = best[0]
+    return placement

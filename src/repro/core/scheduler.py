@@ -1,0 +1,87 @@
+"""§5.2 ASAP/ALAP critical-path scheduling of Recv nodes.
+
+Without precautions, Recv nodes may all start as soon as execution begins,
+holding remote tensors in memory long before they are needed.  We compute
+per-node ASAP times (longest path from sources) and ALAP times (latest
+start that does not delay the sinks), and for each Recv with positive
+slack we insert a control edge from a suitably-late local predecessor of
+its consumer so the Recv is delayed until just before its result is
+needed — reducing the peak-memory window exactly as described.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set
+
+from .graph import Graph, Node, TensorRef
+from .placement import CostModel
+from ..runtime.devices import DeviceSet
+
+
+def _times(g: Graph, names: Set[str], cm: CostModel, devices, placement):
+    def dur(n: str) -> float:
+        node = g.nodes[n]
+        dev = devices[placement[n]] if placement and n in placement else None
+        if dev is None:
+            return 1.0
+        return cm.compute_seconds(node, dev)
+
+    order = g.topo_sort(names)
+    asap: Dict[str, float] = {}
+    for n in order:
+        node = g.nodes[n]
+        start = 0.0
+        for d in g.deps(node):
+            if d in names:
+                start = max(start, asap[d] + dur(d))
+        asap[n] = start
+    makespan = max((asap[n] + dur(n) for n in order), default=0.0)
+    alap: Dict[str, float] = {}
+    consumers: Dict[str, List[str]] = {n: [] for n in names}
+    for n in order:
+        for d in g.deps(g.nodes[n]):
+            if d in names:
+                consumers[d].append(n)
+    for n in reversed(order):
+        latest_end = makespan
+        for c in consumers[n]:
+            latest_end = min(latest_end, alap[c])
+        alap[n] = latest_end - dur(n)
+    return asap, alap
+
+
+def schedule_recvs(
+    g: Graph,
+    node_names: Optional[Set[str]] = None,
+    cost_model: Optional[CostModel] = None,
+    devices: Optional[DeviceSet] = None,
+    placement: Optional[Dict[str, str]] = None,
+) -> int:
+    """Insert delaying control edges on Recv nodes; returns #edges added."""
+    names = set(node_names) if node_names is not None else set(g.nodes)
+    cm = cost_model or CostModel()
+    asap, alap = _times(g, names, cm, devices, placement)
+
+    added = 0
+    for n in list(names):
+        node = g.nodes[n]
+        if node.op != "Recv":
+            continue
+        slack = alap[n] - asap[n]
+        if slack <= 0:
+            continue
+        # find the latest node (same device if known) finishing before ALAP(recv)
+        best, best_t = None, -1.0
+        for m in names:
+            if m == n or g.nodes[m].op in ("Recv", "Send"):
+                continue
+            if placement is not None and placement.get(m) != placement.get(n):
+                continue
+            if alap[m] <= alap[n] and asap[m] > best_t and m not in g.transitive_closure([n]):
+                # avoid cycles: m must not depend on the recv
+                if n in g.transitive_closure([m]):
+                    continue
+                best, best_t = m, asap[m]
+        if best is not None and best not in node.control_inputs:
+            node.control_inputs.append(best)
+            added += 1
+    return added

@@ -1,0 +1,138 @@
+"""§2 Sessions: Extend + Run, with §4.2 partial execution (feed/fetch).
+
+``Session.run(fetches, feed_dict)`` rewrites the graph with feed/fetch
+semantics: fed tensors shadow their producing nodes, the executed node set
+is the transitive closure working backwards from the fetches through the
+rewritten graph, and everything else is pruned (Figure 6).  The same
+Session can also *compile* a (feeds, fetches) signature through the JIT
+lowering (§10 / DESIGN.md) into a pure JAX function.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .graph import Graph, Node, TensorRef, as_ref
+from .executor import ExecutionContext, Executor
+from . import ops as ops_mod
+from ..runtime.containers import VariableStore, ContainerManager
+from ..runtime.rendezvous import Rendezvous
+
+
+class _DictCheckpointIO:
+    """In-memory checkpoint table (file-backed IO lives in repro.checkpoint)."""
+
+    def __init__(self) -> None:
+        self.table: Dict[str, Dict[str, Any]] = {}
+
+    def save(self, path: str, values: Dict[str, Any]) -> None:
+        self.table[path] = dict(values)
+
+    def load(self, path: str) -> Dict[str, Any]:
+        return self.table[path]
+
+
+class Session:
+    _ids = itertools.count()
+
+    def __init__(self, graph: Optional[Graph] = None, *,
+                 containers: Optional[ContainerManager] = None,
+                 checkpoint_io: Any = None,
+                 devices: Any = None) -> None:
+        self.graph = graph or Graph()
+        self.containers = containers or ContainerManager()
+        self.variables = VariableStore(self.containers)
+        self.rendezvous = Rendezvous()
+        self.queues: Dict[str, Any] = {}
+        self.checkpoint_io = checkpoint_io or _DictCheckpointIO()
+        self.devices = devices  # DeviceSet for the multi-device eager path
+        self.id = next(Session._ids)
+        self._run_count = 0
+
+    # ------------------------------------------------------------------
+    def extend(self, graph: Graph) -> None:
+        """Session.Extend (§2): augment the current graph."""
+        self.graph.extend(graph)
+
+    def register_queue(self, name: str, q: Any) -> None:
+        self.queues[name] = q
+
+    def _ctx(self) -> ExecutionContext:
+        return ExecutionContext(
+            variables=self.variables,
+            rendezvous=self.rendezvous,
+            queues=self.queues,
+            checkpoint_io=self.checkpoint_io,
+        )
+
+    # ------------------------------------------------------------------
+    def _normalize(self, fetches, feed_dict):
+        fetch_refs = [as_ref(f) for f in (fetches if isinstance(fetches, (list, tuple)) else [fetches])]
+        feeds = {as_ref(k): v for k, v in (feed_dict or {}).items()}
+        return fetch_refs, feeds
+
+    def pruned_nodes(self, fetch_refs: Sequence[TensorRef],
+                     feeds: Dict[TensorRef, Any]) -> Set[str]:
+        """§4.2: nodes needed for the fetches, stopping at fed tensors.
+
+        A node whose *every* output is fed need not run; we model the
+        feed-node rewrite by cutting traversal through fed edges.
+        """
+        g = self.graph
+        needed: Set[str] = set()
+        stack = [r.node for r in fetch_refs]
+        fed_ports = {(r.node, r.port) for r in feeds}
+        while stack:
+            n = stack.pop()
+            if n in needed:
+                continue
+            needed.add(n)
+            node = g.nodes[n]
+            for ref in node.inputs:
+                if (ref.node, ref.port) in fed_ports:
+                    continue  # edge replaced by a feed node
+                stack.append(ref.node)
+            stack.extend(node.control_inputs)
+        # nodes that are fetch targets but fully fed: keep out of execution
+        fed_nodes = {r.node for r in fetch_refs if (r.node, r.port) in fed_ports}
+        return needed - fed_nodes
+
+    def run(self, fetches, feed_dict: Optional[Dict] = None,
+            trace: Optional[List[str]] = None, tracer=None):
+        """Eagerly execute the subgraph needed for ``fetches`` (§2/§4.2)."""
+        fetch_refs, feeds = self._normalize(fetches, feed_dict)
+        self._run_count += 1
+        node_set = self.pruned_nodes(fetch_refs, feeds)
+        if self.devices is not None and len(self.devices) > 1:
+            from . import distributed_runner
+
+            results = distributed_runner.run_partitioned(
+                self, node_set, fetch_refs, feeds, trace=trace, tracer=tracer)
+        else:
+            ex = Executor(self.graph, self._ctx(), node_filter=node_set,
+                          trace=trace, tracer=tracer)
+            results = ex.run(fetch_refs, feeds)
+        if isinstance(fetches, (list, tuple)):
+            return results
+        return results[0]
+
+    # ------------------------------------------------------------------
+    def initialize_variables(self, names: Optional[Sequence[str]] = None) -> None:
+        """Force-initialize Variables (reads them once so inits run)."""
+        ctx = self._ctx()
+        for node in self.graph.nodes.values():
+            if node.op == "Variable" and (names is None or node.name in names):
+                ctx.read_variable(node)
+
+    def variable_value(self, name: str):
+        return self.variables.read(name, self.graph.nodes[name].attrs)
+
+    def set_variable(self, name: str, value) -> None:
+        self.variables.write(name, value)
+
+    # ------------------------------------------------------------------
+    def compile(self, fetches, feeds: Sequence, **kw):
+        """Lower a (feeds, fetches) signature to a pure JAX function (§10)."""
+        from . import lowering
+
+        return lowering.compile_subgraph(self, fetches, feeds, **kw)

@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLMDataset, FileRecordReader, Prefetcher,
+                       input_pipeline, batch_iterator)
+
+__all__ = ["SyntheticLMDataset", "FileRecordReader", "Prefetcher",
+           "input_pipeline", "batch_iterator"]

@@ -1,0 +1,3 @@
+from .metrics import perplexity_eval, token_accuracy
+
+__all__ = ["perplexity_eval", "token_accuracy"]

@@ -1,0 +1,41 @@
+"""Evaluation substrate: perplexity + accuracy over a data pipeline.
+
+Evaluation is a Session.Run of the loss subgraph with learning turned
+off — exactly the paper's §6 lesson 3 ("always ensure the objective
+matches between systems when learning is turned off"), which is also how
+tests compare the eager and compiled paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def perplexity_eval(model, params, batches: Iterator[Dict[str, Any]], *,
+                    max_batches: int = 16, loss_kw: Optional[Dict] = None
+                    ) -> Dict[str, float]:
+    """Mean token NLL + perplexity over up to ``max_batches`` batches."""
+    loss_kw = dict(loss_kw or {})
+    loss_fn = jax.jit(lambda p, b: model.loss_fn(p, b, **loss_kw))
+    total_nll, n = 0.0, 0
+    for i, raw in enumerate(batches):
+        if i >= max_batches:
+            break
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        total_nll += float(loss_fn(params, batch))
+        n += 1
+    nll = total_nll / max(n, 1)
+    return {"nll": nll, "perplexity": math.exp(min(nll, 30.0)), "batches": n}
+
+
+def token_accuracy(model, params, batch: Dict[str, Any], *,
+                   fwd_kw: Optional[Dict] = None) -> float:
+    """Greedy next-token accuracy (teacher-forced)."""
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    logits = model.forward_logits(params, batch, **(fwd_kw or {}))
+    pred = jnp.argmax(logits[..., : model.cfg.vocab_size], axis=-1)
+    return float(jnp.mean((pred == batch["labels"]).astype(jnp.float32)))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (§5.4 "optimized
+libraries for kernel implementations", done TPU-native).
+
+Each kernel module exposes ``<name>_pallas(..., interpret=False)``;
+``ops.py`` has the jit'd public wrappers and ``ref.py`` the pure-jnp
+oracles the tests assert against (interpret=True on CPU).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,63 @@
+"""§5.5 lossy 32->16-bit mantissa-truncation compression as a Pallas
+elementwise bit-twiddling kernel (the Send-path compression op).
+
+Tiles are (8, 128) — the TPU vreg shape — over a 2-D view of the input.
+``compress`` emits the uint16 wire format; ``decompress`` zero-fills.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compress_kernel(x_ref, o_ref):
+    bits = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+    o_ref[...] = (bits >> 16).astype(jnp.uint16)
+
+
+def _decompress_kernel(w_ref, o_ref):
+    bits = w_ref[...].astype(jnp.uint32) << 16
+    o_ref[...] = jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _tile2d(n: int, rows: int = 8, cols: int = 128):
+    per = rows * cols
+    assert n % per == 0, (n, per)
+    return n // per, rows, cols
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compress16_pallas(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    n = x.size
+    blocks, r, c = _tile2d(n)
+    x2 = x.astype(jnp.float32).reshape(blocks * r, c)
+    out = pl.pallas_call(
+        _compress_kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((r, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks * r, c), jnp.uint16),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decompress16_pallas(w: jax.Array, *, interpret: bool = False) -> jax.Array:
+    shape = w.shape
+    n = w.size
+    blocks, r, c = _tile2d(n)
+    w2 = w.reshape(blocks * r, c)
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((r, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks * r, c), jnp.float32),
+        interpret=interpret,
+    )(w2)
+    return out.reshape(shape)

@@ -1,0 +1,100 @@
+"""Flash attention (causal / sliding-window) — online-softmax Pallas kernel.
+
+Layout: q, k, v are (BH, S, D) with heads folded into the leading dim
+(the GQA expansion happens in the ops.py wrapper).  Grid is
+(BH, S/bq, T/bkv) with the KV dimension innermost, so the running
+(m, l, acc) state lives in VMEM scratch across the KV sweep — K/V stream
+HBM->VMEM block by block and the (bq, bkv) score tile never leaves VMEM,
+which is exactly the memory-term win the §Roofline baseline attributes
+to attention score traffic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bkv: int, n_kv: int, causal: bool, window: int,
+                  scale: float):
+    i_q = pl.program_id(1)
+    i_kv = pl.program_id(2)
+
+    @pl.when(i_kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)           # (bq, D)
+    k = k_ref[0].astype(jnp.float32)           # (bkv, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = i_q * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = i_kv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    ok = jnp.ones((bq, bkv), dtype=bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > (q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    # fully-masked rows: exp(NEG_INF - NEG_INF) = 1 must not count
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i_kv == n_kv - 1)
+    def _done():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bkv", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 128, bkv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (BH, Sq, D); k, v (BH, Skv, D) -> (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, Skv, bq, bkv)
+    n_kv = Skv // bkv
+    scale = 1.0 / math.sqrt(D)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bkv=bkv, n_kv=n_kv,
+                          causal=causal, window=window, scale=scale),
+        grid=(BH, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

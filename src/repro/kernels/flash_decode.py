@@ -1,0 +1,90 @@
+"""Flash-decode: one query token against a long KV cache.
+
+The decode-path hot spot (decode_32k / long_500k): for each (batch, head)
+a single query attends T cached keys.  K/V stream HBM->VMEM in bkv
+blocks; the online-softmax state (m, l, acc) lives in VMEM scratch across
+the KV sweep, and a per-row valid length masks unwritten cache slots —
+matching the serve-path semantics of models.lm._decode_attn.
+
+Layouts (heads folded): q (BH, D), k/v (BH, T, D), kv_valid (BH,) int32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, bkv: int, n_kv: int,
+                   scale: float):
+    i_kv = pl.program_id(1)
+
+    @pl.when(i_kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (D,)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    valid = valid_ref[0]
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (bkv,)
+    k_pos = i_kv * bkv + jax.lax.iota(jnp.int32, bkv)
+    s = jnp.where(k_pos < valid, s, NEG_INF)
+
+    m_prev = m_scr[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                       # (bkv,)
+    # fully-masked blocks: exp(NEG_INF - NEG_INF) = 1 must not count
+    p = jnp.where(k_pos < valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0, 0] = l_scr[0, 0] * corr + jnp.sum(p)
+    acc_scr[0] = acc_scr[0] * corr + jnp.dot(p, v,
+                                             preferred_element_type=jnp.float32)
+    m_scr[0, 0] = m_new
+
+    @pl.when(i_kv == n_kv - 1)
+    def _done():
+        l = l_scr[0, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[0] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        kv_valid: jax.Array, *, bkv: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q (BH, D); k, v (BH, T, D); kv_valid (BH,) -> (BH, D)."""
+    BH, D = q.shape
+    T = k.shape[1]
+    bkv = min(bkv, T)
+    assert T % bkv == 0, (T, bkv)
+    n_kv = T // bkv
+    scale = 1.0 / math.sqrt(D)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bkv=bkv, n_kv=n_kv, scale=scale),
+        grid=(BH, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ik: (bh,)),
+            pl.BlockSpec((1, D), lambda bh, ik: (bh, 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda bh, ik: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_valid, q, k, v)

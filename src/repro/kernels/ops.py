@@ -1,0 +1,88 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+These are the drop-in replacements for the model-layer hot paths; on a
+real TPU they run compiled, in tests they run interpret=True against the
+ref.py oracles.  ``flash_attention_gqa`` adapts the model's padded-GQA
+layout (B,S,KVp,G,Dh) to the kernel's folded-head layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+from .rmsnorm import rmsnorm_pallas
+from .flash_attention import flash_attention_pallas
+from .ssd_scan import ssd_scan_pallas
+from .compress16 import compress16_pallas, decompress16_pallas
+
+
+def matmul(a, b, *, interpret: bool = False):
+    return matmul_pallas(a, b, interpret=interpret)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, interpret: bool = False):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    return rmsnorm_pallas(x2, w, eps=eps, interpret=interpret).reshape(shape)
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, window=0,
+                        head_mask=None, interpret: bool = False):
+    """q (B,S,KVp,G,Dh), k/v (B,T,KVp,Dh) — the models.layers layout."""
+    B, S, KV, G, Dh = q.shape
+    T = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, Dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * KV, T, Dh), G, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * KV, T, Dh), G, axis=0)
+    of = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                interpret=interpret)
+    out = of.reshape(B, KV, G, S, Dh).transpose(0, 3, 1, 2, 4)
+    if head_mask is not None:
+        out = out * head_mask
+    return out
+
+
+def ssd_scan(x, dt, A_log, Bc, Cc, D_skip, *, chunk: int = 128,
+             interpret: bool = False):
+    """models.layers ssd layout: x (B,S,H,P), dt (B,S,H), A_log (H,),
+    Bc/Cc (B,S,G,N), D_skip (H,) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    Gr, N = Bc.shape[2], Bc.shape[3]
+    rep = H // Gr
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    af = jnp.tile(a, (B,))
+    Bf = jnp.repeat(Bc, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    Cf = jnp.repeat(Cc, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    y = ssd_scan_pallas(xf, dtf, af, Bf, Cf, chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y + D_skip.astype(y.dtype)[None, None, :, None] * x
+
+
+def compress16(x, *, interpret: bool = False):
+    return compress16_pallas(x, interpret=interpret)
+
+
+def decompress16(w, *, interpret: bool = False):
+    return decompress16_pallas(w, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# §2 kernel registration: the Pallas kernels ARE the TPU kernels for the
+# corresponding graph ops ("A kernel is a particular implementation of an
+# operation that can be run on a particular type of device").
+
+
+def register_tpu_kernels(interpret: bool = False) -> None:
+    """Install Pallas implementations as the 'tpu' kernels of the core ops.
+
+    With ``interpret=True`` the same registration works on CPU (tests) —
+    the executor picks them whenever a node is placed on a tpu device.
+    """
+    from ..core.ops import register_kernel
+
+    @register_kernel("MatMul", "tpu")
+    def _matmul_tpu(ctx, node, a, b):
+        return (matmul(a, b, interpret=interpret),)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q (BH,Sq,D), k/v (BH,Skv,D)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > (qpos - window)
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                 Bc: jax.Array, Cc: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence.  x (BH,S,P), dt (BH,S), a (BH,),
+    Bc/Cc (BH,S,N) -> y (BH,S,P)."""
+    BH, S, P = x.shape
+    N = Bc.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp               # (BH,P),(BH,),(BH,N),(BH,N)
+        dA = jnp.exp(dtt * a)               # (BH,)
+        state = (state * dA[:, None, None]
+                 + jnp.einsum("b,bn,bp->bnp", dtt, Bt, xt))
+        y = jnp.einsum("bn,bnp->bp", Ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    state0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def compress16_ref(x: jax.Array) -> jax.Array:
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return (bits >> 16).astype(jnp.uint16)
+
+
+def decompress16_ref(w: jax.Array) -> jax.Array:
+    bits = w.astype(jnp.uint32) << 16
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_valid: jax.Array) -> jax.Array:
+    """q (BH,D), k/v (BH,T,D), kv_valid (BH,) -> (BH,D)."""
+    T = k.shape[1]
+    s = jnp.einsum("bd,btd->bt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    mask = jnp.arange(T)[None, :] < kv_valid[:, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bt,btd->bd", p, v.astype(jnp.float32)).astype(q.dtype)

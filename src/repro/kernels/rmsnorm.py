@@ -1,0 +1,38 @@
+"""Fused RMSNorm kernel: rows stay in VMEM through square/mean/scale.
+
+x (R, D) is tiled (br, D) — the full feature dim lives in VMEM so the
+reduction is one pass; weight w (D,) is broadcast to every row tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y.astype(o_ref.dtype) * w_ref[...].astype(o_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "eps", "interpret"))
+def rmsnorm_pallas(x: jax.Array, w: jax.Array, *, br: int = 256,
+                   eps: float = 1e-5, interpret: bool = False) -> jax.Array:
+    R, D = x.shape
+    br = min(br, R)
+    assert R % br == 0, (R, br)
+    return pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, w)

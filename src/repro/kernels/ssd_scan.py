@@ -1,0 +1,87 @@
+"""Mamba-2 SSD chunked scan as a Pallas kernel.
+
+Grid (B*H, n_chunks) with the chunk dimension innermost/sequential; the
+(N, P) recurrent state lives in f32 VMEM scratch across chunks.  Each
+step computes the intra-chunk quadratic term (Q×Q attention-like matmul
+on the MXU), the inter-chunk contribution from the carried state, and
+the state update — one HBM pass over x/dt/B/C per layer, which is the
+TPU-native shape of the SSD algorithm (DESIGN.md: recurrent-scan
+blocking for VMEM instead of the paper's CUDA warp layout).
+
+Layouts (heads folded): x (BH, S, P), dt (BH, S), Bc/Cc (BH, S, N),
+A (BH,) negative decay rate per head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0].astype(jnp.float32)        # scalar (negative)
+    B = b_ref[0].astype(jnp.float32)        # (Q, N)
+    C = c_ref[0].astype(jnp.float32)        # (Q, N)
+
+    dA = dt * a                             # (Q,)
+    cs = jnp.cumsum(dA)                     # (Q,)
+    # intra-chunk: att[q,t] = C_q·B_t * exp(cs_q - cs_t) * dt_t, t<=q
+    seg = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    att = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    att = att * L * dt[None, :]
+    y = jax.lax.dot(att, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += (C * exp(cs)) @ state   (state: (N, P))
+    y += jax.lax.dot(C * jnp.exp(cs)[:, None], state_scr[...],
+                     preferred_element_type=jnp.float32)
+
+    # state update: state = exp(cs_end) * state + sum_t w_t B_t^T x_t
+    cs_end = cs[chunk - 1]
+    w = dt * jnp.exp(cs_end - cs)           # (Q,)
+    Bw = B * w[:, None]                     # (Q, N)
+    state_scr[...] = (jnp.exp(cs_end) * state_scr[...]
+                      + jax.lax.dot_general(
+                          Bw, x, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    Bc: jax.Array, Cc: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """x (BH,S,P), dt (BH,S), a (BH,), Bc/Cc (BH,S,N) -> y (BH,S,P)."""
+    BH, S, P = x.shape
+    N = Bc.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1,), lambda bh, c: (bh,)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, Bc, Cc)

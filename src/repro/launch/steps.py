@@ -1,0 +1,392 @@
+"""Step-function builders — the paper's system end to end.
+
+``build_train_step`` constructs the training step AS A repro.core GRAPH
+(loss Call node, §4.1 ``gradients()`` backward extension, AdamW update +
+Assign nodes on Variables) and lowers it through the §10 JIT path to a
+pure JAX function.  ``build_serve_step`` does the same for one decode
+step with the KV/SSD cache as a Variable.  The launch layer then wraps
+the lowered function in ``jax.jit`` with the mesh shardings from
+parallel.sharding — placement-as-sharding-rules (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import GraphBuilder, Session, compile_subgraph, gradients
+from ..models.api import Model, Shape, SHAPES
+from ..models.config import ModelConfig
+from ..models.params import abstract_params, param_axes, init_params
+from ..optim import adamw_init, adamw_update
+from ..parallel import sharding as shd
+from . import mesh as mesh_mod
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to run/lower one workload step."""
+
+    fn: Callable                   # (feeds dict, vars dict) -> (outs, new_vars)
+    feed_specs: Dict[str, jax.ShapeDtypeStruct]
+    var_specs: Dict[str, Any]      # abstract values for Variables
+    feed_shardings: Dict[str, Any]
+    var_shardings: Dict[str, Any]
+    out_shardings: Any
+    model: Model
+    kind: str
+    graph_nodes: int = 0
+
+
+def _named(mesh: Optional[Mesh], spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _feed_key(name: str) -> str:
+    return f"{name}:0"
+
+
+def step_hparams(cfg: ModelConfig, shape: Shape, n_groups: int) -> Dict[str, Any]:
+    """Workload-dependent chunking knobs (memory-safety defaults)."""
+    hp: Dict[str, Any] = {
+        "compute_dtype": jnp.bfloat16,
+        "n_token_groups": n_groups,
+        "q_chunk": 0,
+        "loss_chunk": 0,
+        "scan_unroll": 1,
+        "microbatch": 1,   # gradient-accumulation steps (memory lever)
+    }
+    if shape.kind in ("train", "prefill"):
+        if shape.seq_len >= 4096:
+            hp["q_chunk"] = 256
+        hp["loss_chunk"] = 512 if shape.seq_len >= 4096 else 0
+    if shape.global_batch < n_groups or shape.global_batch % n_groups:
+        hp["n_token_groups"] = 1
+    return hp
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: Shape,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, Any]] = None,
+    *,
+    lr: float = 3e-4,
+    hparam_overrides: Optional[Dict[str, Any]] = None,
+    via_graph: bool = True,
+) -> StepBundle:
+    shard = mesh.shape["model"] if mesh is not None else 1
+    n_groups = mesh_mod.batch_shard_size(mesh) if mesh is not None else 1
+    model = Model.for_config(cfg, shard)
+    hp = step_hparams(cfg, shape, n_groups)
+    hp.update(hparam_overrides or {})
+    loss_kw = dict(q_chunk=hp["q_chunk"], loss_chunk=hp["loss_chunk"],
+                   compute_dtype=hp["compute_dtype"],
+                   scan_unroll=hp["scan_unroll"])
+    if not model.is_encdec:
+        loss_kw["n_token_groups"] = hp["n_token_groups"]
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch, **loss_kw)
+
+    def update_of(params, grads, opt):
+        return adamw_update(params, grads, opt, lr=lr)
+
+    batch_desc = model.batch_desc(shape)
+    feed_names = list(batch_desc)
+    n_micro = int(hp.get("microbatch", 1))
+
+    def loss_and_grad_of(params, batch):
+        """Gradient accumulation over n_micro microbatches (memory lever:
+        stored activations scale with B/n_micro, grads accumulate fp32)."""
+        if n_micro <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = {k: v.reshape((n_micro, B // n_micro) + v.shape[1:])
+              for k, v in batch.items()}
+
+        def body(carry, mbatch):
+            tot_loss, acc = carry
+            l, g = jax.value_and_grad(loss_of)(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, gi: a + gi.astype(jnp.float32) / n_micro, acc, g)
+            return (tot_loss + l / n_micro, acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_val, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mb)
+        return loss_val, grads
+
+    if via_graph:
+        b = GraphBuilder()
+        v_params = b.variable("params")
+        v_opt = b.variable("opt")
+        feed_nodes = {n: b.placeholder(n) for n in feed_names}
+
+        if n_micro <= 1:
+            # faithful path: §4.1 gradients() extends the graph
+            def graph_loss(params, *feeds):
+                return loss_of(params, dict(zip(feed_names, feeds)))
+
+            loss_node = b.call(graph_loss,
+                               [v_params] + [feed_nodes[n] for n in feed_names],
+                               name="loss")
+            (gref,) = gradients(b.graph, [loss_node], [v_params])
+        else:
+            # accumulated grads are one fused node (still "just nodes")
+            def graph_loss_grad(params, *feeds):
+                return loss_and_grad_of(params, dict(zip(feed_names, feeds)))
+
+            lg = b.call(graph_loss_grad,
+                        [v_params] + [feed_nodes[n] for n in feed_names],
+                        name="loss_and_grad", n_out=2)
+            loss_node, gref = lg, lg.output(1)
+        upd = b.call(update_of, [v_params, gref, v_opt], name="adamw", n_out=2)
+        a1 = b.assign(v_params, upd.output(0))
+        a2 = b.assign(v_opt, upd.output(1))
+        sess = Session(b.graph)
+        lowered = compile_subgraph(
+            sess, [loss_node.ref], [feed_nodes[n].ref for n in feed_names],
+            extra_updates=[a1.name, a2.name])
+        n_nodes = lowered.n_nodes
+
+        def fn(feeds: Dict[str, Any], variables: Dict[str, Any]):
+            feed_vals = {_feed_key(n): feeds[n] for n in feed_names}
+            (loss_val,), new_vars = lowered.fn(feed_vals, variables)
+            return loss_val, new_vars
+    else:
+        n_nodes = 0
+
+        def fn(feeds: Dict[str, Any], variables: Dict[str, Any]):
+            params, opt = variables["params"], variables["opt"]
+            loss_val, grads = loss_and_grad_of(params, feeds)
+            new_params, new_opt = update_of(params, grads, opt)
+            return loss_val, {"params": new_params, "opt": new_opt}
+
+    # --- specs + shardings
+    pdesc = model.describe_params()
+    params_abs = abstract_params(pdesc)
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    rules = rules if rules is not None else (
+        mesh_mod.mesh_rules(mesh) if mesh is not None else None)
+    if rules is not None:
+        paxes = param_axes(pdesc)
+        pspec = shd.param_pspecs(paxes, rules)
+        opt_spec = jax.eval_shape(adamw_init, params_abs)  # structure template
+        opt_pspec = dataclasses_replace_optstate(pspec, opt_spec)
+        var_shardings = _named(mesh, {"params": pspec, "opt": opt_pspec})
+        feed_shardings = {
+            n: NamedSharding(mesh, shd.pspec_of(batch_desc[n].axes, rules))
+            for n in feed_names}
+        out_shardings = (NamedSharding(mesh, P()),
+                         var_shardings)
+    else:
+        var_shardings = feed_shardings = out_shardings = None
+
+    feed_specs = {n: jax.ShapeDtypeStruct(batch_desc[n].shape, batch_desc[n].dtype)
+                  for n in feed_names}
+    return StepBundle(fn=fn, feed_specs=feed_specs,
+                      var_specs={"params": params_abs, "opt": opt_abs},
+                      feed_shardings=feed_shardings,
+                      var_shardings=var_shardings,
+                      out_shardings=out_shardings,
+                      model=model, kind="train", graph_nodes=n_nodes)
+
+
+def dataclasses_replace_optstate(pspec_tree, opt_template):
+    """OptState(step, m, v): m/v shard like params, step replicated."""
+    from ..optim import OptState
+    return OptState(step=P(), m=pspec_tree, v=pspec_tree)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(
+    cfg: ModelConfig,
+    shape: Shape,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, Any]] = None,
+    *,
+    hparam_overrides: Optional[Dict[str, Any]] = None,
+) -> StepBundle:
+    """Forward over the full prompt; returns last-position logits."""
+    shard = mesh.shape["model"] if mesh is not None else 1
+    n_groups = mesh_mod.batch_shard_size(mesh) if mesh is not None else 1
+    model = Model.for_config(cfg, shard)
+    hp = step_hparams(cfg, shape, n_groups)
+    hp.update(hparam_overrides or {})
+
+    fwd_kw = dict(q_chunk=hp["q_chunk"], compute_dtype=hp["compute_dtype"],
+                  scan_unroll=hp["scan_unroll"])
+    if not model.is_encdec:
+        fwd_kw["n_token_groups"] = hp["n_token_groups"]
+
+    from ..models import lm as lm_mod
+    from ..models import encdec as encdec_mod
+
+    def fn(feeds: Dict[str, Any], variables: Dict[str, Any]):
+        params = variables["params"]
+        if model.is_encdec:
+            x, _ = encdec_mod.forward(cfg, model.plan, params, feeds["tokens"],
+                                      feeds["frames"], q_chunk=hp["q_chunk"],
+                                      compute_dtype=hp["compute_dtype"],
+                                      scan_unroll=hp["scan_unroll"])
+        else:
+            x, _ = lm_mod.forward(cfg, model.plan, params, feeds["tokens"],
+                                  **fwd_kw)
+        last = x[:, -1:, :]
+        logits = lm_mod.logits_from_hidden(cfg, model.plan, params, last)
+        return logits, {}
+
+    batch_desc = model.batch_desc(shape)
+    batch_desc.pop("labels", None)
+    feed_names = list(batch_desc)
+    pdesc = model.describe_params()
+    params_abs = abstract_params(pdesc)
+    rules = rules if rules is not None else (
+        mesh_mod.mesh_rules(mesh) if mesh is not None else None)
+    if rules is not None:
+        pspec = shd.param_pspecs(param_axes(pdesc), rules)
+        var_shardings = _named(mesh, {"params": pspec})
+        feed_shardings = {
+            n: NamedSharding(mesh, shd.pspec_of(batch_desc[n].axes, rules))
+            for n in feed_names}
+        out_shardings = (NamedSharding(
+            mesh, shd.pspec_of(("batch", None, "vocab"), rules)), {})
+    else:
+        var_shardings = feed_shardings = out_shardings = None
+    feed_specs = {n: jax.ShapeDtypeStruct(batch_desc[n].shape, batch_desc[n].dtype)
+                  for n in feed_names}
+    return StepBundle(fn=fn, feed_specs=feed_specs,
+                      var_specs={"params": params_abs},
+                      feed_shardings=feed_shardings,
+                      var_shardings=var_shardings, out_shardings=out_shardings,
+                      model=model, kind="prefill")
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(
+    cfg: ModelConfig,
+    shape: Shape,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, Any]] = None,
+    *,
+    hparam_overrides: Optional[Dict[str, Any]] = None,
+    via_graph: bool = True,
+) -> StepBundle:
+    """One-token decode against a seq_len cache (Variable in the graph)."""
+    shard = mesh.shape["model"] if mesh is not None else 1
+    n_groups = mesh_mod.batch_shard_size(mesh) if mesh is not None else 1
+    model = Model.for_config(cfg, shard)
+    longctx = shape.name == "long_500k"
+    hp = step_hparams(cfg, shape, n_groups)
+    hp.update(hparam_overrides or {})
+
+    serve_kw: Dict[str, Any] = dict(compute_dtype=hp["compute_dtype"],
+                                    serve_longctx=longctx,
+                                    scan_unroll=hp["scan_unroll"])
+    if not model.is_encdec:
+        serve_kw["n_token_groups"] = hp["n_token_groups"]
+
+    def serve_of(params, cache, tokens, pos):
+        return model.serve_step(params, cache, tokens, pos, **serve_kw)
+
+    if via_graph:
+        b = GraphBuilder()
+        v_params = b.variable("params")
+        v_cache = b.variable("cache")
+        t_ph = b.placeholder("tokens")
+        p_ph = b.placeholder("pos")
+        out = b.call(serve_of, [v_params, v_cache, t_ph, p_ph],
+                     name="serve", n_out=2)
+        a_cache = b.assign(v_cache, out.output(1))
+        sess = Session(b.graph)
+        lowered = compile_subgraph(sess, [out.output(0)],
+                                   [t_ph.ref, p_ph.ref],
+                                   extra_updates=[a_cache.name])
+        n_nodes = lowered.n_nodes
+
+        def fn(feeds: Dict[str, Any], variables: Dict[str, Any]):
+            feed_vals = {"tokens:0": feeds["tokens"], "pos:0": feeds["pos"]}
+            (logits,), new_vars = lowered.fn(feed_vals, variables)
+            return logits, new_vars
+    else:
+        n_nodes = 0
+
+        def fn(feeds, variables):
+            logits, new_cache = serve_of(variables["params"], variables["cache"],
+                                         feeds["tokens"], feeds["pos"])
+            return logits, {"cache": new_cache}
+
+    pdesc = model.describe_params(serve_longctx=longctx)
+    if hp.get("param_dtype") is not None:
+        # serving-mode weights (e.g. bf16): checkpoint-cast at load time
+        import dataclasses as _dc
+
+        pdesc = jax.tree.map(
+            lambda sp: _dc.replace(sp, dtype=hp["param_dtype"]), pdesc,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+    cdesc = model.init_cache_desc(batch=shape.global_batch,
+                                  max_seq=shape.seq_len, serve_longctx=longctx,
+                                  dtype=hp["compute_dtype"])
+    params_abs = abstract_params(pdesc)
+    cache_abs = abstract_params(cdesc)
+    batch_desc = model.batch_desc(shape)
+    feed_names = list(batch_desc)
+    rules = rules if rules is not None else (
+        mesh_mod.mesh_rules(mesh) if mesh is not None else None)
+    if rules is not None:
+        pspec = shd.param_pspecs(param_axes(pdesc), rules)
+        caxes = param_axes(cdesc)
+        if shape.global_batch == 1:  # long_500k: nothing to shard on batch
+            caxes = jax.tree.map(
+                lambda axes: tuple(None if a == "batch" else a for a in axes),
+                caxes, is_leaf=lambda x: isinstance(x, tuple) and all(
+                    a is None or isinstance(a, str) for a in x))
+        cspec = shd.param_pspecs(caxes, rules)
+        var_shardings = _named(mesh, {"params": pspec, "cache": cspec})
+        feed_shardings = {}
+        for n in feed_names:
+            axes = batch_desc[n].axes
+            if shape.global_batch == 1:
+                axes = tuple(None for _ in axes)
+            feed_shardings[n] = NamedSharding(mesh, shd.pspec_of(axes, rules))
+        out_vocab = shd.pspec_of(
+            ("batch" if shape.global_batch > 1 else None, None, "vocab"), rules)
+        out_shardings = (NamedSharding(mesh, out_vocab),
+                         _named(mesh, {"cache": cspec}))
+    else:
+        var_shardings = feed_shardings = out_shardings = None
+    feed_specs = {n: jax.ShapeDtypeStruct(batch_desc[n].shape, batch_desc[n].dtype)
+                  for n in feed_names}
+    return StepBundle(fn=fn, feed_specs=feed_specs,
+                      var_specs={"params": params_abs, "cache": cache_abs},
+                      feed_shardings=feed_shardings,
+                      var_shardings=var_shardings, out_shardings=out_shardings,
+                      model=model, kind="decode", graph_nodes=n_nodes)
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh=None, rules=None, **kw
+               ) -> StepBundle:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, rules, **kw)
+    return build_serve_step(cfg, shape, mesh, rules, **kw)

@@ -1,0 +1,118 @@
+"""End-to-end training driver (deliverable (b): the e2e example).
+
+Builds the training step AS A repro.core GRAPH (Session + §4.1 gradients
++ optimizer nodes), lowers it (§10), jits it, and drives it from the
+§4.5/§4.6 input pipeline with §3.3 periodic checkpointing + restart
+recovery.  On CPU use a reduced config; on a pod pass --mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \\
+      --steps 200 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager, FileCheckpointIO
+from ..configs import get_config
+from ..data import SyntheticLMDataset, Prefetcher, batch_iterator
+from ..models.api import Shape
+from ..models.params import init_params, count_params
+from ..optim import adamw_init
+from .steps import build_train_step
+
+
+def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
+          batch: int = 8, seq: int = 256, lr: float = 1e-3,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+          log_every: int = 10, seed: int = 0,
+          resume: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch, smoke=smoke)
+    shape = Shape("custom", seq, batch, "train")
+    sb = build_train_step(cfg, shape, lr=lr,
+                          hparam_overrides={"compute_dtype": jnp.float32,
+                                            "loss_chunk": 0, "q_chunk": 0})
+    n_params = count_params(sb.model.describe_params())
+    print(f"[train] arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"batch={batch} seq={seq} graph_nodes={sb.graph_nodes}")
+
+    params = init_params(sb.model.describe_params(), jax.random.PRNGKey(seed))
+    variables = {"params": params, "opt": adamw_init(params)}
+    step_fn = jax.jit(sb.fn, donate_argnums=(1,))
+
+    mgr = None
+    start_step = 0
+    if ckpt_dir:
+        mgr = CheckpointManager(FileCheckpointIO(ckpt_dir), every_steps=ckpt_every)
+        if resume and mgr.latest_step() is not None:
+            restored = mgr.restore_latest()
+            variables = restored["variables"]
+            start_step = int(mgr.latest_step())
+            print(f"[train] resumed from step {start_step} (§3.3 recovery)")
+
+    ds = SyntheticLMDataset(cfg.vocab_size, seq, seed=seed)
+    pipe = Prefetcher(batch_iterator(ds, batch, start_step), capacity=4).start()
+
+    writer = None
+    if ckpt_dir:  # §9.1: summary events next to the checkpoints
+        from ..tools import SummaryWriter
+
+        writer = SummaryWriter(os.path.join(ckpt_dir, "events"))
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        raw = pipe.get()
+        feeds = {"tokens": jnp.asarray(raw["tokens"]),
+                 "labels": jnp.asarray(raw["labels"])}
+        if sb.model.is_encdec:
+            feeds["frames"] = jnp.zeros(
+                (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        loss, variables = step_fn(feeds, variables)
+        losses.append(float(loss))
+        if writer:
+            writer.add(i + 1, "train/loss", losses[-1])
+        if mgr and mgr.should_save(i + 1):
+            mgr.save(i + 1, {"variables": variables})
+        if (i + 1) % log_every == 0:
+            rate = (i + 1 - start_step) * batch * seq / (time.time() - t0)
+            print(f"[train] step {i+1:5d} loss {float(loss):.4f} "
+                  f"({rate:,.0f} tok/s)")
+    pipe.stop()
+    if writer:
+        writer.close()
+    if mgr:
+        mgr.save(steps, {"variables": variables})
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "params": n_params}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true", default=False)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.set_defaults(smoke=True)
+    args = ap.parse_args(argv)
+    res = train(args.arch, smoke=args.smoke, steps=args.steps,
+                batch=args.batch, seq=args.seq, lr=args.lr,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"[train] done: final loss {res['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

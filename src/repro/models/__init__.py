@@ -1,0 +1,3 @@
+from .config import ModelConfig, PadPlan, plan_padding
+
+__all__ = ["ModelConfig", "PadPlan", "plan_padding"]

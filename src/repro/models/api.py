@@ -1,0 +1,116 @@
+"""Unified model API: one facade over all families.
+
+``Model.for_config(cfg)`` dispatches to the right assembly (lm / encdec)
+and exposes: describe_params, loss_fn, forward, serve_step,
+init_cache_desc, and input description for each workload shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, PadPlan, plan_padding
+from . import lm, encdec
+from .params import LeafSpec, abstract_params, init_params, param_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, plan: PadPlan):
+        self.cfg = cfg
+        self.plan = plan
+        self.is_encdec = cfg.family == "encdec"
+        self._mod = encdec if self.is_encdec else lm
+
+    @staticmethod
+    def for_config(cfg: ModelConfig, shard: int = 1) -> "Model":
+        return Model(cfg, plan_padding(cfg, shard))
+
+    # ------------------------------------------------------------------
+    def describe_params(self, *, serve_longctx: bool = False):
+        if self.is_encdec:
+            return encdec.describe_encdec(self.cfg, self.plan,
+                                          serve_longctx=serve_longctx)
+        return lm.describe_lm(self.cfg, self.plan, serve_longctx=serve_longctx)
+
+    def init(self, key, *, serve_longctx: bool = False):
+        return init_params(self.describe_params(serve_longctx=serve_longctx), key)
+
+    def abstract_params(self, **kw):
+        return abstract_params(self.describe_params(**kw))
+
+    def param_axes(self, **kw):
+        return param_axes(self.describe_params(**kw))
+
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, **kw) -> jax.Array:
+        return self._mod.loss_fn(self.cfg, self.plan, params, batch, **kw)
+
+    def forward_logits(self, params, batch, **kw) -> jax.Array:
+        if self.is_encdec:
+            x, _ = encdec.forward(self.cfg, self.plan, params,
+                                  batch["tokens"], batch["frames"], **kw)
+        else:
+            x, _ = lm.forward(self.cfg, self.plan, params, batch["tokens"], **kw)
+        return lm.logits_from_hidden(self.cfg, self.plan, params, x)
+
+    def serve_step(self, params, cache, tokens, pos, **kw):
+        return self._mod.serve_step(self.cfg, self.plan, params, cache,
+                                    tokens, pos, **kw)
+
+    def init_cache_desc(self, *, batch: int, max_seq: int,
+                        serve_longctx: bool = False, dtype=jnp.float32):
+        return self._mod.init_cache_desc(self.cfg, self.plan, batch=batch,
+                                         max_seq=max_seq,
+                                         serve_longctx=serve_longctx,
+                                         dtype=dtype)
+
+    # ------------------------------------------------------------------
+    def batch_desc(self, shape: Shape) -> Dict[str, LeafSpec]:
+        """Feed tensors for a workload shape (dry-run stand-ins)."""
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            d = {
+                "tokens": LeafSpec((B, S), ("batch", "seq"), dtype=jnp.int32),
+                "labels": LeafSpec((B, S), ("batch", "seq"), dtype=jnp.int32),
+            }
+            if self.is_encdec:
+                d["frames"] = LeafSpec((B, self.cfg.enc_seq, self.cfg.d_model),
+                                       ("batch", None, None), dtype=jnp.bfloat16)
+            return d
+        # decode: one token against a seq_len cache
+        return {
+            "tokens": LeafSpec((B, 1), ("batch", None), dtype=jnp.int32),
+            "pos": LeafSpec((), (), dtype=jnp.int32),
+        }
+
+    def supports_shape(self, shape: Shape) -> Tuple[bool, str]:
+        if shape.name == "long_500k":
+            if self.cfg.family == "ssm":
+                return True, "native O(1)-state decode"
+            if self.cfg.family == "hybrid":
+                return True, "SWA + SSM decode (global layers run SWA in the serving variant)"
+            return True, f"sliding-window serving variant (window={self.cfg.longctx_window})"
+        return True, ""
+
+
+def make_model(cfg: ModelConfig, shard: int = 1) -> Model:
+    return Model.for_config(cfg, shard)

@@ -1,0 +1,69 @@
+"""Parameter description/materialisation machinery.
+
+``describe_*`` functions build a pytree of :class:`LeafSpec` — shape,
+logical sharding axes, and init recipe — for each architecture.  From one
+description we derive (a) real initialised parameters (smoke tests,
+examples), (b) ``ShapeDtypeStruct`` stand-ins (the multi-pod dry-run; no
+allocation), and (c) ``PartitionSpec`` trees (via parallel.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | a_log | dt_bias | normal:<std>
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leafspec(x) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+def _init_leaf(spec: LeafSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "a_log":  # mamba2: A ~ U[1,16], store log
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "dt_bias":  # softplus^-1(U[1e-3, 1e-1])
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(spec.dtype)
+    std = 0.02
+    if spec.init.startswith("normal:"):
+        std = float(spec.init.split(":", 1)[1])
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def init_params(desc: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(desc, is_leaf=is_leafspec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(desc: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), desc, is_leaf=is_leafspec)
+
+
+def param_axes(desc: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, desc, is_leaf=is_leafspec)
+
+
+def count_params(desc: Any) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree.leaves(desc, is_leaf=is_leafspec))

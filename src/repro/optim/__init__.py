@@ -1,0 +1,7 @@
+from .optimizers import (OptState, sgd_init, sgd_update, momentum_init,
+                         momentum_update, adamw_init, adamw_update,
+                         make_optimizer, attach_train_op)
+
+__all__ = ["OptState", "sgd_init", "sgd_update", "momentum_init",
+           "momentum_update", "adamw_init", "adamw_update", "make_optimizer",
+           "attach_train_op"]

@@ -1,0 +1,5 @@
+from .sharding import (axis_rules, logical_constraint, pspec_of, param_pspecs,
+                       set_rules, current_rules)
+
+__all__ = ["axis_rules", "logical_constraint", "pspec_of", "param_pspecs",
+           "set_rules", "current_rules"]

@@ -1,0 +1,109 @@
+"""Logical-axis sharding rules (the compiled path's placement policy).
+
+The paper's placement algorithm assigns ops to devices; on a homogeneous
+SPMD pod the analogous decision is *which mesh axis each tensor dimension
+shards over* (DESIGN.md §2).  Model code annotates tensors with LOGICAL
+dimension names ("batch", "heads", "ff", "experts", ...); the launch
+layer activates a rule set mapping logical names to mesh axes, and
+``logical_constraint`` lowers to ``jax.lax.with_sharding_constraint``.
+With no rules active (unit tests, single device) everything is a no-op.
+
+This indirection is what the §Perf hillclimbing iterates on: changing a
+rule re-shards the whole model without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Default production rules (single-pod). "batch" may map to a *tuple* of
+# mesh axes (e.g. ("pod", "data") in the multi-pod mesh).
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": "data",
+    "seq": None,            # sequence stays unsharded (no context parallel)
+    "seq_res": None,        # residual-stream seq dim; map to "model" for
+                            # Megatron-style sequence parallelism (stored
+                            # activations /TP at unchanged collective volume)
+    "d_model": "data",      # FSDP: params sharded on d_model over data axis
+    "heads": "model",       # tensor parallel
+    "kv_heads": "model",    # padded kv heads
+    "kv_orig": None,        # original (pre-duplication) kv heads: replicated
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",     # expert parallel
+    "expert_cap": None,
+    "inner": "model",       # SSM d_inner / heads
+    "ssm_heads": "model",
+    "state": None,
+    "groups": "batch_alias",  # resolved to the batch mapping
+    "layers": None,
+}
+
+
+def set_rules(rules: Optional[Dict[str, Any]], mesh: Optional[Mesh] = None) -> None:
+    _state.rules = rules
+    _state.mesh = mesh
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any], mesh: Optional[Mesh] = None):
+    prev_r, prev_m = current_rules(), current_mesh()
+    set_rules(rules, mesh)
+    try:
+        yield
+    finally:
+        set_rules(prev_r, prev_m)
+
+
+def _resolve(rules: Dict[str, Any], name: Optional[str]):
+    if name is None:
+        return None
+    axis = rules.get(name)
+    if axis == "batch_alias":
+        axis = rules.get("batch")
+    return axis
+
+
+def pspec_of(axes: Sequence[Optional[str]],
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    """Logical dim names -> PartitionSpec under the active (or given) rules."""
+    rules = rules if rules is not None else (current_rules() or {})
+    return P(*[_resolve(rules, a) for a in axes])
+
+
+def logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate activation sharding; identity when no rules are active."""
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs axes {axes}")
+    spec = pspec_of(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_pspecs(param_axes: Any, rules: Optional[Dict[str, Any]] = None) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    rules = rules if rules is not None else (current_rules() or {})
+    return jax.tree.map(
+        lambda axes: pspec_of(axes, rules),
+        param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

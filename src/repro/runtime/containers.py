@@ -1,0 +1,86 @@
+"""§4.7 Containers — longer-lived mutable state backing Variables.
+
+The default container persists until the process terminates; named
+containers can be reset independently.  Containers are shared across
+Sessions, which is exactly how the paper lets disjoint graphs share state.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional
+
+
+class Container:
+    def __init__(self, name: str = "") -> None:
+        self.name = name
+        self._values: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+
+    def read(self, var_name: str, init: Optional[Callable[[], Any]] = None) -> Any:
+        with self._lock:
+            if var_name not in self._values:
+                if init is None:
+                    raise KeyError(f"uninitialized variable {var_name!r} in container {self.name!r}")
+                self._values[var_name] = init()
+            return self._values[var_name]
+
+    def write(self, var_name: str, value: Any) -> None:
+        with self._lock:
+            self._values[var_name] = value
+
+    def has(self, var_name: str) -> bool:
+        with self._lock:
+            return var_name in self._values
+
+    def reset(self) -> None:
+        with self._lock:
+            self._values.clear()
+
+    def keys(self):
+        with self._lock:
+            return list(self._values)
+
+
+class ContainerManager:
+    """Process-wide named containers (the §4.7 resource manager)."""
+
+    def __init__(self) -> None:
+        self._containers: Dict[str, Container] = {"": Container("")}
+        self._lock = threading.Lock()
+
+    def get(self, name: str = "") -> Container:
+        with self._lock:
+            if name not in self._containers:
+                self._containers[name] = Container(name)
+            return self._containers[name]
+
+    def reset(self, name: str = "") -> None:
+        self.get(name).reset()
+
+
+DEFAULT_MANAGER = ContainerManager()
+
+
+class VariableStore:
+    """Adapter the executor uses: resolves each Variable node's container."""
+
+    def __init__(self, manager: Optional[ContainerManager] = None) -> None:
+        self.manager = manager or ContainerManager()
+
+    def read(self, var_name: str, attrs: Dict[str, Any]) -> Any:
+        cont = self.manager.get(attrs.get("container", ""))
+        init = attrs.get("init")
+        init_fn = (init if callable(init) else (lambda: init)) if init is not None else None
+        return cont.read(var_name, init_fn)
+
+    def write(self, var_name: str, value: Any, container: str = "") -> None:
+        # Variables live where first initialized; search known containers.
+        for cname in list(self.manager._containers):
+            c = self.manager.get(cname)
+            if c.has(var_name):
+                c.write(var_name, value)
+                return
+        self.manager.get(container).write(var_name, value)
+
+    def has(self, var_name: str) -> bool:
+        return any(self.manager.get(c).has(var_name) for c in list(self.manager._containers))

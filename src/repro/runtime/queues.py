@@ -1,0 +1,109 @@
+"""§4.6 Queues: FIFO + shuffling, with blocking Enqueue/Dequeue.
+
+Enqueue blocks until space is available; Dequeue blocks until the
+requested minimum number of elements is present.  The shuffling queue
+randomizes within a large in-memory buffer (used for example shuffling).
+These also implement the §5.3 asynchronous-kernel story in the eager
+runtime: the blocking happens inside the kernel without burning the
+scheduler.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, List, Optional, Tuple
+
+
+class QueueClosed(Exception):
+    pass
+
+
+class FIFOQueue:
+    def __init__(self, capacity: int = 1024, timeout: float = 30.0, name: str = "fifo") -> None:
+        self.capacity = capacity
+        self.timeout = timeout
+        self.name = name
+        self._items: List[Any] = []
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def enqueue(self, item: Any) -> None:
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: len(self._items) < self.capacity or self._closed, timeout=self.timeout)
+            if self._closed:
+                raise QueueClosed(self.name)
+            if not ok:
+                raise TimeoutError(f"enqueue timed out on {self.name!r}")
+            self._items.append(item)
+            self._cv.notify_all()
+
+    def enqueue_many(self, items) -> None:
+        for it in items:
+            self.enqueue(it)
+
+    def _pick(self) -> Any:
+        return self._items.pop(0)
+
+    def dequeue(self) -> Any:
+        with self._cv:
+            ok = self._cv.wait_for(lambda: self._items or self._closed, timeout=self.timeout)
+            if self._items:
+                it = self._pick()
+                self._cv.notify_all()
+                return it
+            if self._closed:
+                raise QueueClosed(self.name)
+            raise TimeoutError(f"dequeue timed out on {self.name!r}")
+
+    def dequeue_many(self, n: int) -> List[Any]:
+        """Blocks until ``n`` elements are available (the paper's minimum)."""
+        out = []
+        with self._cv:
+            ok = self._cv.wait_for(lambda: len(self._items) >= n or self._closed,
+                                   timeout=self.timeout)
+            if len(self._items) >= n:
+                for _ in range(n):
+                    out.append(self._pick())
+                self._cv.notify_all()
+                return out
+            if self._closed:
+                raise QueueClosed(self.name)
+            raise TimeoutError(f"dequeue_many timed out on {self.name!r}")
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def size(self) -> int:
+        with self._cv:
+            return len(self._items)
+
+
+class ShufflingQueue(FIFOQueue):
+    """Randomly shuffles elements within its in-memory buffer (§4.6)."""
+
+    def __init__(self, capacity: int = 1024, min_after_dequeue: int = 0,
+                 seed: Optional[int] = None, timeout: float = 30.0,
+                 name: str = "shuffle") -> None:
+        super().__init__(capacity=capacity, timeout=timeout, name=name)
+        self.min_after_dequeue = min_after_dequeue
+        self._rng = random.Random(seed)
+
+    def _pick(self) -> Any:
+        idx = self._rng.randrange(len(self._items))
+        return self._items.pop(idx)
+
+    def dequeue(self) -> Any:
+        with self._cv:
+            need = self.min_after_dequeue + 1
+            self._cv.wait_for(lambda: len(self._items) >= need or self._closed,
+                              timeout=self.timeout)
+            if self._items and (len(self._items) >= need or self._closed):
+                it = self._pick()
+                self._cv.notify_all()
+                return it
+            if self._closed:
+                raise QueueClosed(self.name)
+            raise TimeoutError(f"dequeue timed out on {self.name!r}")

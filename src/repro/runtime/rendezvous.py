@@ -1,0 +1,53 @@
+"""§3.2.2 Send/Recv rendezvous.
+
+Send and Receive coordinate through a keyed rendezvous so that all
+communication is isolated inside the Send/Recv implementations.  Keys are
+``(tensor_ref, src_device, dst_device, execution_id)`` strings; the
+canonicalisation pass guarantees one transfer per (tensor, device-pair).
+The local implementation hands arrays across a thread-safe table; a
+distributed implementation would swap TCP/RDMA underneath the same
+interface — on TPU pods this role is played by XLA collectives instead
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict
+
+
+def make_key(tensor: str, src: str, dst: str, execution_id: int = 0) -> str:
+    return f"{src};{dst};{tensor};{execution_id}"
+
+
+class Rendezvous:
+    def __init__(self, timeout: float = 30.0) -> None:
+        self._table: Dict[str, Any] = {}
+        self._cv = threading.Condition()
+        self.timeout = timeout
+        self.sends = 0  # instrumentation for tests/benchmarks
+        self.bytes_sent = 0
+
+    def send(self, key: str, value: Any) -> None:
+        with self._cv:
+            if key in self._table:
+                raise RuntimeError(f"duplicate send for rendezvous key {key!r}")
+            self._table[key] = value
+            self.sends += 1
+            try:
+                self.bytes_sent += value.nbytes
+            except AttributeError:
+                pass
+            self._cv.notify_all()
+
+    def recv(self, key: str) -> Any:
+        with self._cv:
+            ok = self._cv.wait_for(lambda: key in self._table, timeout=self.timeout)
+            if not ok:
+                raise TimeoutError(f"recv timed out waiting for {key!r}")
+            return self._table.pop(key)
+
+    def reset(self) -> None:
+        with self._cv:
+            self._table.clear()
+            self.sends = 0
+            self.bytes_sent = 0

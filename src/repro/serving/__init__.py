@@ -1,0 +1,3 @@
+from .batcher import Request, RequestResult, ContinuousBatcher
+
+__all__ = ["Request", "RequestResult", "ContinuousBatcher"]

@@ -1,0 +1,179 @@
+"""Continuous-batching serving layer on the paper's substrate.
+
+Requests arrive through a §4.6 FIFO queue; a fixed pool of batch *slots*
+shares one jitted serve step (cache batch dim = n_slots).  Each decode
+step every live slot advances one token; finished slots are immediately
+refilled from the queue (continuous batching, the standard production
+serving discipline).  Per-slot positions are tracked host-side and the
+whole-batch step uses per-slot position masking, so slots at different
+depths coexist in one cache.
+
+This requires per-slot decode positions, which the single-``pos`` serve
+step doesn't expose — so the batcher drives the model with a vmapped
+single-sequence step over the slot axis.  Sampling: greedy or
+temperature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+from ..models.params import init_params
+from ..runtime.queues import FIFOQueue, QueueClosed
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    steps: int
+    latency_s: float
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, *, n_slots: int = 4,
+                 max_seq: int = 256, seed: int = 0) -> None:
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: FIFOQueue = FIFOQueue(capacity=64, name="requests")
+        self.results: Dict[int, RequestResult] = {}
+        self._key = jax.random.PRNGKey(seed)
+
+        cdesc = model.init_cache_desc(batch=1, max_seq=max_seq)
+        self._empty_cache = init_params(cdesc, jax.random.PRNGKey(1))
+        # slot-stacked cache: add a leading slot axis via vmap-compatible stack
+        self.cache = jax.tree.map(
+            lambda x: jnp.stack([x] * n_slots), self._empty_cache)
+
+        def one_slot_step(cache, token, pos):
+            logits, new_cache = model.serve_step(self.params, cache,
+                                                 token[None, :], pos)
+            return logits[0], new_cache
+
+        self._step = jax.jit(jax.vmap(one_slot_step))
+
+        # host-side slot state
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int64)
+        self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
+        self.slot_out: List[List[int]] = [[] for _ in range(n_slots)]
+        self.slot_t0 = np.zeros(n_slots)
+        self.slot_steps = np.zeros(n_slots, dtype=np.int64)
+        self.stats = {"steps": 0, "slot_tokens": 0, "idle_slot_tokens": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.enqueue(req)
+
+    def _reset_slot_cache(self, s: int) -> None:
+        self.cache = jax.tree.map(
+            lambda full, empty: full.at[s].set(empty),
+            self.cache, self._empty_cache)
+
+    def _try_fill_slots(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None:
+                continue
+            if self.queue.size() == 0:
+                continue
+            try:
+                req = self.queue.dequeue()
+            except (TimeoutError, QueueClosed):
+                return
+            self.slot_req[s] = req
+            self.slot_pos[s] = 0
+            self.slot_pending[s] = list(req.prompt)
+            self.slot_out[s] = []
+            self.slot_t0[s] = time.time()
+            self.slot_steps[s] = 0
+            self._reset_slot_cache(s)
+
+    def _live(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.slot_req[s] is not None]
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Advance every live slot one token; returns #completed requests."""
+        self._try_fill_slots()
+        live = self._live()
+        if not live:
+            return 0
+
+        tokens = np.zeros((self.n_slots, 1), dtype=np.int32)
+        for s in live:
+            if self.slot_pending[s]:
+                tokens[s, 0] = self.slot_pending[s][0]
+            elif self.slot_out[s]:
+                tokens[s, 0] = self.slot_out[s][-1]
+            else:
+                tokens[s, 0] = 0
+        positions = jnp.asarray(self.slot_pos.astype(np.int32))
+
+        logits, self.cache = self._step(self.cache, jnp.asarray(tokens),
+                                        positions)
+        self.stats["steps"] += 1
+        self.stats["slot_tokens"] += len(live)
+        self.stats["idle_slot_tokens"] += self.n_slots - len(live)
+
+        done = 0
+        logits_np = np.asarray(logits[:, 0, :])
+        for s in live:
+            req = self.slot_req[s]
+            self.slot_pos[s] += 1
+            self.slot_steps[s] += 1
+            if self.slot_pending[s]:
+                self.slot_pending[s].pop(0)
+                if self.slot_pending[s]:
+                    continue  # still prefilling
+            # sample the next token from this step's logits
+            v = logits_np[s, : self.model.cfg.vocab_size]
+            if req.temperature > 0:
+                self._key, sub = jax.random.split(self._key)
+                tok = int(jax.random.categorical(
+                    sub, jnp.asarray(v) / req.temperature))
+            else:
+                tok = int(np.argmax(v))
+            self.slot_out[s].append(tok)
+            finished = (len(self.slot_out[s]) >= req.max_new_tokens
+                        or (req.eos_id is not None and tok == req.eos_id)
+                        or self.slot_pos[s] >= self.max_seq - 1)
+            if finished:
+                self.results[req.rid] = RequestResult(
+                    rid=req.rid, tokens=list(self.slot_out[s]),
+                    prompt_len=len(req.prompt),
+                    steps=int(self.slot_steps[s]),
+                    latency_s=time.time() - self.slot_t0[s])
+                self.slot_req[s] = None
+                done += 1
+        return done
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, RequestResult]:
+        for _ in range(max_steps):
+            self.step()
+            if self.queue.size() == 0 and not self._live():
+                break
+        return self.results
+
+    def occupancy(self) -> float:
+        tot = self.stats["slot_tokens"] + self.stats["idle_slot_tokens"]
+        return self.stats["slot_tokens"] / tot if tot else 0.0

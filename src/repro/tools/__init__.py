@@ -1,0 +1,5 @@
+from .summary import SummaryWriter, attach_scalar_summary, read_events
+from .tracing import Tracer, chrome_trace
+
+__all__ = ["SummaryWriter", "attach_scalar_summary", "read_events",
+           "Tracer", "chrome_trace"]

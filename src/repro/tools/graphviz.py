@@ -1,0 +1,60 @@
+"""§9.1 graph-structure visualisation (TensorBoard's graph pane).
+
+The paper's approach for 36k-node graphs: collapse nodes into high-level
+blocks by name prefix, and separate out high-degree "bookkeeping" nodes.
+``to_dot`` renders a repro.core Graph as Graphviz DOT with exactly those
+two transforms; ``collapse_summary`` gives the textual block view used by
+tests and terminals.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core.graph import Graph
+
+
+def _block_of(name: str, depth: int) -> str:
+    parts = name.split("/")
+    return "/".join(parts[:depth]) if len(parts) > depth else name
+
+
+def collapse_summary(g: Graph, depth: int = 1,
+                     high_degree: int = 8) -> Dict[str, Dict]:
+    """Collapse nodes into prefix blocks; returns
+    {block: {n_nodes, ops, edges_out}} with high-degree nodes separated."""
+    degree: Dict[str, int] = defaultdict(int)
+    for node in g.nodes.values():
+        for d in g.deps(node):
+            degree[d] += 1
+    bookkeeping = {n for n, c in degree.items() if c >= high_degree}
+
+    blocks: Dict[str, Dict] = {}
+    block_of: Dict[str, str] = {}
+    for name, node in g.nodes.items():
+        blk = "__bookkeeping__" if name in bookkeeping else _block_of(name, depth)
+        block_of[name] = blk
+        b = blocks.setdefault(blk, {"n_nodes": 0, "ops": set(), "edges_out": set()})
+        b["n_nodes"] += 1
+        b["ops"].add(node.op)
+    for name, node in g.nodes.items():
+        for d in g.deps(node):
+            if d in block_of and block_of[d] != block_of[name]:
+                blocks[block_of[d]]["edges_out"].add(block_of[name])
+    return blocks
+
+
+def to_dot(g: Graph, depth: int = 1, high_degree: int = 8,
+           title: str = "graph") -> str:
+    blocks = collapse_summary(g, depth=depth, high_degree=high_degree)
+    lines = [f'digraph "{title}" {{', "  rankdir=TB;",
+             '  node [shape=box, style=rounded];']
+    for blk, info in sorted(blocks.items()):
+        label = f"{blk}\\n{info['n_nodes']} nodes"
+        shape = ', shape=ellipse, style=dashed' if blk == "__bookkeeping__" else ""
+        lines.append(f'  "{blk}" [label="{label}"{shape}];')
+    for blk, info in sorted(blocks.items()):
+        for dst in sorted(info["edges_out"]):
+            lines.append(f'  "{blk}" -> "{dst}";')
+    lines.append("}")
+    return "\n".join(lines)

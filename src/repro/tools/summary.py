@@ -1,0 +1,104 @@
+"""§9.1 TensorBoard analogue: Summary ops + event-log writer/reader.
+
+Summary nodes are inserted into the graph; every so often the client
+fetches them alongside the training step and the writer appends
+(step, wall_time, tag, value) records to a JSONL log.  ``read_events``
+is the "TensorBoard watching the log file" half: it tails the log and
+returns time series (by step or wall time), including histogram
+summaries (stored as bucket counts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.graph import Node
+from ..core.ops import GraphBuilder, register
+
+
+@register("ScalarSummary")
+def _scalar_summary(ctx, node, value):
+    import jax.numpy as jnp
+
+    return (jnp.asarray(value, jnp.float32).reshape(()),)
+
+
+@register("HistogramSummary")
+def _histogram_summary(ctx, node, value):
+    import jax.numpy as jnp
+
+    v = jnp.ravel(value).astype(jnp.float32)
+    lo, hi = jnp.min(v), jnp.max(v)
+    edges = jnp.linspace(lo, hi + 1e-9, node.attrs.get("bins", 16) + 1)
+    counts = jnp.histogram(v, bins=edges)[0]
+    return (jnp.concatenate([edges[:-1], counts.astype(jnp.float32)]),)
+
+
+def attach_scalar_summary(b: GraphBuilder, tensor, tag: str) -> Node:
+    return b.graph.add_node("ScalarSummary", [tensor],
+                            name=f"summary/{tag}", attrs={"tag": tag})
+
+
+def attach_histogram_summary(b: GraphBuilder, tensor, tag: str,
+                             bins: int = 16) -> Node:
+    return b.graph.add_node("HistogramSummary", [tensor],
+                            name=f"summary_hist/{tag}",
+                            attrs={"tag": tag, "bins": bins})
+
+
+class SummaryWriter:
+    def __init__(self, logdir: str, flush_every: int = 16) -> None:
+        os.makedirs(logdir, exist_ok=True)
+        self.path = os.path.join(logdir, "events.jsonl")
+        self._buf: List[str] = []
+        self.flush_every = flush_every
+        self._t0 = time.time()
+
+    def add(self, step: int, tag: str, value: Any) -> None:
+        rec = {"step": int(step), "wall_time": time.time() - self._t0,
+               "tag": tag}
+        arr = np.asarray(value)
+        rec["value"] = float(arr) if arr.ndim == 0 else arr.tolist()
+        self._buf.append(json.dumps(rec))
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def add_fetched(self, step: int, summary_nodes: Sequence[Node],
+                    values: Sequence[Any]) -> None:
+        for node, val in zip(summary_nodes, values):
+            self.add(step, node.attrs["tag"], val)
+
+    def flush(self) -> None:
+        if self._buf:
+            with open(self.path, "a") as f:
+                f.write("\n".join(self._buf) + "\n")
+            self._buf.clear()
+
+    def close(self) -> None:
+        self.flush()
+
+
+def read_events(logdir: str, tag: Optional[str] = None,
+                time_axis: str = "step") -> Dict[str, List]:
+    """Time series per tag: {'tag': [(t, value), ...]} — t is 'step' or
+    'wall_time' (the paper's selectable measurement of "time")."""
+    path = os.path.join(logdir, "events.jsonl")
+    out: Dict[str, List] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            if tag is not None and rec["tag"] != tag:
+                continue
+            out.setdefault(rec["tag"], []).append(
+                (rec[time_axis], rec["value"]))
+    for series in out.values():
+        series.sort(key=lambda tv: tv[0])
+    return out

@@ -1,0 +1,67 @@
+"""§9.2 EEG analogue: fine-grained execution tracing.
+
+A :class:`Tracer` records (node, device, start, end, frame) for every
+kernel the eager executor dispatches; ``chrome_trace`` converts the
+record stream into the Chrome trace-event JSON format (load in
+chrome://tracing or Perfetto — the modern stand-in for the paper's EEG
+visualisation server).  Cross-device Send/Recv pairs show up as separate
+lanes, making communication stalls visible exactly as in Figures 12-14.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class Tracer:
+    def __init__(self) -> None:
+        self.events: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+
+    def record(self, node_name: str, op: str, device: str,
+               t_start: float, t_end: float, frame: Any = ()) -> None:
+        with self._lock:
+            self.events.append({
+                "name": node_name, "op": op, "device": device,
+                "ts": (t_start - self._t0) * 1e6,
+                "dur": max((t_end - t_start) * 1e6, 0.01),
+                "frame": str(frame),
+            })
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def summarize(self) -> Dict[str, Dict[str, float]]:
+        """Total time per op type (the EEG 'summarize at detail level')."""
+        out: Dict[str, Dict[str, float]] = {}
+        for e in self.events:
+            s = out.setdefault(e["op"], {"count": 0, "total_us": 0.0})
+            s["count"] += 1
+            s["total_us"] += e["dur"]
+        return out
+
+    def critical_stalls(self, threshold_us: float = 100.0) -> List[Dict]:
+        """Recv-side waits longer than threshold (highlighted with arrows
+        in the paper's UI; we just list them)."""
+        return [e for e in self.events
+                if e["op"] == "Recv" and e["dur"] >= threshold_us]
+
+
+def chrome_trace(tracer: Tracer) -> str:
+    """Chrome trace-event JSON (one lane per device)."""
+    devices = sorted({e["device"] for e in tracer.events})
+    pid_of = {d: i for i, d in enumerate(devices)}
+    events = [{"name": d, "ph": "M", "pid": pid_of[d], "tid": 0,
+               "args": {"name": d}, "cat": "__metadata"}
+              for d in devices]
+    for e in tracer.events:
+        events.append({
+            "name": f"{e['op']}:{e['name']}", "ph": "X",
+            "pid": pid_of[e["device"]], "tid": 0,
+            "ts": e["ts"], "dur": e["dur"],
+            "args": {"frame": e["frame"]},
+        })
+    return json.dumps({"traceEvents": events})

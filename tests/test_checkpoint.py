@@ -1,0 +1,112 @@
+"""§3.3 fault tolerance: Save/Restore nodes + kill/restore equivalence."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session
+from repro.checkpoint import FileCheckpointIO, CheckpointManager, attach_save_restore
+from repro.optim import attach_train_op
+
+
+def _graph():
+    b = GraphBuilder()
+    W = b.variable("W", init_value=lambda: jnp.zeros((3, 1), "float32"))
+    x = b.placeholder("x")
+    y = b.placeholder("y")
+    loss = b.reduce_mean(b.square(b.sub(b.matmul(x, W), y)), name="loss")
+    op = attach_train_op(b, loss, [W], optimizer="sgd", lr=0.05)
+    return b, W, x, y, loss, op
+
+
+def _data(seed=0):
+    rs = np.random.RandomState(seed)
+    X = rs.randn(64, 3).astype("float32")
+    w = np.array([[1.0], [-2.0], [0.5]], "float32")
+    return jnp.array(X), jnp.array(X @ w)
+
+
+def test_save_restore_nodes_roundtrip(tmp_path):
+    io = FileCheckpointIO(str(tmp_path))
+    b, W, x, y, loss, op = _graph()
+    nodes = attach_save_restore(b, [W], path="ckpt/test")
+    X, Y = _data()
+    sess = Session(b.graph, checkpoint_io=io)
+    for _ in range(20):
+        sess.run(op.ref, {x.ref: X, y.ref: Y})
+    w_at_save = np.asarray(sess.variable_value("W"))
+    sess.run(nodes["save"].ref)
+
+    for _ in range(10):
+        sess.run(op.ref, {x.ref: X, y.ref: Y})
+    assert not np.allclose(sess.variable_value("W"), w_at_save)
+
+    sess.run(nodes["restore"].ref)
+    np.testing.assert_allclose(sess.variable_value("W"), w_at_save)
+
+
+def test_kill_and_restart_resumes_identically(tmp_path):
+    """Abort mid-training, restart from the checkpoint in a FRESH session
+    (§3.3: 'the entire graph execution is aborted and restarted')."""
+    io = FileCheckpointIO(str(tmp_path))
+    X, Y = _data()
+
+    # uninterrupted run: 40 steps
+    b, W, x, y, loss, op = _graph()
+    ref_sess = Session(b.graph, checkpoint_io=io)
+    for _ in range(40):
+        ref_sess.run(op.ref, {x.ref: X, y.ref: Y})
+    w_ref = np.asarray(ref_sess.variable_value("W"))
+
+    # interrupted run: 20 steps, checkpoint, "crash"
+    b1, W1, x1, y1, loss1, op1 = _graph()
+    s1 = Session(b1.graph, checkpoint_io=io)
+    sr1 = attach_save_restore(b1, [W1, b1.graph.nodes["train/step"]],
+                              path="ckpt/crash")
+    for _ in range(20):
+        s1.run(op1.ref, {x1.ref: X, y1.ref: Y})
+    s1.run(sr1["save"].ref)
+    del s1  # the crash
+
+    # restart: fresh session, Restore enabled first iteration (§3.3)
+    b2, W2, x2, y2, loss2, op2 = _graph()
+    sr2 = attach_save_restore(b2, [W2, b2.graph.nodes["train/step"]],
+                              path="ckpt/crash")
+    s2 = Session(b2.graph, checkpoint_io=io)
+    s2.run(sr2["restore"].ref)
+    assert int(s2.variable_value("train/step")) == 20
+    for _ in range(20):
+        s2.run(op2.ref, {x2.ref: X, y2.ref: Y})
+    np.testing.assert_allclose(s2.variable_value("W"), w_ref, rtol=1e-6)
+
+
+def test_checkpoint_manager_periodic_and_retention(tmp_path):
+    io = FileCheckpointIO(str(tmp_path))
+    mgr = CheckpointManager(io, every_steps=10, keep=2)
+    for step in range(1, 51):
+        if mgr.should_save(step):
+            mgr.save(step, {"w": jnp.full((4,), float(step))})
+    assert mgr.latest_step() == 50
+    assert len(io.list()) == 2  # retention
+    restored = mgr.restore_latest()
+    np.testing.assert_allclose(restored["w"], np.full((4,), 50.0))
+
+
+def test_checkpoint_manager_resume_discovery(tmp_path):
+    io = FileCheckpointIO(str(tmp_path))
+    mgr = CheckpointManager(io, every_steps=5, keep=3)
+    mgr.save(5, {"w": jnp.ones(2)})
+    mgr.save(10, {"w": 2 * jnp.ones(2)})
+    # fresh manager over the same dir discovers existing checkpoints
+    mgr2 = CheckpointManager(io, every_steps=5, keep=3)
+    assert mgr2.latest_step() == 10
+
+
+def test_pytree_checkpoint_roundtrip(tmp_path):
+    io = FileCheckpointIO(str(tmp_path))
+    tree = {"params": {"a": jnp.ones((2, 2)), "b": [jnp.zeros(3), jnp.ones(1)]}}
+    io.save("ckpt/tree", tree)
+    out = io.load("ckpt/tree")
+    np.testing.assert_allclose(out["params"]["a"], tree["params"]["a"])
+    np.testing.assert_allclose(out["params"]["b"][1], tree["params"]["b"][1])

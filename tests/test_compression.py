@@ -1,0 +1,45 @@
+"""§5.5 lossy compression: bit-level contract + error bound (property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+def test_wire_format_is_uint16():
+    x = jnp.array([1.0, -2.5, 3.14159], jnp.float32)
+    w = C.compress_f32_to_16(x)
+    assert w.dtype == jnp.uint16
+
+
+def test_roundtrip_matches_bfloat16_truncation():
+    """Keeping the top 16 bits of f32 IS the bfloat16 pattern (DESIGN §2)."""
+    x = jnp.array(np.random.RandomState(0).randn(256).astype("float32"))
+    rt = C.roundtrip(x)
+    # bf16 truncation (round-toward-zero) differs from jnp.bfloat16 cast
+    # (round-to-nearest), so compare against the explicit bit op:
+    bits = np.asarray(x).view(np.uint32) & 0xFFFF0000
+    want = bits.view(np.float32)
+    np.testing.assert_array_equal(np.asarray(rt), want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          allow_subnormal=False, width=32),
+                min_size=1, max_size=64))
+def test_relative_error_bound(vals):
+    # subnormals excluded: truncating their mantissa has unbounded rel
+    # error (they are below bf16's normal range) — documented behaviour.
+    x = jnp.array(np.array(vals, dtype=np.float32))
+    rt = C.roundtrip(x)
+    denom = np.where(np.abs(np.asarray(x)) > 0, np.abs(np.asarray(x)), 1.0)
+    rel = np.abs(np.asarray(rt) - np.asarray(x)) / denom
+    assert float(rel.max(initial=0.0)) <= C.max_relative_error()
+
+
+def test_zero_and_sign_preserved():
+    x = jnp.array([0.0, -0.0, 1.5, -1.5], jnp.float32)
+    rt = np.asarray(C.roundtrip(x))
+    assert rt[0] == 0.0 and rt[2] == 1.5 and rt[3] == -1.5
+    assert np.signbit(rt[1])

@@ -1,0 +1,91 @@
+"""§4.4 Switch/Merge/Enter/Exit/NextIteration: eager frames + lowering."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session, while_loop, cond, compile_subgraph
+
+
+def _sum_loop(b, limit=5):
+    i0 = b.constant(jnp.array(0), name="i0")
+    acc0 = b.constant(jnp.array(0.0), name="acc0")
+    lim = b.constant(jnp.array(limit), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+
+    def cnd(i, a):
+        return b.less(i, lim)
+
+    def body(i, a):
+        return [b.add(i, one), b.add(a, b.cast(i, "float32"))]
+
+    return while_loop(b, cnd, body, [i0, acc0])
+
+
+def test_while_loop_eager():
+    b = GraphBuilder()
+    outs = _sum_loop(b)
+    i, acc = Session(b.graph).run(outs)
+    assert int(i) == 5 and float(acc) == 10.0
+
+
+def test_while_loop_compiled_matches_eager():
+    b = GraphBuilder()
+    outs = _sum_loop(b, limit=7)
+    sess = Session(b.graph)
+    eager = sess.run(outs)
+    (compiled, _) = compile_subgraph(sess, outs, []).fn({}, {})
+    assert int(compiled[0]) == int(eager[0])
+    assert float(compiled[1]) == float(eager[1])
+
+
+def test_while_zero_iterations():
+    b = GraphBuilder()
+    outs = _sum_loop(b, limit=0)
+    i, acc = Session(b.graph).run(outs)
+    assert int(i) == 0 and float(acc) == 0.0
+
+
+def test_cond_both_branches_eager_and_compiled():
+    b = GraphBuilder()
+    p = b.placeholder("p")
+    x = b.constant(jnp.array(3.0), name="x")
+    res = cond(b, p, lambda t: [b.mul(t, t)], lambda f: [b.neg(f)], [x])
+    sess = Session(b.graph)
+    assert float(sess.run(res, {p.ref: jnp.array(True)})[0]) == 9.0
+    assert float(sess.run(res, {p.ref: jnp.array(False)})[0]) == -3.0
+    low = compile_subgraph(sess, res, [p.ref])
+    assert float(low.fn({"p:0": jnp.array(True)}, {})[0][0]) == 9.0
+    assert float(low.fn({"p:0": jnp.array(False)}, {})[0][0]) == -3.0
+
+
+def test_cond_untaken_branch_not_executed_eagerly():
+    """Dead-tensor propagation skips the untaken branch (§4.4)."""
+    b = GraphBuilder()
+    p = b.placeholder("p")
+    x = b.constant(jnp.array(2.0), name="x")
+    res = cond(b, p,
+               lambda t: [b.mul(t, t, name="true_branch")],
+               lambda f: [b.neg(f, name="false_branch")], [x])
+    trace = []
+    out = Session(b.graph).run(res, {p.ref: jnp.array(True)}, trace=trace)
+    assert float(out[0]) == 4.0
+    assert "true_branch" in trace
+    # the false branch node fires only to propagate deadness; its kernel
+    # must not have produced a live value — fetching it must fail
+    with pytest.raises(Exception):
+        Session(b.graph).run("false_branch:0", {p.ref: jnp.array(True)})
+
+
+def test_loop_over_vector_state():
+    b = GraphBuilder()
+    x0 = b.constant(jnp.ones((4,)), name="x0")
+    i0 = b.constant(jnp.array(0), name="i0")
+    lim = b.constant(jnp.array(3), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    two = b.constant(jnp.array(2.0), name="two")
+    outs = while_loop(b,
+                      lambda i, x: b.less(i, lim),
+                      lambda i, x: [b.add(i, one), b.mul(x, two)],
+                      [i0, x0])
+    i, x = Session(b.graph).run(outs)
+    np.testing.assert_allclose(x, np.full((4,), 8.0))

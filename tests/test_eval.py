@@ -1,0 +1,40 @@
+"""Evaluation substrate: training moves perplexity/accuracy the right way."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset, batch_iterator
+from repro.eval import perplexity_eval, token_accuracy
+from repro.launch.steps import build_step
+from repro.models.api import Model
+from repro.models.params import init_params
+from repro.optim import adamw_init
+
+
+def test_perplexity_drops_with_training():
+    cfg = get_config("smollm-360m", smoke=True)
+    model = Model.for_config(cfg)
+    ds = SyntheticLMDataset(cfg.vocab_size, seq_len=32, seed=0)
+
+    sb = build_step(cfg, "train_4k",
+                    hparam_overrides={"compute_dtype": jnp.float32}, lr=2e-3)
+    params = init_params(sb.model.describe_params(), jax.random.PRNGKey(0))
+    variables = {"params": params, "opt": adamw_init(params)}
+
+    before = perplexity_eval(model, variables["params"],
+                             batch_iterator(ds, 4, 1000), max_batches=4)
+    assert 0.5 * cfg.vocab_size < before["perplexity"] < 2 * cfg.vocab_size
+
+    step = jax.jit(sb.fn)
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(8, i).items()}
+        _, variables = step(batch, variables)
+
+    after = perplexity_eval(model, variables["params"],
+                            batch_iterator(ds, 4, 1000), max_batches=4)
+    assert after["perplexity"] < 0.7 * before["perplexity"]
+
+    acc0 = token_accuracy(model, params, ds.batch(4, 2000))
+    acc1 = token_accuracy(model, variables["params"], ds.batch(4, 2000))
+    assert acc1 > acc0

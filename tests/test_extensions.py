@@ -1,0 +1,41 @@
+"""Extensions beyond the assignment: graph viz, extra pool archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import GraphBuilder
+from repro.tools.graphviz import collapse_summary, to_dot
+
+
+def test_graph_collapse_by_prefix_and_bookkeeping():
+    b = GraphBuilder()
+    w = b.variable("shared_w", init_value=lambda: jnp.ones(4))
+    for layer in range(3):
+        h = b.mul(w, w, name=f"layer{layer}/mul")
+        b.add(h, w, name=f"layer{layer}/add")
+    # shared_w has degree >= 8? 3*3=9 uses -> bookkeeping separation
+    blocks = collapse_summary(b.graph, depth=1, high_degree=8)
+    assert "layer0" in blocks and blocks["layer0"]["n_nodes"] == 2
+    assert "__bookkeeping__" in blocks
+    dot = to_dot(b.graph)
+    assert dot.startswith("digraph") and '"layer1"' in dot
+    assert "__bookkeeping__" in dot
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b"])
+def test_extra_pool_archs_smoke(arch):
+    from repro.launch.steps import build_step
+    from repro.models.params import init_params
+    from repro.optim import adamw_init
+
+    cfg = get_config(arch, smoke=True)
+    sb = build_step(cfg, "train_4k",
+                    hparam_overrides={"compute_dtype": jnp.float32})
+    rs = np.random.RandomState(0)
+    feeds = {"tokens": jnp.array(rs.randint(0, cfg.vocab_size, (2, 16)), jnp.int32),
+             "labels": jnp.array(rs.randint(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+    params = init_params(sb.model.describe_params(), jax.random.PRNGKey(0))
+    loss, _ = sb.fn(feeds, {"params": params, "opt": adamw_init(params)})
+    assert np.isfinite(float(loss))

@@ -1,0 +1,33 @@
+"""§2 'Operations and Kernels': per-device kernel registration — the
+Pallas matmul becomes the MatMul kernel on tpu-kind devices."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GraphBuilder, Session
+from repro.core.ops import REGISTRY
+from repro.kernels.ops import register_tpu_kernels
+
+
+def test_pallas_matmul_dispatched_for_tpu_device_kind():
+    register_tpu_kernels(interpret=True)  # interpret: kernel body on CPU
+    assert "tpu" in REGISTRY["MatMul"].kernels
+
+    b = GraphBuilder()
+    a = b.constant(jnp.ones((128, 128)), name="a")
+    m = b.matmul(a, a, name="mm")
+    out = b.reduce_sum(m)
+
+    # run the kernel through the executor with a tpu device_kind context
+    from repro.core.executor import ExecutionContext, run_kernel
+    from repro.runtime.containers import VariableStore
+
+    ctx = ExecutionContext(variables=VariableStore(), device_kind="tpu")
+    (res,) = run_kernel(ctx, b.graph.nodes["mm"],
+                        [jnp.ones((128, 128)), jnp.ones((128, 128))])
+    np.testing.assert_allclose(res, 128.0 * np.ones((128, 128)), rtol=1e-5)
+
+    # cpu context still uses the reference kernel
+    ctx_cpu = ExecutionContext(variables=VariableStore(), device_kind="cpu")
+    (res2,) = run_kernel(ctx_cpu, b.graph.nodes["mm"],
+                         [jnp.ones((128, 128)), jnp.ones((128, 128))])
+    np.testing.assert_allclose(res, res2, rtol=1e-5)

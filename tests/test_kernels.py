@@ -1,0 +1,169 @@
+"""Per-kernel allclose vs ref.py oracles, hypothesis shape/dtype sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([128, 256]),
+       st.sampled_from([128, 384]), st.sampled_from(_DTYPES),
+       st.integers(0, 2 ** 31 - 1))
+def test_matmul_sweep(m, n, k, dtype, seed):
+    rs = np.random.RandomState(seed)
+    a = jnp.array(rs.randn(m, k), dtype)
+    b = jnp.array(rs.randn(k, n), dtype)
+    got = matmul_pallas(a, b, bm=64, bn=128, bk=128, interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([8, 64, 256]), st.sampled_from([128, 384, 512]),
+       st.sampled_from(_DTYPES), st.integers(0, 2 ** 31 - 1))
+def test_rmsnorm_sweep(rows, d, dtype, seed):
+    rs = np.random.RandomState(seed)
+    x = jnp.array(rs.randn(rows, d), dtype)
+    w = jnp.array(rs.randn(d), dtype)
+    got = rmsnorm_pallas(x, w, br=8, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([(2, 128, 64), (4, 256, 64), (1, 256, 128)]),
+       st.booleans(), st.sampled_from([0, 64]),
+       st.sampled_from(_DTYPES), st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_sweep(dims, causal, window, dtype, seed):
+    bh, s, d = dims
+    if not causal and window:
+        window = 0
+    rs = np.random.RandomState(seed)
+    q = jnp.array(rs.randn(bh, s, d), dtype)
+    k = jnp.array(rs.randn(bh, s, d), dtype)
+    v = jnp.array(rs.randn(bh, s, d), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bq=64, bkv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_flash_attention_cross_lengths():
+    rs = np.random.RandomState(0)
+    q = jnp.array(rs.randn(2, 64, 64).astype("float32"))
+    k = jnp.array(rs.randn(2, 256, 64).astype("float32"))
+    v = jnp.array(rs.randn(2, 256, 64).astype("float32"))
+    got = flash_attention_pallas(q, k, v, causal=False, bq=64, bkv=64,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([(2, 64, 16, 8), (4, 128, 32, 16), (1, 64, 64, 32)]),
+       st.sampled_from([16, 32]), st.integers(0, 2 ** 31 - 1))
+def test_ssd_scan_sweep(dims, chunk, seed):
+    bh, s, p, n = dims
+    rs = np.random.RandomState(seed)
+    x = jnp.array((rs.randn(bh, s, p) * 0.5).astype("float32"))
+    dt = jnp.array((rs.rand(bh, s) * 0.5).astype("float32"))
+    a = -jnp.exp(jnp.array(rs.rand(bh).astype("float32")))
+    Bc = jnp.array((rs.randn(bh, s, n) * 0.3).astype("float32"))
+    Cc = jnp.array((rs.randn(bh, s, n) * 0.3).astype("float32"))
+    got = ssd_scan_pallas(x, dt, a, Bc, Cc, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(x, dt, a, Bc, Cc)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_wrapper_matches_model_layer():
+    """ops.ssd_scan (kernel layout adapter) == models.layers.ssd_chunked."""
+    from repro.models import layers as L
+
+    rs = np.random.RandomState(0)
+    B, S, H, P, G, N = 2, 64, 4, 16, 2, 8
+    x = jnp.array((rs.randn(B, S, H, P) * 0.5).astype("float32"))
+    dt = jnp.array((rs.rand(B, S, H) * 0.5).astype("float32"))
+    A_log = jnp.array(rs.rand(H).astype("float32"))
+    Bc = jnp.array((rs.randn(B, S, G, N) * 0.3).astype("float32"))
+    Cc = jnp.array((rs.randn(B, S, G, N) * 0.3).astype("float32"))
+    D = jnp.array(rs.randn(H).astype("float32"))
+    got = ops.ssd_scan(x, dt, A_log, Bc, Cc, D, chunk=16, interpret=True)
+    want, _ = L.ssd_chunked(x, dt, A_log, Bc, Cc, D, chunk=16)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_gqa_wrapper_matches_model_attention():
+    from repro.models import layers as L
+
+    rs = np.random.RandomState(1)
+    B, S, KV, G, Dh = 2, 128, 2, 2, 64
+    q = jnp.array(rs.randn(B, S, KV, G, Dh).astype("float32"))
+    k = jnp.array(rs.randn(B, S, KV, Dh).astype("float32"))
+    v = jnp.array(rs.randn(B, S, KV, Dh).astype("float32"))
+    pos = jnp.arange(S)
+    got = ops.flash_attention_gqa(q, k, v, causal=True, interpret=True)
+    want = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_compress16_sweep(kilo, seed):
+    rs = np.random.RandomState(seed)
+    x = jnp.array((rs.randn(kilo * 1024) * 10 ** rs.randint(-3, 3)
+                   ).astype("float32"))
+    w = ops.compress16(x, interpret=True)
+    assert bool(jnp.all(w == ref.compress16_ref(x)))
+    rt = ops.decompress16(w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rt),
+                                  np.asarray(ref.decompress16_ref(w)))
+    rel = np.abs(np.asarray(rt) - np.asarray(x)) / np.maximum(
+        np.abs(np.asarray(x)), 1e-30)
+    assert rel.max() <= 2 ** -7
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([(4, 256, 64), (2, 512, 128), (8, 128, 64)]),
+       st.sampled_from([64, 128]), st.integers(0, 2 ** 31 - 1))
+def test_flash_decode_sweep(dims, bkv, seed):
+    from repro.kernels.flash_decode import flash_decode_pallas
+
+    bh, t, d = dims
+    rs = np.random.RandomState(seed)
+    q = jnp.array(rs.randn(bh, d).astype("f"))
+    k = jnp.array(rs.randn(bh, t, d).astype("f"))
+    v = jnp.array(rs.randn(bh, t, d).astype("f"))
+    valid = jnp.array(rs.randint(1, t + 1, (bh,)), jnp.int32)
+    got = flash_decode_pallas(q, k, v, valid, bkv=bkv, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_zero_valid_rows_are_zero():
+    from repro.kernels.flash_decode import flash_decode_pallas
+
+    q = jnp.ones((2, 64))
+    k = jnp.ones((2, 128, 64))
+    v = jnp.ones((2, 128, 64))
+    valid = jnp.array([0, 128], jnp.int32)
+    out = flash_decode_pallas(q, k, v, valid, bkv=64, interpret=True)
+    np.testing.assert_allclose(out[0], np.zeros(64))
+    np.testing.assert_allclose(out[1], np.ones(64), rtol=1e-5)

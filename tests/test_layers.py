@@ -1,0 +1,206 @@
+"""Layer primitives: attention variants, SSD, conv, MoE, head planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, plan_padding
+
+
+def _qkv(seed=0, B=2, S=64, KV=4, G=2, Dh=16):
+    rs = np.random.RandomState(seed)
+    q = jnp.array(rs.randn(B, S, KV, G, Dh).astype("float32"))
+    k = jnp.array(rs.randn(B, S, KV, Dh).astype("float32"))
+    v = jnp.array(rs.randn(B, S, KV, Dh).astype("float32"))
+    return q, k, v
+
+
+def test_chunked_attention_equals_full():
+    q, k, v = _qkv()
+    pos = jnp.arange(64)
+    full = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True)
+    for chunk in (8, 16, 32):
+        ch = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True,
+                         q_chunk=chunk)
+        np.testing.assert_allclose(ch, full, rtol=1e-5, atol=1e-6)
+
+
+def test_window_attention_sliced_equals_masked():
+    q, k, v = _qkv()
+    pos = jnp.arange(64)
+    w = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True, window=16)
+    wc = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True, window=16,
+                     q_chunk=16)
+    np.testing.assert_allclose(w, wc, rtol=1e-5, atol=1e-6)
+
+
+def test_indivisible_q_chunk_falls_back():
+    q, k, v = _qkv(S=60)
+    pos = jnp.arange(60)
+    out = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True, q_chunk=16)
+    full = L.attention(q, k, v, pos_q=pos, pos_kv=pos, causal=True)
+    np.testing.assert_allclose(out, full, rtol=1e-5)
+
+
+def test_head_mask_zeroes_pad_slots():
+    q, k, v = _qkv()
+    hm = jnp.array([[1.0], [0.0], [1.0], [0.0]])[:, :, None] * jnp.ones((4, 2, 1))
+    hm = jnp.concatenate([jnp.ones((4, 1, 1)), jnp.zeros((4, 1, 1))], axis=1)
+    out = L.attention(q, k, v, pos_q=jnp.arange(64), pos_kv=jnp.arange(64),
+                      causal=True, head_mask=hm)
+    assert float(jnp.abs(out[:, :, :, 1]).max()) == 0.0
+    assert float(jnp.abs(out[:, :, :, 0]).max()) > 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([(14, 2), (40, 8), (15, 5), (25, 5), (20, 20),
+                        (96, 8), (32, 4), (16, 16), (64, 8)]),
+       st.sampled_from([1, 4, 8, 16]))
+def test_head_plan_properties(qkv, shard):
+    q0, kv0 = qkv
+    cfg = ModelConfig(arch_id="t", family="dense", n_layers=1, d_model=q0 * 64,
+                      n_heads=q0, n_kv_heads=kv0, d_ff=16, vocab_size=1000)
+    p = plan_padding(cfg, shard)
+    assert p.q_pad % shard == 0 and p.kv_pad % shard == 0
+    assert p.q_pad == p.kv_pad * p.group
+    assert p.q_pad >= q0 and p.kv_pad >= kv0
+    # head mask marks exactly q0 live slots
+    assert int(p.head_mask().sum()) == q0
+    # locality: q slot s attends kv slot s//group which duplicates the
+    # ORIGINAL kv parent of the original q head placed at s
+    dup = p.kv_dup_index()
+    g0 = q0 // kv0
+    for i, s in enumerate(p.q_slot_of_orig):
+        assert dup[s // p.group] == i // g0
+
+
+def test_duplicate_kv_preserves_values():
+    cfg = ModelConfig(arch_id="t", family="dense", n_layers=1, d_model=896,
+                      n_heads=14, n_kv_heads=2, d_ff=16, vocab_size=1000)
+    p = plan_padding(cfg, 16)
+    kv = jnp.array(np.random.RandomState(0).randn(1, 4, 2, 8).astype("f"))
+    d = L.duplicate_kv(kv, p)
+    assert d.shape == (1, 4, p.kv_pad, 8)
+    idx = p.kv_dup_index()
+    for slot in range(p.kv_pad):
+        np.testing.assert_array_equal(d[:, :, slot], kv[:, :, idx[slot]])
+
+
+def test_ssd_chunk_invariance_and_initial_state():
+    rs = np.random.RandomState(0)
+    B, S, H, P, G, N = 2, 64, 4, 8, 2, 16
+    x = jnp.array((rs.randn(B, S, H, P) * 0.5).astype("f"))
+    dt = jnp.array((rs.rand(B, S, H) * 0.5).astype("f"))
+    A_log = jnp.array(rs.rand(H).astype("f"))
+    Bc = jnp.array((rs.randn(B, S, G, N) * 0.3).astype("f"))
+    Cc = jnp.array((rs.randn(B, S, G, N) * 0.3).astype("f"))
+    D = jnp.array(rs.randn(H).astype("f"))
+    y8, h8 = L.ssd_chunked(x, dt, A_log, Bc, Cc, D, chunk=8)
+    y32, h32 = L.ssd_chunked(x, dt, A_log, Bc, Cc, D, chunk=32)
+    np.testing.assert_allclose(y8, y32, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h8, h32, rtol=1e-4, atol=1e-5)
+    # split in two halves chained via initial_state == one pass
+    y1, h1 = L.ssd_chunked(x[:, :32], dt[:, :32], A_log, Bc[:, :32],
+                           Cc[:, :32], D, chunk=8)
+    y2, h2 = L.ssd_chunked(x[:, 32:], dt[:, 32:], A_log, Bc[:, 32:],
+                           Cc[:, 32:], D, chunk=8, initial_state=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y8,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_no_drop_matches_dense_reference():
+    rs = np.random.RandomState(0)
+    Gr, T, Dm, E, F, K = 2, 32, 16, 8, 32, 2
+    xm = jnp.array(rs.randn(Gr, T, Dm).astype("f"))
+    rw = jnp.array(rs.randn(Dm, E).astype("f") * 0.1)
+    w1 = jnp.array(rs.randn(E, Dm, F).astype("f") * 0.1)
+    w3 = jnp.array(rs.randn(E, Dm, F).astype("f") * 0.1)
+    w2 = jnp.array(rs.randn(E, F, Dm).astype("f") * 0.1)
+    out, stats = L.moe_ffn(xm, rw, w1, w3, w2, n_experts=E, top_k=K,
+                           capacity_factor=100.0)
+    assert float(stats.frac_dropped) == 0.0
+    logits = xm @ rw
+    probs = jax.nn.softmax(logits, -1)
+    gv, ei = jax.lax.top_k(probs, K)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros((Gr, T, Dm), "f")
+    for g in range(Gr):
+        for t in range(T):
+            for kk in range(K):
+                e = int(ei[g, t, kk])
+                h = np.asarray(xm[g, t]) @ np.asarray(w1[e])
+                gt = np.asarray(xm[g, t]) @ np.asarray(w3[e])
+                act = gt / (1 + np.exp(-gt))
+                want[g, t] += float(gv[g, t, kk]) * ((act * h) @ np.asarray(w2[e]))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_and_aux_loss():
+    rs = np.random.RandomState(0)
+    Gr, T, Dm, E, F = 1, 64, 8, 4, 16
+    # positive activations + positive col-0 router -> everyone picks e0
+    xm = jnp.array(np.abs(rs.randn(Gr, T, Dm)).astype("f") + 0.1)
+    rw = jnp.zeros((Dm, E)).at[:, 0].set(5.0)
+    w1 = jnp.array(rs.randn(E, Dm, F).astype("f") * 0.1)
+    w3 = jnp.array(rs.randn(E, Dm, F).astype("f") * 0.1)
+    w2 = jnp.array(rs.randn(E, F, Dm).astype("f") * 0.1)
+    out, stats = L.moe_ffn(xm, rw, w1, w3, w2, n_experts=E, top_k=1,
+                           capacity_factor=1.0)
+    assert float(stats.frac_dropped) > 0.4  # most tokens overflow expert 0
+    assert float(stats.aux_loss) > 2.0      # unbalanced >> balanced (=1)
+    # balanced router aux -> ~1
+    rw_b = jnp.array(rs.randn(Dm, E).astype("f") * 0.01)
+    _, stats_b = L.moe_ffn(xm, rw_b, w1, w3, w2, n_experts=E, top_k=1,
+                           capacity_factor=4.0)
+    assert float(stats_b.aux_loss) < float(stats.aux_loss)
+
+
+def test_padded_experts_never_selected():
+    rs = np.random.RandomState(0)
+    Gr, T, Dm, E_real, E_pad, F = 1, 32, 8, 3, 4, 16
+    xm = jnp.array(rs.randn(Gr, T, Dm).astype("f"))
+    rw = jnp.array(rs.randn(Dm, E_pad).astype("f"))
+    w1 = jnp.array(rs.randn(E_pad, Dm, F).astype("f") * 0.1)
+    w3 = jnp.array(rs.randn(E_pad, Dm, F).astype("f") * 0.1)
+    w2 = jnp.array(rs.randn(E_pad, F, Dm).astype("f") * 0.1)
+    out, _ = L.moe_ffn(xm, rw, w1, w3, w2, n_experts=E_real, top_k=2,
+                       capacity_factor=50.0)
+    # poisoning the pad expert's weights must not change the output
+    w2_poison = w2.at[E_real:].set(1e6)
+    out2, _ = L.moe_ffn(xm, rw, w1, w3, w2_poison, n_experts=E_real, top_k=2,
+                        capacity_factor=50.0)
+    np.testing.assert_allclose(out, out2)
+
+
+def test_conv_decode_matches_train():
+    rs = np.random.RandomState(0)
+    B, S, C, K = 2, 32, 6, 4
+    x = jnp.array(rs.randn(B, S, C).astype("f"))
+    w = jnp.array(rs.randn(C, K).astype("f"))
+    full, _ = L.causal_conv1d(x, w)
+    cache = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(S):
+        y, cache = L.causal_conv1d(x[:, t:t + 1], w, cache)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    rs = np.random.RandomState(0)
+    x = jnp.array(rs.randn(1, 8, 2, 32).astype("f"))
+    pos = jnp.arange(8)
+    y = L.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.array(rs.randn(1, 1, 1, 32).astype("f"))
+    k = jnp.array(rs.randn(1, 1, 1, 32).astype("f"))
+    def dot_at(i, j):
+        qi = L.rope(jnp.broadcast_to(q, (1, 1, 1, 32)), jnp.array([i]), 1e4)
+        kj = L.rope(jnp.broadcast_to(k, (1, 1, 1, 32)), jnp.array([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-4)

@@ -1,0 +1,90 @@
+"""§10 lowering: eager == compiled (incl. property over random graphs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBuilder, Session, compile_subgraph, LoweringError
+
+
+def test_variable_update_parity_with_eager():
+    def build():
+        b = GraphBuilder()
+        v = b.variable("v", init_value=lambda: jnp.array(2.0))
+        g = b.mul(v, b.constant(jnp.array(3.0), name="k"))
+        upd = b.assign_add(v, b.neg(g))
+        return b, v, g, upd
+
+    b, v, g, upd = build()
+    sess = Session(b.graph)
+    for _ in range(3):
+        sess.run(upd.ref)
+    eager_v = float(sess.variable_value("v"))
+
+    b2, v2, g2, upd2 = build()
+    low = compile_subgraph(Session(b2.graph), [upd2.ref], [])
+    vals = {"v": jnp.array(2.0)}
+    for _ in range(3):
+        _, new = low.fn({}, vals)
+        vals.update(new)
+    assert float(vals["v"]) == pytest.approx(eager_v)
+
+
+def test_lowered_fn_is_jittable():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    y = b.add(b.square(x), b.constant(jnp.array(1.0), name="c"))
+    low = compile_subgraph(Session(b.graph), [y.ref], [x.ref])
+    jf = jax.jit(low.fn)
+    (out,), _ = jf({"x:0": jnp.array(3.0)}, {})
+    assert float(out) == 10.0
+
+
+def test_unsupported_ops_raise():
+    b = GraphBuilder()
+    v = b.variable("v", init_value=lambda: jnp.array(1.0))
+    save = b.save([v], "ckpt/x")
+    sess = Session(b.graph)
+    low = compile_subgraph(sess, [save.ref], [])
+    with pytest.raises(LoweringError):
+        low.fn({}, {"v": jnp.array(1.0)})
+
+
+def test_cse_runs_in_lowering():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    m1 = b.mul(x, x, name="m1")
+    m2 = b.mul(x, x, name="m2")
+    s = b.add(m1, m2)
+    low = compile_subgraph(Session(b.graph), [s.ref], [x.ref])
+    assert low.n_nodes < 4  # one of m1/m2 eliminated
+    (out,), _ = low.fn({"x:0": jnp.array(2.0)}, {})
+    assert float(out) == 8.0
+
+
+_OPS = ["add", "sub", "mul", "square", "tanh", "relu", "neg"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(_OPS), min_size=1, max_size=10),
+       st.integers(0, 2 ** 31 - 1))
+def test_eager_equals_compiled_property(opseq, seed):
+    rs = np.random.RandomState(seed)
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    vals = [x.ref]
+    for i, op in enumerate(opseq):
+        if op in ("add", "sub", "mul"):
+            s1 = vals[rs.randint(len(vals))]
+            s2 = vals[rs.randint(len(vals))]
+            vals.append(getattr(b, op)(s1, s2, name=f"n{i}").ref)
+        else:
+            vals.append(getattr(b, op)(vals[rs.randint(len(vals))], name=f"n{i}").ref)
+    out = b.reduce_sum(vals[-1], name="out")
+    xin = jnp.array(rs.randn(4).astype("float32"))
+    sess = Session(b.graph)
+    eager = sess.run(out.ref, {x.ref: xin})
+    (compiled,), _ = compile_subgraph(sess, [out.ref], [x.ref]).fn(
+        {"x:0": xin}, {})
+    np.testing.assert_allclose(eager, compiled, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,139 @@
+"""§3.2 placement + Send/Recv partitioning + §5.2 scheduling."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session, TensorRef
+from repro.core import placement as pl
+from repro.core import partition as pt
+from repro.core import scheduler as sched
+from repro.runtime.devices import DeviceSet, DeviceName, Device
+
+
+def _two_workers():
+    return DeviceSet.make_cluster(2, 1, kind="cpu")
+
+
+def test_device_name_parsing_roundtrip():
+    n = DeviceName.parse("/job:worker/task:17/device:gpu:3")
+    assert (n.job, n.task, n.kind, n.index) == ("worker", 17, "gpu", 3)
+    assert str(n) == "/job:worker/task:17/device:gpu:3"
+
+
+def test_constraint_restricts_placement():
+    b = GraphBuilder()
+    c = b.constant(jnp.ones((4,)), name="c",
+                   device="/job:worker/task:1")
+    d = b.square(c, name="d")
+    devs = _two_workers()
+    place = pl.place(b.graph, devs)
+    assert place["c"].startswith("/job:worker/task:1")
+
+
+def test_colocation_union_find():
+    b = GraphBuilder()
+    v = b.variable("v", init_value=lambda: jnp.zeros(4),
+                   device="/job:worker/task:0")
+    upd = b.assign_add(v, b.constant(jnp.ones(4), name="delta"))
+    other = b.constant(jnp.ones(2), name="other")
+    other.attrs["colocate_with"] = "v"
+    devs = _two_workers()
+    place = pl.place(b.graph, devs)
+    assert place["v"] == place[upd.name] == place["other"]
+
+
+def test_infeasible_colocation_raises():
+    b = GraphBuilder()
+    a = b.constant(1.0, name="a", device="/job:worker/task:0")
+    c = b.constant(2.0, name="c", device="/job:worker/task:1")
+    c.attrs["colocate_with"] = "a"
+    with pytest.raises(pl.PlacementError):
+        pl.place(b.graph, _two_workers())
+
+
+def test_greedy_placement_prefers_fast_device():
+    devs = DeviceSet([
+        Device(DeviceName(kind="cpu", index=0), flops_per_sec=1e9, bytes_per_sec=1e9),
+        Device(DeviceName(job="worker", kind="tpu", index=0),
+               flops_per_sec=1e14, bytes_per_sec=1e12),
+    ])
+    b = GraphBuilder()
+    a = b.constant(jnp.ones((64, 64)), name="a")
+    m = b.matmul(a, a, name="m")
+    cm = pl.CostModel()
+    cm.measured_bytes[("a", 0)] = 64 * 64 * 4
+    place = pl.place(b.graph, devs, cm)
+    assert "tpu" in place["m"]
+
+
+def test_partition_canonicalizes_one_recv_per_tensor_devpair():
+    """§3.2.2: b and c consume the same remote tensor -> ONE transfer."""
+    b = GraphBuilder()
+    x = b.constant(jnp.ones((4,)), name="x", device="/job:worker/task:0")
+    u = b.square(x, name="u", device="/job:worker/task:1")
+    w = b.neg(x, name="w", device="/job:worker/task:1")
+    place = {"x": "/job:worker/task:0/device:cpu:0",
+             "u": "/job:worker/task:1/device:cpu:0",
+             "w": "/job:worker/task:1/device:cpu:0"}
+    parted = pt.partition(b.graph, place)
+    sends = [n for n in parted.graph.nodes.values() if n.op == "Send"]
+    recvs = [n for n in parted.graph.nodes.values() if n.op == "Recv"]
+    assert len(sends) == 1 and len(recvs) == 1
+    assert parted.n_transfers == 1
+
+
+def test_partition_same_device_needs_no_transfer():
+    b = GraphBuilder()
+    x = b.constant(jnp.ones((4,)), name="x")
+    u = b.square(x, name="u")
+    place = {"x": "/job:localhost/task:0/device:cpu:0",
+             "u": "/job:localhost/task:0/device:cpu:0"}
+    parted = pt.partition(b.graph, place)
+    assert parted.n_transfers == 0
+
+
+def test_multi_device_execution_matches_single():
+    b = GraphBuilder()
+    c1 = b.constant(jnp.ones((4, 4)), name="c1", device="/job:worker/task:0")
+    c2 = b.constant(2 * jnp.ones((4, 4)), name="c2", device="/job:worker/task:1")
+    mm = b.matmul(c1, c2, name="mm")
+    out = b.reduce_sum(mm)
+    single = Session(b.graph)
+    multi = Session(b.graph, devices=_two_workers())
+    assert float(single.run(out.ref)) == float(multi.run(out.ref)) == 128.0
+
+
+def test_multi_device_with_compression_stays_close():
+    b = GraphBuilder()
+    c1 = b.constant(jnp.linspace(0.1, 1.0, 16).reshape(4, 4), name="c1",
+                    device="/job:worker/task:0")
+    sq = b.square(c1, name="sq", device="/job:worker/task:1")
+    sess = Session(b.graph, devices=_two_workers())
+    node_set = sess.pruned_nodes([sq.ref], {})
+    from repro.core import distributed_runner as dr
+
+    (out,) = dr.run_partitioned(sess, node_set, [sq.ref], {}, compress=True)
+    np.testing.assert_allclose(out, np.linspace(0.1, 1.0, 16).reshape(4, 4) ** 2,
+                               rtol=2 ** -6)
+
+
+def test_scheduler_delays_recv():
+    """§5.2: a Recv with slack gets a delaying control edge."""
+    b = GraphBuilder()
+    x = b.constant(jnp.ones((4,)), name="x", device="/job:worker/task:0")
+    # long local chain on task:1
+    a = b.constant(jnp.ones((4,)), name="a", device="/job:worker/task:1")
+    c1 = b.square(a, name="c1", device="/job:worker/task:1")
+    c2 = b.square(c1, name="c2", device="/job:worker/task:1")
+    c3 = b.square(c2, name="c3", device="/job:worker/task:1")
+    # the remote value is needed only at the very end
+    final = b.add(c3, x, name="final", device="/job:worker/task:1")
+    devs = _two_workers()
+    place = pl.place(b.graph, devs)
+    parted = pt.partition(b.graph, place)
+    added = sched.schedule_recvs(parted.graph, set(parted.graph.nodes),
+                                 pl.CostModel(), devs, parted.placement)
+    recvs = [n for n in parted.graph.nodes.values() if n.op == "Recv"]
+    assert len(recvs) == 1
+    assert added >= 1
+    assert recvs[0].control_inputs  # delayed until just before needed

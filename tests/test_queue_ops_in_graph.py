@@ -1,0 +1,65 @@
+"""§4.6 queue OPS inside graphs (async kernels, §5.3): Enqueue/Dequeue
+nodes coordinate producer and consumer graphs through a shared queue."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GraphBuilder, Session
+from repro.runtime.queues import FIFOQueue
+
+
+def test_enqueue_dequeue_ops_between_sessions():
+    q = FIFOQueue(capacity=4, timeout=5.0)
+
+    # producer graph: enqueue a computed tensor
+    bp = GraphBuilder()
+    x = bp.placeholder("x")
+    sq = bp.square(x, name="sq")
+    enq = bp.graph.add_node("QueueEnqueue", [sq], name="enq",
+                            attrs={"queue": "q"})
+    prod = Session(bp.graph)
+    prod.register_queue("q", q)
+
+    # consumer graph: dequeue and keep computing
+    bc = GraphBuilder()
+    deq = bc.graph.add_node("QueueDequeue", [], name="deq",
+                            attrs={"queue": "q", "n_components": 1})
+    out = bc.reduce_sum(deq, name="out")
+    cons = Session(bc.graph)
+    cons.register_queue("q", q)
+
+    results = []
+
+    def consume():
+        for _ in range(3):
+            results.append(float(cons.run(out.ref)))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    for v in (2.0, 3.0, 4.0):
+        prod.run(enq.ref, {x.ref: jnp.full((2,), v)})
+    t.join(timeout=10)
+    assert results == [8.0, 18.0, 32.0]  # 2*v^2 in arrival order
+
+
+def test_queue_as_gradient_accumulator():
+    """§4.6: 'accumulating many gradients ... over a larger batch'."""
+    from repro.core import gradients
+
+    q = FIFOQueue(capacity=16, timeout=5.0)
+    b = GraphBuilder()
+    W = b.variable("W", init_value=lambda: jnp.array([[2.0]]))
+    x = b.placeholder("x")
+    loss = b.reduce_mean(b.square(b.matmul(x, W)), name="loss")
+    (gW,) = gradients(b.graph, [loss], [W])
+    enq = b.graph.add_node("QueueEnqueue", [gW], name="enq",
+                           attrs={"queue": "gq"})
+    sess = Session(b.graph)
+    sess.register_queue("gq", q)
+    for v in (1.0, 2.0, 3.0):
+        sess.run(enq.ref, {x.ref: jnp.array([[v]])})
+    grads = q.dequeue_many(3)  # each entry is the enqueue's value tuple
+    combined = sum(np.asarray(g[0]) for g in grads) / 3
+    # d/dW mean((xW)^2) = 2 x^2 W ; mean over {1,4,9} = 2*2*14/3
+    np.testing.assert_allclose(combined, [[2 * 2.0 * (1 + 4 + 9) / 3]])

@@ -1,0 +1,128 @@
+"""§4.6 queues, §4.7 containers, §3.2.2 rendezvous."""
+import threading
+import time
+
+import pytest
+
+from repro.runtime.queues import FIFOQueue, ShufflingQueue, QueueClosed
+from repro.runtime.containers import Container, ContainerManager, VariableStore
+from repro.runtime.rendezvous import Rendezvous, make_key
+
+
+def test_fifo_order_and_blocking_dequeue():
+    q = FIFOQueue(capacity=4, timeout=2.0)
+    got = []
+
+    def consumer():
+        got.append(q.dequeue())
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    q.enqueue(42)
+    t.join(timeout=2)
+    assert got == [42]
+    q.enqueue_many([1, 2, 3])
+    assert [q.dequeue() for _ in range(3)] == [1, 2, 3]
+
+
+def test_enqueue_blocks_until_space():
+    q = FIFOQueue(capacity=1, timeout=2.0)
+    q.enqueue("a")
+    done = []
+
+    def producer():
+        q.enqueue("b")  # must block until a dequeue
+        done.append(True)
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)
+    assert not done
+    assert q.dequeue() == "a"
+    t.join(timeout=2)
+    assert done and q.dequeue() == "b"
+
+
+def test_dequeue_many_waits_for_minimum():
+    q = FIFOQueue(capacity=8, timeout=2.0)
+    res = []
+
+    def consumer():
+        res.extend(q.dequeue_many(3))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    q.enqueue(1)
+    q.enqueue(2)
+    time.sleep(0.05)
+    assert not res  # still waiting for the 3rd
+    q.enqueue(3)
+    t.join(timeout=2)
+    assert res == [1, 2, 3]
+
+
+def test_shuffling_queue_permutes():
+    q = ShufflingQueue(capacity=128, seed=0, timeout=1.0)
+    items = list(range(64))
+    q.enqueue_many(items)
+    q.close()
+    out = [q.dequeue() for _ in range(64)]
+    assert sorted(out) == items
+    assert out != items  # shuffled
+
+
+def test_closed_queue_raises():
+    q = FIFOQueue(timeout=0.2)
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.dequeue()
+
+
+def test_containers_share_state_across_sessions_and_reset():
+    """§4.7: state shared across disjoint graphs; named containers reset."""
+    import jax.numpy as jnp
+    from repro.core import GraphBuilder, Session
+
+    mgr = ContainerManager()
+    b1 = GraphBuilder()
+    v1 = b1.variable("shared_v", init_value=lambda: jnp.array(1.0),
+                     container="exp1")
+    s1 = Session(b1.graph, containers=mgr)
+    s1.run(b1.assign(v1, b1.constant(jnp.array(5.0), name="c")).ref)
+
+    b2 = GraphBuilder()
+    v2 = b2.variable("shared_v", init_value=lambda: jnp.array(1.0),
+                     container="exp1")
+    s2 = Session(b2.graph, containers=mgr)
+    assert float(s2.run(v2.ref)) == 5.0  # sees s1's write
+
+    mgr.reset("exp1")
+    assert float(s2.run(v2.ref)) == 1.0  # re-initialized after reset
+
+
+def test_rendezvous_send_recv_and_duplicate_send():
+    r = Rendezvous(timeout=1.0)
+    key = make_key("x:0", "/job:a", "/job:b")
+    r.send(key, 123)
+    with pytest.raises(RuntimeError):
+        r.send(key, 456)
+    assert r.recv(key) == 123
+    with pytest.raises(TimeoutError):
+        r.recv(make_key("y:0", "/job:a", "/job:b"))
+
+
+def test_rendezvous_cross_thread():
+    r = Rendezvous(timeout=2.0)
+    key = make_key("t:0", "/job:a", "/job:b")
+    out = []
+
+    def rx():
+        out.append(r.recv(key))
+
+    t = threading.Thread(target=rx)
+    t.start()
+    time.sleep(0.05)
+    r.send(key, "payload")
+    t.join(timeout=2)
+    assert out == ["payload"]

@@ -1,0 +1,64 @@
+"""§9 tools: summaries (TensorBoard analogue) + EEG-style tracing."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GraphBuilder, Session
+from repro.tools import (SummaryWriter, attach_scalar_summary, read_events,
+                         Tracer, chrome_trace)
+from repro.tools.summary import attach_histogram_summary
+
+
+def test_scalar_summary_nodes_and_log_roundtrip(tmp_path):
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    loss = b.reduce_mean(b.square(x), name="loss")
+    s1 = attach_scalar_summary(b, loss, "loss")
+    s2 = attach_histogram_summary(b, x, "x_hist", bins=4)
+    sess = Session(b.graph)
+    w = SummaryWriter(str(tmp_path), flush_every=1)
+    for step in range(5):
+        xv = jnp.full((8,), float(step))
+        vals = sess.run([s1.ref, s2.ref], {x.ref: xv})
+        w.add_fetched(step, [s1, s2], vals)
+    w.close()
+    events = read_events(str(tmp_path), tag="loss")
+    assert [t for t, _ in events["loss"]] == [0, 1, 2, 3, 4]
+    assert events["loss"][3][1] == 9.0  # mean(3^2)
+    wall = read_events(str(tmp_path), tag="loss", time_axis="wall_time")
+    assert all(t2 >= t1 for (t1, _), (t2, _) in
+               zip(wall["loss"], wall["loss"][1:]))
+
+
+def test_tracer_records_kernels_and_chrome_format():
+    b = GraphBuilder()
+    a = b.constant(jnp.ones((16, 16)), name="a")
+    m = b.matmul(a, a, name="mm")
+    out = b.reduce_sum(m, name="out")
+    tr = Tracer()
+    Session(b.graph).run(out.ref, tracer=tr)
+    ops = {e["op"] for e in tr.events}
+    assert "MatMul" in ops and "ReduceSum" in ops
+    summ = tr.summarize()
+    assert summ["MatMul"]["count"] == 1
+    doc = json.loads(chrome_trace(tr))
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert any("MatMul:mm" in n for n in names)
+
+
+def test_tracer_multi_device_lanes():
+    from repro.runtime.devices import DeviceSet
+
+    b = GraphBuilder()
+    c1 = b.constant(jnp.ones((4, 4)), name="c1", device="/job:worker/task:0")
+    c2 = b.constant(jnp.ones((4, 4)), name="c2", device="/job:worker/task:1")
+    mm = b.matmul(c1, c2, name="mm")
+    out = b.reduce_sum(mm)
+    tr = Tracer()
+    sess = Session(b.graph, devices=DeviceSet.make_cluster(2, 1, kind="cpu"))
+    sess.run(out.ref, tracer=tr)
+    devices = {e["device"] for e in tr.events}
+    assert len(devices) == 2  # one lane per worker (Fig. 12-14 style)
+    assert any(e["op"] in ("Send", "Recv") for e in tr.events)
