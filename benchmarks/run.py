@@ -256,6 +256,45 @@ def bench_roofline_table():
         emit("b10_roofline_worst", worst[1] * 1e6, worst[0])
 
 
+def bench_executable_cache():
+    """DESIGN.md §5: steady-state Session.run steps/sec, cached Executable
+    vs rebuilding prune/place/partition/schedule/executors every run, on a
+    2-worker graph (the paper's "caches these graphs" master optimisation)."""
+    from repro.core import GraphBuilder, Session
+    from repro.runtime.devices import DeviceSet
+
+    def build_graph(n_remote=96):
+        # fan-in: many remote tensors consumed along a local chain — lots
+        # of Recvs, so the §3.2.1/§3.2.2/§5.2 build passes dominate the
+        # uncached path while per-run execution stays cheap
+        b = GraphBuilder()
+        remotes = [b.constant(jnp.ones((4, 4)), name=f"r{i}",
+                              device="/job:worker/task:0")
+                   for i in range(n_remote)]
+        cur = b.constant(jnp.ones((4, 4)), name="seed",
+                         device="/job:worker/task:1")
+        for i, r in enumerate(remotes):
+            cur = b.add(b.mul(cur, cur, name=f"m{i}",
+                              device="/job:worker/task:1"),
+                        r, name=f"u{i}", device="/job:worker/task:1")
+        out = b.reduce_sum(cur, name="out", device="/job:worker/task:1")
+        return b.graph, out
+
+    g1, out1 = build_graph()
+    g2, out2 = build_graph()
+    cached = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"))
+    uncached = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+                       max_cached_executables=0)
+    us_uncached = _timeit(lambda: uncached.run(out2.ref), n=8, warmup=2)
+    us_cached = _timeit(lambda: cached.run(out1.ref), n=8, warmup=2)
+    sps_cached = 1e6 / us_cached
+    sps_uncached = 1e6 / us_uncached
+    emit("b12_run_uncached", us_uncached, f"{sps_uncached:.0f}steps/s")
+    emit("b12_run_cached_executable", us_cached,
+         f"{sps_cached:.0f}steps/s,speedup={us_uncached / us_cached:.1f}x,"
+         f"hits={cached.cache_stats['hits']}")
+
+
 BENCHES = [
     bench_session_run_overhead,
     bench_compiled_vs_eager,
@@ -267,16 +306,48 @@ BENCHES = [
     bench_kernels,
     bench_train_throughput,
     bench_roofline_table,
+    bench_executable_cache,
 ]
 
 
-def main() -> None:
+def write_json(path: str) -> None:
+    """Persist the run as BENCH_*.json so perf wins are tracked across PRs."""
+    rec = {name: {"us_per_call": us, "derived": derived}
+           for name, us, derived in ROWS}
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    ap.add_argument("--json", default=None,
+                    help="path for the BENCH_*.json artifact ('' disables; "
+                         "default: BENCH_latest.json for full runs, disabled "
+                         "for --only runs so a filtered subset never "
+                         "clobbers the tracked artifact)")
+    args = ap.parse_args(argv)
+    if args.json is None:
+        args.json = "" if args.only else os.path.join(
+            os.path.dirname(__file__), "BENCH_latest.json")
     print("name,us_per_call,derived")
     for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
         try:
             bench()
         except Exception as e:  # noqa: BLE001
             emit(f"FAIL_{bench.__name__}", -1.0, repr(e)[:80])
+    failed = [name for name, _us, _d in ROWS if name.startswith("FAIL_")]
+    if args.json and failed:
+        print(f"# not writing {args.json}: {len(failed)} benchmark(s) failed "
+              f"({', '.join(failed)}) — keeping the last good artifact", flush=True)
+    elif args.json:
+        write_json(args.json)
 
 
 

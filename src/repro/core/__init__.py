@@ -10,6 +10,7 @@ Public surface:
 """
 from .graph import Graph, Node, TensorRef, GraphError, as_ref
 from .ops import GraphBuilder, register, register_gradient, register_kernel, REGISTRY
+from .executable import Executable, ExecutableCache, RunSignature
 from .session import Session
 from .autodiff import gradients
 from .control_flow import while_loop, cond
@@ -18,6 +19,7 @@ from .lowering import compile_subgraph, Lowered, LoweringError
 __all__ = [
     "Graph", "Node", "TensorRef", "GraphError", "as_ref",
     "GraphBuilder", "register", "register_gradient", "register_kernel", "REGISTRY",
+    "Executable", "ExecutableCache", "RunSignature",
     "Session", "gradients", "while_loop", "cond",
     "compile_subgraph", "Lowered", "LoweringError",
 ]

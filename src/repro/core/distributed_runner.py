@@ -1,22 +1,23 @@
-"""§3.2/§3.3 multi-device eager execution: place -> partition -> run.
+"""§3.2/§3.3 multi-device eager execution — thin front of the Executable.
 
-One Executor per device, each in its own thread (the paper's per-worker
-decentralised scheduling: the master issues a single Run per participating
-device and Send/Recv impart all cross-device synchronisation).  All
-executors share the Session's variable store, queues, and a per-run
-rendezvous.
+Historically this module re-ran place -> partition -> schedule and rebuilt
+per-device executors on every call.  That whole pipeline now lives in
+:class:`repro.core.executable.Executable`, which prepares the worker
+structure once and reuses it across runs (the paper's master-side graph
+cache, DESIGN.md §5); ``run_partitioned`` survives as a compatibility
+entry point that builds a one-off Executable and runs it.
+
+Worker failure semantics (§3.3): any worker exception aborts the whole
+graph execution; workers that never finish within ``timeout`` raise an
+:class:`~repro.core.executor.ExecutorError` naming the stuck device(s)
+instead of silently dropping their fetches.
 """
 from __future__ import annotations
 
-import threading
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 from .graph import TensorRef
-from .executor import ExecutionContext, Executor
-from . import placement as placement_mod
-from . import partition as partition_mod
-from . import scheduler as scheduler_mod
-from ..runtime.rendezvous import Rendezvous
+from .executable import Executable
 
 
 def run_partitioned(
@@ -28,60 +29,9 @@ def run_partitioned(
     compress: bool = False,
     cost_model=None,
     tracer=None,
+    timeout: float = 60.0,
 ) -> List[Any]:
-    g = session.graph
-    devices = session.devices
-    cm = cost_model or placement_mod.CostModel()
-
-    place = placement_mod.place(g, devices, cm, node_set)
-    parted = partition_mod.partition(g, place, node_set, compress=compress)
-    scheduler_mod.schedule_recvs(
-        parted.graph, set(parted.graph.nodes), cm, devices, parted.placement)
-
-    run_rdv = Rendezvous()
-    results: Dict[int, Any] = {}
-    errors: List[BaseException] = []
-    lock = threading.Lock()
-
-    # fetches grouped by owning device
-    fetch_by_dev: Dict[str, List[int]] = {}
-    for i, ref in enumerate(fetch_refs):
-        dev = parted.placement[ref.node]
-        fetch_by_dev.setdefault(dev, []).append(i)
-
-    def worker(dev_name: str, names: Set[str]) -> None:
-        ctx = ExecutionContext(
-            variables=session.variables,
-            rendezvous=run_rdv,
-            queues=session.queues,
-            checkpoint_io=session.checkpoint_io,
-            device_kind=dev_name.split("device:")[-1].split(":")[0],
-        )
-        local_trace: Optional[List[str]] = [] if trace is not None else None
-        ex = Executor(parted.graph, ctx, node_filter=names, trace=local_trace,
-                      tracer=tracer, device_label=dev_name)
-        idxs = fetch_by_dev.get(dev_name, [])
-        local_fetches = [fetch_refs[i] for i in idxs]
-        try:
-            vals = ex.run(local_fetches, feeds)
-            with lock:
-                for i, v in zip(idxs, vals):
-                    results[i] = v
-                if trace is not None:
-                    trace.extend(local_trace or [])
-        except BaseException as e:  # noqa: BLE001 — §3.3: surface any worker failure
-            with lock:
-                errors.append(e)
-
-    threads = [
-        threading.Thread(target=worker, args=(dev, names), daemon=True)
-        for dev, names in parted.device_nodes.items()
-    ]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join(timeout=60.0)
-    if errors:
-        # §3.3 fault tolerance: abort the whole graph execution on any failure
-        raise errors[0]
-    return [results[i] for i in range(len(fetch_refs))]
+    exe = Executable(session, fetch_refs, feeds.keys(), node_set=node_set,
+                     compress=compress, cost_model=cost_model,
+                     force_partitioned=True)
+    return exe.run(feeds, trace=trace, tracer=tracer, timeout=timeout)

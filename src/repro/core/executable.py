@@ -1,0 +1,264 @@
+"""Compile-once / run-many Executables (§3.2, §4.2; DESIGN.md §5).
+
+The paper's master "caches these graphs so that subsequent uses incur no
+recomputation overhead": pruning, placement, partitioning and Recv
+scheduling happen once per *run signature* — the (fetches, fed-tensor
+keys, device set, graph version) tuple — not once per ``Session.run``.
+
+An :class:`Executable` is the cached product of that pipeline:
+
+* the pruned node set (§4.2 feed/fetch rewrite),
+* for multi-device graphs: the placement (§3.2.1), the partitioned
+  graph with canonicalised Send/Recv pairs (§3.2.2) and the §5.2 Recv
+  schedule,
+* one *reusable* :class:`~repro.core.executor.Executor` per device —
+  executors hold only immutable static analysis, so the same Executable
+  can run repeatedly and concurrently; each ``run`` allocates nothing
+  but per-run :class:`~repro.core.executor.ExecutorState` (plus a fresh
+  rendezvous for multi-device runs).
+
+:class:`ExecutableCache` is the small thread-safe LRU the Session keys
+by :class:`RunSignature`.  The serving layer applies the same
+compile-once/run-many discipline with a lighter mechanism — the batcher
+caches its jitted slot step directly on the model instance
+(serving/batcher.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, FrozenSet, Hashable, List, Optional, Sequence, Set, Tuple
+
+from .graph import TensorRef
+from .executor import ExecutionContext, Executor, ExecutorError
+from . import placement as placement_mod
+from . import partition as partition_mod
+from . import scheduler as scheduler_mod
+from ..runtime.rendezvous import Rendezvous
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSignature:
+    """Cache key for one prepared run pipeline (DESIGN.md §5).
+
+    Two ``Session.run`` calls share an Executable iff they fetch the same
+    tensors, feed the same tensor *keys* (values differ per run), see the
+    same device set, and the graph has not been extended in between.
+    """
+
+    fetches: Tuple[TensorRef, ...]
+    feed_keys: FrozenSet[TensorRef]
+    device_fingerprint: Tuple[str, ...]
+    graph_version: int
+
+    @staticmethod
+    def for_session(session, fetch_refs: Sequence[TensorRef],
+                    feed_keys) -> "RunSignature":
+        devs = session.devices
+        fp = devs.fingerprint() if devs is not None else ()
+        return RunSignature(
+            fetches=tuple(fetch_refs),
+            feed_keys=frozenset(feed_keys),
+            device_fingerprint=fp,
+            graph_version=session.graph.version,
+        )
+
+
+class ExecutableCache:
+    """Thread-safe LRU of prepared execution state.
+
+    ``maxsize == 0`` disables caching entirely (every lookup misses and
+    nothing is stored) — used to benchmark the uncached path.
+    """
+
+    def __init__(self, maxsize: int = 16) -> None:
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "invalidations": 0}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.stats["hits"] += 1
+                return self._entries[key]
+            self.stats["misses"] += 1
+            return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.maxsize <= 0:
+            return
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.stats["evictions"] += 1
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        cached = self.get(key)
+        if cached is not None:
+            return cached
+        value = builder()
+        self.put(key, value)
+        return value
+
+    def invalidate(self, predicate: Optional[Callable[[Hashable], bool]] = None) -> int:
+        """Drop entries whose key matches ``predicate`` (all if None)."""
+        with self._lock:
+            if predicate is None:
+                n = len(self._entries)
+                self._entries.clear()
+            else:
+                stale = [k for k in self._entries if predicate(k)]
+                for k in stale:
+                    del self._entries[k]
+                n = len(stale)
+            self.stats["invalidations"] += n
+            return n
+
+    def keys(self) -> List[Hashable]:
+        with self._lock:
+            return list(self._entries)
+
+
+class Executable:
+    """One fully-prepared run pipeline bound to a Session.
+
+    Construction performs prune -> place -> partition -> schedule-recvs ->
+    executor static analysis exactly once; ``run`` only allocates per-run
+    state (and, multi-device, a fresh rendezvous + worker threads), so it
+    is safe to call repeatedly and concurrently.
+    """
+
+    def __init__(self, session, fetch_refs: Sequence[TensorRef],
+                 feed_keys, *,
+                 node_set: Optional[Set[str]] = None,
+                 compress: bool = False,
+                 cost_model: Optional[placement_mod.CostModel] = None,
+                 force_partitioned: bool = False) -> None:
+        self.session = session
+        self.fetches: Tuple[TensorRef, ...] = tuple(fetch_refs)
+        self.feed_keys: FrozenSet[TensorRef] = frozenset(feed_keys)
+        self.graph_version = session.graph.version
+        self.compress = compress
+
+        if node_set is None:
+            node_set = session.pruned_nodes(
+                self.fetches, {k: None for k in self.feed_keys})
+        self.node_set: Set[str] = set(node_set)
+
+        devices = session.devices
+        # Session.run uses the plain in-thread executor for 0/1-device
+        # sessions; run_partitioned forces the worker-thread path even for
+        # one device (it carries the device-kind kernel dispatch and the
+        # join timeout).
+        self.multi_device = devices is not None and (
+            len(devices) > 1 or force_partitioned)
+        if self.multi_device:
+            cm = cost_model or placement_mod.CostModel()
+            self.placement = placement_mod.place(
+                session.graph, devices, cm, self.node_set)
+            self.partitioned = partition_mod.partition(
+                session.graph, self.placement, self.node_set, compress=compress)
+            scheduler_mod.schedule_recvs(
+                self.partitioned.graph, set(self.partitioned.graph.nodes),
+                cm, devices, self.partitioned.placement)
+            # one immutable Executor per device, reused across runs
+            self.device_executors: Dict[str, Executor] = {
+                dev: Executor(self.partitioned.graph, node_filter=names,
+                              device_label=dev)
+                for dev, names in self.partitioned.device_nodes.items()
+            }
+            self.fetch_by_dev: Dict[str, List[int]] = {}
+            for i, ref in enumerate(self.fetches):
+                dev = self.partitioned.placement[ref.node]
+                self.fetch_by_dev.setdefault(dev, []).append(i)
+            self.n_nodes = len(self.partitioned.graph.nodes)
+        else:
+            self.executor = Executor(session.graph, node_filter=self.node_set)
+            self.n_nodes = len(self.node_set)
+
+    # ------------------------------------------------------------------
+    def run(self, feeds: Optional[Dict[TensorRef, Any]] = None, *,
+            trace: Optional[List[str]] = None, tracer: Any = None,
+            timeout: float = 60.0) -> List[Any]:
+        feeds = feeds or {}
+        if frozenset(feeds) != self.feed_keys:
+            raise ExecutorError(
+                f"feed keys {sorted(map(str, feeds))} do not match the keys this "
+                f"Executable was compiled for {sorted(map(str, self.feed_keys))}")
+        if self.multi_device:
+            return self._run_multi(feeds, trace=trace, tracer=tracer,
+                                   timeout=timeout)
+        return self.executor.run(self.fetches, feeds, ctx=self.session._ctx(),
+                                 trace=trace, tracer=tracer)
+
+    # ------------------------------------------------------------------
+    def _run_multi(self, feeds: Dict[TensorRef, Any], *,
+                   trace: Optional[List[str]], tracer: Any,
+                   timeout: float) -> List[Any]:
+        session = self.session
+        # per-run rendezvous: concurrent runs never mix; its recv timeout
+        # tracks the run deadline so a caller-raised timeout is honoured
+        run_rdv = Rendezvous(timeout=timeout)
+        results: Dict[int, Any] = {}
+        errors: List[BaseException] = []
+        lock = threading.Lock()
+
+        def worker(dev_name: str, executor: Executor) -> None:
+            ctx = ExecutionContext(
+                variables=session.variables,
+                rendezvous=run_rdv,
+                queues=session.queues,
+                checkpoint_io=session.checkpoint_io,
+                device_kind=dev_name.split("device:")[-1].split(":")[0],
+            )
+            local_trace: Optional[List[str]] = [] if trace is not None else None
+            idxs = self.fetch_by_dev.get(dev_name, [])
+            local_fetches = [self.fetches[i] for i in idxs]
+            try:
+                vals = executor.run(local_fetches, feeds, ctx=ctx,
+                                    trace=local_trace, tracer=tracer)
+                with lock:
+                    for i, v in zip(idxs, vals):
+                        results[i] = v
+                    if trace is not None:
+                        trace.extend(local_trace or [])
+            except BaseException as e:  # noqa: BLE001 — §3.3: surface any worker failure
+                with lock:
+                    errors.append(e)
+
+        threads = {
+            dev: threading.Thread(target=worker, args=(dev, ex), daemon=True)
+            for dev, ex in self.device_executors.items()
+        }
+        for t in threads.values():
+            t.start()
+        deadline = time.monotonic() + timeout
+        for t in threads.values():
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+
+        if errors:
+            # §3.3 fault tolerance: abort the whole graph execution on any failure
+            raise errors[0]
+        stuck = sorted(dev for dev, t in threads.items() if t.is_alive())
+        if stuck:
+            raise ExecutorError(
+                f"graph execution timed out after {timeout:.1f}s: worker(s) for "
+                f"device(s) {stuck} never finished (stuck Send/Recv or a hung "
+                f"kernel; §3.3 failure reporting)")
+        missing = [str(self.fetches[i]) for i in range(len(self.fetches))
+                   if i not in results]
+        if missing:
+            raise ExecutorError(
+                f"workers finished but fetches {missing} were never produced "
+                f"(partition/fetch routing bug; §3.3 failure reporting)")
+        return [results[i] for i in range(len(self.fetches))]

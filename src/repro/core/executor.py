@@ -56,6 +56,28 @@ class ExecutionContext:
         return self.checkpoint_io.load(path)
 
 
+@dataclasses.dataclass
+class ExecutorState:
+    """All mutable per-run state of one graph execution.
+
+    The :class:`Executor` itself holds only *immutable* static analysis
+    (consumer index, control-consumer index, static frame paths), so one
+    Executor can be cached inside an :class:`~repro.core.executable.Executable`
+    and used by many concurrent ``run`` calls — each call allocates a fresh
+    ExecutorState (DESIGN.md §5).
+    """
+
+    # value store: (node, port, frame_ctx) -> value (may be _DEAD)
+    values: Dict[Tuple[str, int, FrameCtx], Any] = dataclasses.field(default_factory=dict)
+    # per-(node, ctx) countdown of outstanding deps
+    pending: Dict[Tuple[str, FrameCtx], int] = dataclasses.field(default_factory=dict)
+    merge_fired: Set[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=set)
+    ready: List[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=list)
+    done: Set[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=set)
+    # loop-invariant inputs not yet produced: (producer, port|None) -> waiters
+    waiters: Dict[Tuple[str, Any], List[Tuple[str, FrameCtx]]] = dataclasses.field(default_factory=dict)
+
+
 def run_kernel(ctx: ExecutionContext, node: Node, inputs: Sequence[Any],
                device_kind: Optional[str] = None) -> Tuple[Any, ...]:
     """Dispatch to the device kernel for ``node`` (§2 Operations and Kernels)."""
@@ -71,9 +93,18 @@ def run_kernel(ctx: ExecutionContext, node: Node, inputs: Sequence[Any],
 
 
 class Executor:
-    """Reference single-device executor over a (sub)graph."""
+    """Reference single-device executor over a (sub)graph.
 
-    def __init__(self, graph: Graph, ctx: ExecutionContext,
+    Construction performs the *static* analysis only — the O(edges)
+    consumer index and the static-frame fixpoint — and mutates nothing
+    afterwards, so a constructed Executor is immutable and reusable:
+    ``run`` allocates a fresh :class:`ExecutorState` per call and takes
+    per-run ``ctx``/``trace``/``tracer`` overrides.  The ``ctx`` passed at
+    construction time is only a default for callers of the legacy
+    one-shot API.
+    """
+
+    def __init__(self, graph: Graph, ctx: Optional[ExecutionContext] = None,
                  node_filter: Optional[Set[str]] = None,
                  trace: Optional[List[str]] = None,
                  tracer: Any = None,
@@ -128,20 +159,31 @@ class Executor:
 
     # ------------------------------------------------------------------
     def run(self, fetches: Sequence[TensorRef],
-            feeds: Optional[Dict[TensorRef, Any]] = None) -> List[Any]:
+            feeds: Optional[Dict[TensorRef, Any]] = None, *,
+            ctx: Optional[ExecutionContext] = None,
+            trace: Optional[List[str]] = None,
+            tracer: Any = None) -> List[Any]:
         feeds = feeds or {}
         g = self.graph
         root: FrameCtx = ()
 
-        # value store: (node, port, frame_ctx) -> value (may be _DEAD)
-        values: Dict[Tuple[str, int, FrameCtx], Any] = {}
-        # per-(node, ctx) countdown of outstanding deps
-        pending: Dict[Tuple[str, FrameCtx], int] = {}
-        merge_fired: Set[Tuple[str, FrameCtx]] = set()
-        ready: List[Tuple[str, FrameCtx]] = []
-        done: Set[Tuple[str, FrameCtx]] = set()
-        # loop-invariant inputs not yet produced: (producer, port|None) -> waiters
-        waiters: Dict[Tuple[str, Any], List[Tuple[str, FrameCtx]]] = {}
+        # per-run overrides fall back to the construction-time defaults
+        run_ctx = ctx if ctx is not None else self.ctx
+        trace = trace if trace is not None else self.trace
+        tracer = tracer if tracer is not None else self.tracer
+        if run_ctx is None:
+            raise ExecutorError("Executor.run needs an ExecutionContext "
+                                "(pass ctx= or construct with one)")
+
+        # all mutable state lives in a per-run ExecutorState so one Executor
+        # can serve concurrent runs (DESIGN.md §5)
+        state = ExecutorState()
+        values = state.values
+        pending = state.pending
+        merge_fired = state.merge_fired
+        ready = state.ready
+        done = state.done
+        waiters = state.waiters
 
         def trunc(ctx: FrameCtx, producer: str) -> FrameCtx:
             return ctx[: len(self.frames.get(producer, ()))]
@@ -278,6 +320,7 @@ class Executor:
 
         # --- main loop --------------------------------------------------
         steps = 0
+        deferred = 0  # consecutive Recv deferrals (see below)
         while ready:
             steps += 1
             if steps > MAX_ITERATIONS:
@@ -286,8 +329,31 @@ class Executor:
             key = (name, ctx)
             if key in done:
                 continue
-            done.add(key)
             node = g.nodes[name]
+
+            # A Recv whose tensor has not arrived yet must not block this
+            # device's single dispatch thread — if the sender is waiting on
+            # one of OUR sends, that blocking is a rendezvous deadlock.
+            # Defer the Recv behind other runnable work; once a full pass
+            # over the ready queue found nothing else to run, wait for ANY
+            # outstanding Recv (never one arbitrary key: the peer may
+            # produce it last).
+            if (node.op == "Recv" and run_ctx.rendezvous is not None
+                    and not run_ctx.rendezvous.ready(node.attrs["rendezvous_key"])):
+                if ready and deferred <= len(ready):
+                    deferred += 1
+                    ready.append(key)
+                    continue
+                pending_keys = [node.attrs["rendezvous_key"]] + [
+                    g.nodes[n].attrs["rendezvous_key"]
+                    for (n, _c) in ready if g.nodes[n].op == "Recv"]
+                run_ctx.rendezvous.wait_any(pending_keys)
+                if not run_ctx.rendezvous.ready(node.attrs["rendezvous_key"]):
+                    deferred = 0  # progress was made elsewhere; re-rotate
+                    ready.append(key)
+                    continue
+            deferred = 0
+            done.add(key)
             octx = output_ctx(node, ctx)
 
             # gather inputs (feeds shadow node outputs, §4.2)
@@ -307,8 +373,8 @@ class Executor:
                     any_dead = True
                 ins.append(v)
 
-            if self.trace is not None:
-                self.trace.append(name)
+            if trace is not None:
+                trace.append(name)
 
             od = ops_mod.opdef(node.op)
 
@@ -357,13 +423,13 @@ class Executor:
                 deliver_control(name, octx)
                 continue
 
-            if self.tracer is not None:
-                t_start = self.tracer.now()
-                outs = run_kernel(self.ctx, node, ins)
-                self.tracer.record(name, node.op, self.device_label,
-                                   t_start, self.tracer.now(), ctx)
+            if tracer is not None:
+                t_start = tracer.now()
+                outs = run_kernel(run_ctx, node, ins)
+                tracer.record(name, node.op, self.device_label,
+                              t_start, tracer.now(), ctx)
             else:
-                outs = run_kernel(self.ctx, node, ins)
+                outs = run_kernel(run_ctx, node, ins)
             for p, v in enumerate(outs):
                 deliver(name, p, octx, v)
             deliver_control(name, octx)

@@ -74,6 +74,10 @@ class Graph:
     def __init__(self) -> None:
         self.nodes: Dict[str, Node] = {}  # insertion-ordered
         self._name_counts: Dict[str, int] = {}
+        # Monotonic structure version: bumped on every add_node/extend so
+        # Session-level Executable caches can detect staleness cheaply
+        # without hashing the graph (DESIGN.md §5).
+        self.version: int = 0
         # §4.4 structured-loop metadata recorded by control_flow builders so
         # the JIT lowering can emit lax.while_loop for loops that the eager
         # executor runs via the Switch/Merge/Enter/... primitives.
@@ -119,6 +123,7 @@ class Graph:
             if cname not in self.nodes:
                 raise GraphError(f"node {name!r} references unknown control input {cname!r}")
         self.nodes[name] = node
+        self.version += 1
         return node
 
     def extend(self, other: "Graph") -> None:
@@ -129,6 +134,7 @@ class Graph:
             self.nodes[node.name] = node
         self.loop_specs.update(other.loop_specs)
         self.cond_specs.update(other.cond_specs)
+        self.version += 1
 
     def __contains__(self, name: str) -> bool:
         return name in self.nodes

@@ -19,6 +19,10 @@ from .graph import Graph, Node, TensorRef
 from ..runtime import rendezvous as rdv
 
 
+# pass-invocation counter (see placement.STATS; DESIGN.md §5)
+STATS = {"partition_calls": 0}
+
+
 @dataclasses.dataclass
 class Partitioned:
     graph: Graph                      # rewritten graph containing Send/Recv
@@ -33,6 +37,7 @@ def partition(
     node_names=None,
     compress: bool = False,
 ) -> Partitioned:
+    STATS["partition_calls"] += 1
     names = set(node_names) if node_names is not None else set(placement)
     pg = g.subgraph(names)
     place = dict(placement)

@@ -49,6 +49,10 @@ def _times(g: Graph, names: Set[str], cm: CostModel, devices, placement):
     return asap, alap
 
 
+# pass-invocation counter (see placement.STATS; DESIGN.md §5)
+STATS = {"schedule_calls": 0}
+
+
 def schedule_recvs(
     g: Graph,
     node_names: Optional[Set[str]] = None,
@@ -57,6 +61,7 @@ def schedule_recvs(
     placement: Optional[Dict[str, str]] = None,
 ) -> int:
     """Insert delaying control edges on Recv nodes; returns #edges added."""
+    STATS["schedule_calls"] += 1
     names = set(node_names) if node_names is not None else set(g.nodes)
     cm = cost_model or CostModel()
     asap, alap = _times(g, names, cm, devices, placement)

@@ -3,17 +3,27 @@
 ``Session.run(fetches, feed_dict)`` rewrites the graph with feed/fetch
 semantics: fed tensors shadow their producing nodes, the executed node set
 is the transitive closure working backwards from the fetches through the
-rewritten graph, and everything else is pruned (Figure 6).  The same
-Session can also *compile* a (feeds, fetches) signature through the JIT
-lowering (§10 / DESIGN.md) into a pure JAX function.
+rewritten graph, and everything else is pruned (Figure 6).
+
+The prune -> place -> partition -> schedule -> executor-static-analysis
+pipeline runs once per :class:`~repro.core.executable.RunSignature`, not
+once per call: the Session keeps an LRU of prepared
+:class:`~repro.core.executable.Executable`\\ s keyed by (fetches, fed
+keys, device set, graph version), so steady-state ``run`` loops only pay
+per-run executor state (§3.2 "caches these graphs"; DESIGN.md §5).
+``Session.extend`` bumps the graph version, invalidating stale entries
+automatically.  The same Session can also *compile* a (feeds, fetches)
+signature through the JIT lowering (§10 / DESIGN.md §2) into a pure JAX
+function.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Node, TensorRef, as_ref
 from .executor import ExecutionContext, Executor
+from .executable import Executable, ExecutableCache, RunSignature
 from . import ops as ops_mod
 from ..runtime.containers import VariableStore, ContainerManager
 from ..runtime.rendezvous import Rendezvous
@@ -38,7 +48,8 @@ class Session:
     def __init__(self, graph: Optional[Graph] = None, *,
                  containers: Optional[ContainerManager] = None,
                  checkpoint_io: Any = None,
-                 devices: Any = None) -> None:
+                 devices: Any = None,
+                 max_cached_executables: int = 16) -> None:
         self.graph = graph or Graph()
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
@@ -48,6 +59,9 @@ class Session:
         self.devices = devices  # DeviceSet for the multi-device eager path
         self.id = next(Session._ids)
         self._run_count = 0
+        # compile-once/run-many: RunSignature -> Executable (DESIGN.md §5);
+        # max_cached_executables=0 disables caching (benchmark baseline).
+        self._executables = ExecutableCache(maxsize=max_cached_executables)
 
     # ------------------------------------------------------------------
     def extend(self, graph: Graph) -> None:
@@ -97,24 +111,64 @@ class Session:
         fed_nodes = {r.node for r in fetch_refs if (r.node, r.port) in fed_ports}
         return needed - fed_nodes
 
+    def executable(self, fetch_refs: Sequence[TensorRef],
+                   feed_keys) -> Executable:
+        """The cached Executable for one run signature (built on miss).
+
+        Stale entries (older graph version, different device set) are
+        purged lazily on every miss; ``Session.extend`` therefore
+        invalidates automatically via the graph version in the key.
+        """
+        sig = RunSignature.for_session(self, fetch_refs, feed_keys)
+
+        def build() -> Executable:
+            self._executables.invalidate(
+                lambda s: s.graph_version != sig.graph_version
+                or s.device_fingerprint != sig.device_fingerprint)
+            return Executable(self, sig.fetches, sig.feed_keys)
+
+        return self._executables.get_or_build(sig, build)
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        return dict(self._executables.stats)
+
     def run(self, fetches, feed_dict: Optional[Dict] = None,
             trace: Optional[List[str]] = None, tracer=None):
-        """Eagerly execute the subgraph needed for ``fetches`` (§2/§4.2)."""
+        """Eagerly execute the subgraph needed for ``fetches`` (§2/§4.2).
+
+        Steady-state loops over one signature hit the Executable cache and
+        skip prune/place/partition/schedule/static-analysis entirely.
+        """
         fetch_refs, feeds = self._normalize(fetches, feed_dict)
         self._run_count += 1
-        node_set = self.pruned_nodes(fetch_refs, feeds)
-        if self.devices is not None and len(self.devices) > 1:
-            from . import distributed_runner
-
-            results = distributed_runner.run_partitioned(
-                self, node_set, fetch_refs, feeds, trace=trace, tracer=tracer)
-        else:
-            ex = Executor(self.graph, self._ctx(), node_filter=node_set,
-                          trace=trace, tracer=tracer)
-            results = ex.run(fetch_refs, feeds)
+        exe = self.executable(fetch_refs, feeds.keys())
+        results = exe.run(feeds, trace=trace, tracer=tracer)
         if isinstance(fetches, (list, tuple)):
             return results
         return results[0]
+
+    def make_callable(self, fetches, feed_refs: Sequence = ()) -> Callable[..., List[Any]]:
+        """TF's ``Session.make_callable``: a fast positional-feed entry point.
+
+        Returns ``call(*feed_values) -> [fetch_values]`` bound to the cached
+        Executable for this signature; the signature is re-resolved through
+        the cache on every call, so graph extension or device swaps rebuild
+        transparently while the steady state stays a single dict lookup.
+        """
+        fetch_refs = [as_ref(f) for f in (fetches if isinstance(fetches, (list, tuple)) else [fetches])]
+        feed_key_list = [as_ref(k) for k in feed_refs]
+        feed_key_set = frozenset(feed_key_list)
+
+        def call(*feed_values) -> List[Any]:
+            if len(feed_values) != len(feed_key_list):
+                raise ValueError(
+                    f"expected {len(feed_key_list)} feed values, got {len(feed_values)}")
+            self._run_count += 1
+            exe = self.executable(fetch_refs, feed_key_set)
+            return exe.run(dict(zip(feed_key_list, feed_values)))
+
+        return call
 
     # ------------------------------------------------------------------
     def initialize_variables(self, names: Optional[Sequence[str]] = None) -> None:

@@ -17,12 +17,16 @@ import numpy as np
 from ..configs import get_config
 from ..models.api import Model, Shape
 from ..models.params import init_params
-from .steps import build_serve_step
+from .steps import build_serve_step, build_eager_serve_step
 
 
 def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 16, gen: int = 32, max_seq: int = 128,
-          seed: int = 0, temperature: float = 0.0) -> Dict[str, Any]:
+          seed: int = 0, temperature: float = 0.0,
+          engine: str = "jit") -> Dict[str, Any]:
+    """``engine="jit"`` jits one decode step; ``engine="graph"`` drives the
+    decode loop through ``Session.run`` with the KV cache as a Variable —
+    every token re-runs one cached Executable (DESIGN.md §5)."""
     cfg = get_config(arch, smoke=smoke)
     model = Model.for_config(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -43,7 +47,19 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
         ck, cv = encdec.build_cross_cache(cfg, model.plan, params, enc_out)
         cache["cross_k"], cache["cross_v"] = ck, cv
 
-    step = jax.jit(lambda c, tk, t: model.serve_step(params, c, tk, t))
+    eb = None
+    if engine == "graph":
+        eb = build_eager_serve_step(cfg)
+        eb.session.set_variable("params", params)
+        eb.session.set_variable("cache", cache)
+
+        def step(c, tk, t):
+            # the cache lives in the Session's "cache" Variable; the cached
+            # Executable's Assign node updates it in place each token
+            logits = eb.step({"tokens": tk.astype(jnp.int32), "pos": t})
+            return logits, c
+    else:
+        step = jax.jit(lambda c, tk, t: model.serve_step(params, c, tk, t))
 
     # --- prefill: feed prompt tokens one step at a time (the cache fills);
     # production prefill lowers the batched forward (launch/steps.py).
@@ -71,10 +87,14 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
 
     gen_arr = np.concatenate(out_tokens, axis=1)
     tput = batch * gen / decode_s if decode_s > 0 else float("inf")
-    print(f"[serve] arch={cfg.arch_id} batch={batch} prefill {prefill_s:.2f}s "
+    print(f"[serve] arch={cfg.arch_id} engine={engine} batch={batch} "
+          f"prefill {prefill_s:.2f}s "
           f"decode {decode_s:.2f}s ({tput:.1f} tok/s)")
-    return {"generated": gen_arr, "prefill_s": prefill_s,
-            "decode_s": decode_s, "tokens_per_s": tput}
+    res = {"generated": gen_arr, "prefill_s": prefill_s,
+           "decode_s": decode_s, "tokens_per_s": tput}
+    if eb is not None:
+        res["executable_cache"] = eb.session.cache_stats
+    return res
 
 
 def main(argv=None) -> int:
@@ -84,9 +104,12 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
+                    help="jit: jitted decode step; graph: eager Session.run "
+                         "through the cached Executable (DESIGN.md §5)")
     args = ap.parse_args(argv)
     res = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                prompt_len=args.prompt_len, gen=args.gen)
+                prompt_len=args.prompt_len, gen=args.gen, engine=args.engine)
     print("[serve] sample token ids:", res["generated"][0][:16].tolist())
     return 0
 

@@ -42,6 +42,32 @@ class StepBundle:
     graph_nodes: int = 0
 
 
+@dataclasses.dataclass
+class EagerStepBundle:
+    """A step driven through ``Session.run`` (the §2 eager path).
+
+    ``step`` is bound to the Session's cached Executable for its run
+    signature (DESIGN.md §5): the first call pays prune/place/partition/
+    schedule + executor static analysis, every subsequent call only
+    allocates per-run executor state.  Variables (params/opt/cache) live
+    in the Session's variable store — set them with
+    ``bundle.session.set_variable`` before the first step.
+    """
+
+    session: Session
+    step: Callable[[Dict[str, Any]], Any]  # feeds by name -> primary output
+    model: Model
+    feed_names: Tuple[str, ...]
+    kind: str
+    graph_nodes: int = 0
+
+    def variables(self) -> Dict[str, Any]:
+        """Snapshot the step's Variables (e.g. for checkpointing)."""
+        return {name: self.session.variable_value(name)
+                for name, node in self.session.graph.nodes.items()
+                if node.op == "Variable"}
+
+
 def _named(mesh: Optional[Mesh], spec_tree):
     if mesh is None:
         return None
@@ -74,6 +100,39 @@ def step_hparams(cfg: ModelConfig, shape: Shape, n_groups: int) -> Dict[str, Any
 
 
 # ---------------------------------------------------------------------------
+
+
+def _train_graph(feed_names, loss_of, update_of, loss_and_grad_of, n_micro):
+    """The training step AS A repro.core GRAPH: loss Call node, §4.1
+    ``gradients()`` backward extension, AdamW update + Assign nodes —
+    shared by the lowered (JIT) and eager (Session.run) paths."""
+    b = GraphBuilder()
+    v_params = b.variable("params")
+    v_opt = b.variable("opt")
+    feed_nodes = {n: b.placeholder(n) for n in feed_names}
+
+    if n_micro <= 1:
+        # faithful path: §4.1 gradients() extends the graph
+        def graph_loss(params, *feeds):
+            return loss_of(params, dict(zip(feed_names, feeds)))
+
+        loss_node = b.call(graph_loss,
+                           [v_params] + [feed_nodes[n] for n in feed_names],
+                           name="loss")
+        (gref,) = gradients(b.graph, [loss_node], [v_params])
+    else:
+        # accumulated grads are one fused node (still "just nodes")
+        def graph_loss_grad(params, *feeds):
+            return loss_and_grad_of(params, dict(zip(feed_names, feeds)))
+
+        lg = b.call(graph_loss_grad,
+                    [v_params] + [feed_nodes[n] for n in feed_names],
+                    name="loss_and_grad", n_out=2)
+        loss_node, gref = lg, lg.output(1)
+    upd = b.call(update_of, [v_params, gref, v_opt], name="adamw", n_out=2)
+    a1 = b.assign(v_params, upd.output(0))
+    a2 = b.assign(v_opt, upd.output(1))
+    return b, loss_node, a1, a2, feed_nodes
 
 
 def build_train_step(
@@ -131,32 +190,8 @@ def build_train_step(
         return loss_val, grads
 
     if via_graph:
-        b = GraphBuilder()
-        v_params = b.variable("params")
-        v_opt = b.variable("opt")
-        feed_nodes = {n: b.placeholder(n) for n in feed_names}
-
-        if n_micro <= 1:
-            # faithful path: §4.1 gradients() extends the graph
-            def graph_loss(params, *feeds):
-                return loss_of(params, dict(zip(feed_names, feeds)))
-
-            loss_node = b.call(graph_loss,
-                               [v_params] + [feed_nodes[n] for n in feed_names],
-                               name="loss")
-            (gref,) = gradients(b.graph, [loss_node], [v_params])
-        else:
-            # accumulated grads are one fused node (still "just nodes")
-            def graph_loss_grad(params, *feeds):
-                return loss_and_grad_of(params, dict(zip(feed_names, feeds)))
-
-            lg = b.call(graph_loss_grad,
-                        [v_params] + [feed_nodes[n] for n in feed_names],
-                        name="loss_and_grad", n_out=2)
-            loss_node, gref = lg, lg.output(1)
-        upd = b.call(update_of, [v_params, gref, v_opt], name="adamw", n_out=2)
-        a1 = b.assign(v_params, upd.output(0))
-        a2 = b.assign(v_opt, upd.output(1))
+        b, loss_node, a1, a2, feed_nodes = _train_graph(
+            feed_names, loss_of, update_of, loss_and_grad_of, n_micro)
         sess = Session(b.graph)
         lowered = compile_subgraph(
             sess, [loss_node.ref], [feed_nodes[n].ref for n in feed_names],
@@ -380,6 +415,79 @@ def build_serve_step(
                       feed_shardings=feed_shardings,
                       var_shardings=var_shardings, out_shardings=out_shardings,
                       model=model, kind="decode", graph_nodes=n_nodes)
+
+
+def build_eager_train_step(
+    cfg: ModelConfig,
+    shape: Shape,
+    *,
+    lr: float = 3e-4,
+    hparam_overrides: Optional[Dict[str, Any]] = None,
+) -> EagerStepBundle:
+    """Train step for the eager multi-run path: the same graph as
+    ``build_train_step(via_graph=True)`` but *run*, not lowered — each call
+    re-enters ``Session.run`` and hits the cached Executable for the
+    (loss, train_op) signature (compile once, run many; DESIGN.md §5)."""
+    model = Model.for_config(cfg)
+    hp = step_hparams(cfg, shape, 1)
+    hp.update(hparam_overrides or {})
+    loss_kw = dict(q_chunk=hp["q_chunk"], loss_chunk=hp["loss_chunk"],
+                   compute_dtype=hp["compute_dtype"],
+                   scan_unroll=hp["scan_unroll"])
+    if not model.is_encdec:
+        loss_kw["n_token_groups"] = hp["n_token_groups"]
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch, **loss_kw)
+
+    def update_of(params, grads, opt):
+        return adamw_update(params, grads, opt, lr=lr)
+
+    feed_names = list(model.batch_desc(shape))
+    b, loss_node, a1, a2, feed_nodes = _train_graph(
+        feed_names, loss_of, update_of, None, 1)
+    train_op = b.group([a1, a2], name="train_op")
+    sess = Session(b.graph)
+    run = sess.make_callable([loss_node.ref, train_op.ref],
+                             [feed_nodes[n].ref for n in feed_names])
+
+    def step(feeds: Dict[str, Any]):
+        loss_val, _ = run(*[feeds[n] for n in feed_names])
+        return loss_val
+
+    return EagerStepBundle(session=sess, step=step, model=model,
+                           feed_names=tuple(feed_names), kind="train",
+                           graph_nodes=len(b.graph.nodes))
+
+
+def build_eager_serve_step(cfg: ModelConfig) -> EagerStepBundle:
+    """One-token decode as a Session graph: the KV cache is a Variable
+    updated by an Assign node, so the decode loop is exactly the paper's
+    steady-state serving shape — one cached Executable re-run per token."""
+    model = Model.for_config(cfg)
+
+    def serve_of(params, cache, tokens, pos):
+        return model.serve_step(params, cache, tokens, pos)
+
+    b = GraphBuilder()
+    v_params = b.variable("params")
+    v_cache = b.variable("cache")
+    t_ph = b.placeholder("tokens")
+    p_ph = b.placeholder("pos")
+    out = b.call(serve_of, [v_params, v_cache, t_ph, p_ph],
+                 name="serve", n_out=2)
+    a_cache = b.assign(v_cache, out.output(1))
+    sess = Session(b.graph)
+    run = sess.make_callable([out.output(0), a_cache.ref],
+                             [t_ph.ref, p_ph.ref])
+
+    def step(feeds: Dict[str, Any]):
+        logits, _ = run(feeds["tokens"], feeds["pos"])
+        return logits
+
+    return EagerStepBundle(session=sess, step=step, model=model,
+                           feed_names=("tokens", "pos"), kind="decode",
+                           graph_nodes=len(b.graph.nodes))
 
 
 def build_step(cfg: ModelConfig, shape_name: str, mesh=None, rules=None, **kw

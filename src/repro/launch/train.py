@@ -26,26 +26,45 @@ from ..data import SyntheticLMDataset, Prefetcher, batch_iterator
 from ..models.api import Shape
 from ..models.params import init_params, count_params
 from ..optim import adamw_init
-from .steps import build_train_step
+from .steps import build_train_step, build_eager_train_step
 
 
 def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
           batch: int = 8, seq: int = 256, lr: float = 1e-3,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
           log_every: int = 10, seed: int = 0,
-          resume: bool = True) -> Dict[str, Any]:
+          resume: bool = True, engine: str = "jit") -> Dict[str, Any]:
+    """``engine="jit"`` lowers the step graph and jits it (§10);
+    ``engine="graph"`` drives the same graph through ``Session.run``, where
+    the steady-state loop re-runs one cached Executable per step
+    (compile once, run many; DESIGN.md §5)."""
     cfg = get_config(arch, smoke=smoke)
     shape = Shape("custom", seq, batch, "train")
-    sb = build_train_step(cfg, shape, lr=lr,
-                          hparam_overrides={"compute_dtype": jnp.float32,
-                                            "loss_chunk": 0, "q_chunk": 0})
-    n_params = count_params(sb.model.describe_params())
-    print(f"[train] arch={cfg.arch_id} params={n_params/1e6:.1f}M "
-          f"batch={batch} seq={seq} graph_nodes={sb.graph_nodes}")
+    hparam_overrides = {"compute_dtype": jnp.float32,
+                        "loss_chunk": 0, "q_chunk": 0}
+    eb = None
+    if engine == "graph":
+        eb = build_eager_train_step(cfg, shape, lr=lr,
+                                    hparam_overrides=hparam_overrides)
+        model, graph_nodes = eb.model, eb.graph_nodes
+    else:
+        sb = build_train_step(cfg, shape, lr=lr,
+                              hparam_overrides=hparam_overrides)
+        model, graph_nodes = sb.model, sb.graph_nodes
+    n_params = count_params(model.describe_params())
+    print(f"[train] arch={cfg.arch_id} engine={engine} "
+          f"params={n_params/1e6:.1f}M "
+          f"batch={batch} seq={seq} graph_nodes={graph_nodes}")
 
-    params = init_params(sb.model.describe_params(), jax.random.PRNGKey(seed))
+    params = init_params(model.describe_params(), jax.random.PRNGKey(seed))
     variables = {"params": params, "opt": adamw_init(params)}
-    step_fn = jax.jit(sb.fn, donate_argnums=(1,))
+    if engine == "graph":
+        def step_fn(feeds, variables):
+            # params/opt live in the Session's variable store; the Assign
+            # nodes in the cached Executable update them in place.
+            return eb.step(feeds), variables
+    else:
+        step_fn = jax.jit(sb.fn, donate_argnums=(1,))
 
     mgr = None
     start_step = 0
@@ -53,9 +72,21 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
         mgr = CheckpointManager(FileCheckpointIO(ckpt_dir), every_steps=ckpt_every)
         if resume and mgr.latest_step() is not None:
             restored = mgr.restore_latest()
-            variables = restored["variables"]
+            rv = restored["variables"]
+            if not isinstance(rv, dict):
+                # cross-process restore: FileCheckpointIO keeps treedefs
+                # in-process only and hands back flat leaves — rebuild
+                # against the freshly-initialised template structure
+                rv = jax.tree.unflatten(jax.tree.structure(variables), rv)
+            variables = rv
             start_step = int(mgr.latest_step())
             print(f"[train] resumed from step {start_step} (§3.3 recovery)")
+    if engine == "graph":
+        for name, value in variables.items():
+            eb.session.set_variable(name, value)
+
+    def snapshot_variables() -> Dict[str, Any]:
+        return eb.variables() if engine == "graph" else variables
 
     ds = SyntheticLMDataset(cfg.vocab_size, seq, seed=seed)
     pipe = Prefetcher(batch_iterator(ds, batch, start_step), capacity=4).start()
@@ -72,7 +103,7 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
         raw = pipe.get()
         feeds = {"tokens": jnp.asarray(raw["tokens"]),
                  "labels": jnp.asarray(raw["labels"])}
-        if sb.model.is_encdec:
+        if model.is_encdec:
             feeds["frames"] = jnp.zeros(
                 (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
         loss, variables = step_fn(feeds, variables)
@@ -80,7 +111,7 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
         if writer:
             writer.add(i + 1, "train/loss", losses[-1])
         if mgr and mgr.should_save(i + 1):
-            mgr.save(i + 1, {"variables": variables})
+            mgr.save(i + 1, {"variables": snapshot_variables()})
         if (i + 1) % log_every == 0:
             rate = (i + 1 - start_step) * batch * seq / (time.time() - t0)
             print(f"[train] step {i+1:5d} loss {float(loss):.4f} "
@@ -89,9 +120,13 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
     if writer:
         writer.close()
     if mgr:
-        mgr.save(steps, {"variables": variables})
-    return {"losses": losses, "final_loss": losses[-1] if losses else None,
-            "params": n_params}
+        mgr.save(steps, {"variables": snapshot_variables()})
+    out: Dict[str, Any] = {"losses": losses,
+                           "final_loss": losses[-1] if losses else None,
+                           "params": n_params}
+    if engine == "graph":
+        out["executable_cache"] = eb.session.cache_stats
+    return out
 
 
 def main(argv=None) -> int:
@@ -105,11 +140,15 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
+                    help="jit: lowered+jitted step; graph: eager Session.run "
+                         "through the cached Executable (DESIGN.md §5)")
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
     res = train(args.arch, smoke=args.smoke, steps=args.steps,
                 batch=args.batch, seq=args.seq, lr=args.lr,
-                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                engine=args.engine)
     print(f"[train] done: final loss {res['final_loss']:.4f}")
     return 0
 

@@ -81,6 +81,11 @@ class DeviceSet:
     def names(self) -> List[str]:
         return list(self.devices)
 
+    def fingerprint(self) -> tuple:
+        """Hashable identity of this device set, used in RunSignatures so
+        swapping the Session's devices invalidates cached Executables."""
+        return tuple(sorted(self.devices))
+
     def __getitem__(self, name: str) -> Device:
         return self.devices[name]
 

@@ -39,6 +39,31 @@ class Rendezvous:
                 pass
             self._cv.notify_all()
 
+    def ready(self, key: str) -> bool:
+        """Non-blocking probe: has ``key`` been sent (and not yet consumed)?
+        Used by the executor to defer Recv nodes while other local work is
+        runnable instead of blocking its single dispatch thread."""
+        with self._cv:
+            return key in self._table
+
+    def wait_any(self, keys, timeout: float = None) -> str:
+        """Block until ANY of ``keys`` has been sent; returns that key
+        without consuming it.  The executor uses this when every runnable
+        node on a device is a not-yet-ready Recv — blocking on one
+        arbitrary key could pick a tensor the peer produces *last* and
+        deadlock the pair."""
+        keys = list(keys)
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: any(k in self._table for k in keys),
+                timeout=self.timeout if timeout is None else timeout)
+            if not ok:
+                raise TimeoutError(f"recv timed out waiting for any of {keys!r}")
+            for k in keys:
+                if k in self._table:
+                    return k
+            raise RuntimeError("unreachable: wait_any predicate satisfied")
+
     def recv(self, key: str) -> Any:
         with self._cv:
             ok = self._cv.wait_for(lambda: key in self._table, timeout=self.timeout)

@@ -30,6 +30,25 @@ from ..models.params import init_params
 from ..runtime.queues import FIFOQueue, QueueClosed
 
 
+def _slot_step_for(model: Model):
+    """Prepared-step reuse (the serving-side analogue of the Session's
+    Executable cache, DESIGN.md §5): restarting or multiplying batchers
+    over one model reuses the traced/jitted vmapped slot step instead of
+    re-tracing it.  The step is cached on the model instance itself so
+    its lifetime tracks the model — nothing is pinned process-wide."""
+    step = getattr(model, "_batcher_slot_step", None)
+    if step is not None:
+        return step
+
+    def one_slot_step(params, cache, token, pos):
+        logits, new_cache = model.serve_step(params, cache, token[None, :], pos)
+        return logits[0], new_cache
+
+    step = jax.jit(jax.vmap(one_slot_step, in_axes=(None, 0, 0, 0)))
+    model._batcher_slot_step = step
+    return step
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -65,12 +84,9 @@ class ContinuousBatcher:
         self.cache = jax.tree.map(
             lambda x: jnp.stack([x] * n_slots), self._empty_cache)
 
-        def one_slot_step(cache, token, pos):
-            logits, new_cache = model.serve_step(self.params, cache,
-                                                 token[None, :], pos)
-            return logits[0], new_cache
-
-        self._step = jax.jit(jax.vmap(one_slot_step))
+        # params is an explicit argument (vmap in_axes=None), so the jitted
+        # step is shared across batcher instances serving the same model
+        self._step = _slot_step_for(model)
 
         # host-side slot state
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -129,8 +145,8 @@ class ContinuousBatcher:
                 tokens[s, 0] = 0
         positions = jnp.asarray(self.slot_pos.astype(np.int32))
 
-        logits, self.cache = self._step(self.cache, jnp.asarray(tokens),
-                                        positions)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens), positions)
         self.stats["steps"] += 1
         self.stats["slot_tokens"] += len(live)
         self.stats["idle_slot_tokens"] += self.n_slots - len(live)

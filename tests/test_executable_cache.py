@@ -1,0 +1,203 @@
+"""Executable-cache correctness (DESIGN.md §5).
+
+The Session must place/partition/schedule once per run *signature*, not
+once per run; cached Executables must return fresh values (Variables are
+read at run time), invalidate on Session.extend and device-set changes,
+and tolerate concurrent runs.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session
+from repro.core import placement as pl
+from repro.core import partition as pt
+from repro.core import scheduler as sc
+from repro.core.executor import ExecutorError
+from repro.core.ops import register
+from repro.runtime.devices import DeviceSet
+
+
+@register("SleepTest")
+def _sleep_test(ctx, node, x):
+    time.sleep(node.attrs.get("seconds", 3.0))
+    return (x,)
+
+
+def _reset_pass_stats():
+    pl.STATS["place_calls"] = 0
+    pt.STATS["partition_calls"] = 0
+    sc.STATS["schedule_calls"] = 0
+
+
+def _two_workers():
+    return DeviceSet.make_cluster(2, 1, kind="cpu")
+
+
+def _multi_device_graph():
+    b = GraphBuilder()
+    c1 = b.constant(jnp.ones((4, 4)), name="c1", device="/job:worker/task:0")
+    c2 = b.constant(2 * jnp.ones((4, 4)), name="c2", device="/job:worker/task:1")
+    out = b.reduce_sum(b.matmul(c1, c2, name="mm"), name="out")
+    return b, out
+
+
+def test_pipeline_runs_once_across_repeated_runs():
+    """§3.2/§4.2: prune/place/partition/schedule happen once per signature."""
+    b, out = _multi_device_graph()
+    sess = Session(b.graph, devices=_two_workers())
+    _reset_pass_stats()
+    for _ in range(5):
+        assert float(sess.run(out.ref)) == 128.0
+    assert pl.STATS["place_calls"] == 1
+    assert pt.STATS["partition_calls"] == 1
+    assert sc.STATS["schedule_calls"] == 1
+    assert sess.cache_stats["misses"] == 1
+    assert sess.cache_stats["hits"] == 4
+
+
+def test_uncached_session_rebuilds_every_run():
+    """max_cached_executables=0 is the benchmark baseline: rebuild per run."""
+    b, out = _multi_device_graph()
+    sess = Session(b.graph, devices=_two_workers(), max_cached_executables=0)
+    _reset_pass_stats()
+    for _ in range(3):
+        assert float(sess.run(out.ref)) == 128.0
+    assert pl.STATS["place_calls"] == 3
+    assert pt.STATS["partition_calls"] == 3
+
+
+def test_cached_run_returns_fresh_variable_values():
+    """Reuse must not freeze state: Variables are read per run."""
+    b = GraphBuilder()
+    v = b.variable("v", init_value=lambda: jnp.zeros(()))
+    upd = b.assign_add(v, b.constant(jnp.ones(()), name="one"))
+    sess = Session(b.graph)
+    got = [float(sess.run(upd.ref)) for _ in range(3)]
+    assert got == [1.0, 2.0, 3.0]
+    assert sess.cache_stats["misses"] == 1
+    assert sess.cache_stats["hits"] == 2
+    # a different signature (reading v) still sees the latest value
+    assert float(sess.run(v.ref)) == 3.0
+
+
+def test_feed_values_change_without_rebuild():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    y = b.add(b.mul(x, x), b.constant(jnp.ones(2), name="c"), name="y")
+    sess = Session(b.graph)
+    for val in (1.0, 2.0, 3.0):
+        out = sess.run(y.ref, {x.ref: val * jnp.ones(2)})
+        np.testing.assert_allclose(out, val * val + 1.0)
+    assert sess.cache_stats["misses"] == 1
+    assert sess.cache_stats["hits"] == 2
+
+
+def test_extend_invalidates_executable():
+    """Graph version is part of the RunSignature: Extend rebuilds."""
+    b, out = _multi_device_graph()
+    sess = Session(b.graph, devices=_two_workers())
+    _reset_pass_stats()
+    sess.run(out.ref)
+    v0 = sess.graph.version
+    other = GraphBuilder()
+    other.constant(jnp.ones(2), name="late")
+    sess.extend(other.graph)
+    assert sess.graph.version > v0
+    assert float(sess.run(out.ref)) == 128.0
+    assert pl.STATS["place_calls"] == 2  # rebuilt after Extend
+    assert sess.cache_stats["misses"] == 2
+    assert sess.cache_stats["invalidations"] >= 1  # stale entry purged
+
+
+def test_device_set_change_invalidates():
+    b, out = _multi_device_graph()
+    sess = Session(b.graph)  # single virtual device first
+    assert float(sess.run(out.ref)) == 128.0
+    sess.devices = _two_workers()
+    _reset_pass_stats()
+    assert float(sess.run(out.ref)) == 128.0
+    assert pl.STATS["place_calls"] == 1  # multi-device pipeline ran
+    assert sess.cache_stats["misses"] == 2
+
+
+def test_concurrent_runs_share_one_executable():
+    """One cached Executable, many simultaneous runs, no state bleed."""
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    y = b.add(b.mul(x, x), b.constant(jnp.zeros(()), name="z"), name="y")
+    sess = Session(b.graph)
+    sess.run(y.ref, {x.ref: jnp.asarray(1.0)})  # warm the cache
+
+    results = {}
+    errors = []
+
+    def runner(val):
+        try:
+            results[val] = float(sess.run(y.ref, {x.ref: jnp.asarray(float(val))}))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errors
+    assert results == {i: float(i * i) for i in range(8)}
+    assert sess.cache_stats["misses"] == 1  # everyone reused the warm entry
+
+
+def test_concurrent_multi_device_runs_do_not_mix_rendezvous():
+    b, out = _multi_device_graph()
+    sess = Session(b.graph, devices=_two_workers())
+    sess.run(out.ref)  # warm
+    vals, errors = [], []
+
+    def runner():
+        try:
+            vals.append(float(sess.run(out.ref)))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errors
+    assert vals == [128.0] * 4
+    assert sess.cache_stats["misses"] == 1
+
+
+def test_stuck_worker_raises_naming_device():
+    """§3.3 failure reporting: a hung worker is a clear error, not a
+    silent KeyError on a missing fetch."""
+    from repro.core import distributed_runner as dr
+
+    b = GraphBuilder()
+    c = b.constant(jnp.ones(2), name="c", device="/job:worker/task:0")
+    slow = b.graph.add_node("SleepTest", [c], name="sleeper",
+                            attrs={"seconds": 3.0}, device="/job:worker/task:1")
+    sess = Session(b.graph, devices=_two_workers())
+    node_set = sess.pruned_nodes([slow.ref], {})
+    with pytest.raises(ExecutorError) as ei:
+        dr.run_partitioned(sess, node_set, [slow.ref], {}, timeout=0.3)
+    msg = str(ei.value)
+    assert "task:1" in msg and "timed out" in msg
+
+
+def test_make_callable_steady_state_hits_cache():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    y = b.mul(x, x, name="y")
+    sess = Session(b.graph)
+    call = sess.make_callable([y.ref], [x.ref])
+    for v in range(4):
+        (out,) = call(jnp.asarray(float(v)))
+        assert float(out) == v * v
+    assert sess.cache_stats["misses"] == 1
+    assert sess.cache_stats["hits"] == 3
