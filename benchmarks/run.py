@@ -139,6 +139,12 @@ def bench_compression():
 
 
 def bench_input_pipeline():
+    """§4.6 prefetch overlap.  Median of several reps: a mean of 3 was
+    noisy enough to report a spurious <1.0x "regression" (batch
+    generation holds the GIL for ~4ms at a stretch, so a single convoyed
+    rep dominated the mean — see data/pipeline.py Prefetcher._fill)."""
+    import statistics
+
     from repro.data import SyntheticLMDataset, Prefetcher, batch_iterator
 
     ds = SyntheticLMDataset(vocab_size=32000, seq_len=512, seed=0)
@@ -156,8 +162,17 @@ def bench_input_pipeline():
             time.sleep(0.002)
         pf.stop()
 
-    us_direct = _timeit(consume_direct, n=3, warmup=1)
-    us_pf = _timeit(consume_prefetched, n=3, warmup=1)
+    def _median_us(fn, n=7):
+        fn()  # warmup
+        reps = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            reps.append((time.perf_counter() - t0) * 1e6)
+        return statistics.median(reps)
+
+    us_direct = _median_us(consume_direct)
+    us_pf = _median_us(consume_prefetched)
     emit("b5_pipeline_no_prefetch", us_direct, "")
     emit("b5_pipeline_prefetch", us_pf,
          f"overlap_win={us_direct / us_pf:.2f}x")
@@ -256,35 +271,41 @@ def bench_roofline_table():
         emit("b10_roofline_worst", worst[1] * 1e6, worst[0])
 
 
+def _two_worker_graph(n_remote=96):
+    # fan-in: many remote tensors consumed along a local chain — lots
+    # of Recvs, so the §3.2.1/§3.2.2/§5.2 build passes dominate the
+    # uncached path while per-run execution stays cheap
+    from repro.core import GraphBuilder
+
+    b = GraphBuilder()
+    remotes = [b.constant(jnp.ones((4, 4)), name=f"r{i}",
+                          device="/job:worker/task:0")
+               for i in range(n_remote)]
+    cur = b.constant(jnp.ones((4, 4)), name="seed",
+                     device="/job:worker/task:1")
+    for i, r in enumerate(remotes):
+        cur = b.add(b.mul(cur, cur, name=f"m{i}",
+                          device="/job:worker/task:1"),
+                    r, name=f"u{i}", device="/job:worker/task:1")
+    out = b.reduce_sum(cur, name="out", device="/job:worker/task:1")
+    return b.graph, out
+
+
 def bench_executable_cache():
     """DESIGN.md §5: steady-state Session.run steps/sec, cached Executable
     vs rebuilding prune/place/partition/schedule/executors every run, on a
-    2-worker graph (the paper's "caches these graphs" master optimisation)."""
-    from repro.core import GraphBuilder, Session
+    2-worker graph (the paper's "caches these graphs" master optimisation).
+    Both sessions run UNFUSED so b12 keeps measuring the interpreted
+    dispatch path across PRs (b13 measures the fused path)."""
+    from repro.core import Session
     from repro.runtime.devices import DeviceSet
 
-    def build_graph(n_remote=96):
-        # fan-in: many remote tensors consumed along a local chain — lots
-        # of Recvs, so the §3.2.1/§3.2.2/§5.2 build passes dominate the
-        # uncached path while per-run execution stays cheap
-        b = GraphBuilder()
-        remotes = [b.constant(jnp.ones((4, 4)), name=f"r{i}",
-                              device="/job:worker/task:0")
-                   for i in range(n_remote)]
-        cur = b.constant(jnp.ones((4, 4)), name="seed",
-                         device="/job:worker/task:1")
-        for i, r in enumerate(remotes):
-            cur = b.add(b.mul(cur, cur, name=f"m{i}",
-                              device="/job:worker/task:1"),
-                        r, name=f"u{i}", device="/job:worker/task:1")
-        out = b.reduce_sum(cur, name="out", device="/job:worker/task:1")
-        return b.graph, out
-
-    g1, out1 = build_graph()
-    g2, out2 = build_graph()
-    cached = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"))
+    g1, out1 = _two_worker_graph()
+    g2, out2 = _two_worker_graph()
+    cached = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+                     fuse_regions=False)
     uncached = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                       max_cached_executables=0)
+                       max_cached_executables=0, fuse_regions=False)
     us_uncached = _timeit(lambda: uncached.run(out2.ref), n=8, warmup=2)
     us_cached = _timeit(lambda: cached.run(out1.ref), n=8, warmup=2)
     sps_cached = 1e6 / us_cached
@@ -293,6 +314,44 @@ def bench_executable_cache():
     emit("b12_run_cached_executable", us_cached,
          f"{sps_cached:.0f}steps/s,speedup={us_uncached / us_cached:.1f}x,"
          f"hits={cached.cache_stats['hits']}")
+
+
+def bench_fused_partitioned_step():
+    """§10 region fusion (DESIGN.md §7): the b12 2-worker graph executed
+    as a handful of FusedRegion kernels + Send/Recv, vs the same cached
+    Executable interpreted node-by-node; plus per-op dispatch overhead on
+    a fused 64-op chain vs the b1-style interpreted chain."""
+    from repro.core import GraphBuilder, Session
+    from repro.runtime.devices import DeviceSet
+
+    g1, out1 = _two_worker_graph()
+    g2, out2 = _two_worker_graph()
+    fused = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+                    fuse_regions=True)
+    interp = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+                     fuse_regions=False)
+    us_interp = _timeit(lambda: interp.run(out2.ref), n=8, warmup=2)
+    us_fused = _timeit(lambda: fused.run(out1.ref), n=8, warmup=2)
+    emit("b13_fused_partitioned_step", us_fused,
+         f"{1e6 / us_fused:.0f}steps/s,interp={1e6 / us_interp:.0f}steps/s,"
+         f"speedup={us_interp / us_fused:.1f}x")
+
+    # per-op dispatch overhead: placeholder-fed so constant folding cannot
+    # collapse the chain — the fused run dispatches ONE super-node
+    n_ops = 64
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    cur = x
+    for i in range(n_ops):
+        cur = b.add(cur, x, name=f"a{i}")
+    sf = Session(b.graph, fuse_regions=True)
+    su = Session(b.graph, fuse_regions=False)
+    X = jnp.ones((8, 8))
+    us_u = _timeit(lambda: su.run(cur.ref, {x.ref: X}))
+    us_f = _timeit(lambda: sf.run(cur.ref, {x.ref: X}))
+    emit("b13_fused_chain_dispatch", us_f,
+         f"{us_f / n_ops:.2f}us/op@{n_ops}ops,interp={us_u / n_ops:.2f}us/op,"
+         f"speedup={us_u / us_f:.1f}x")
 
 
 BENCHES = [
@@ -307,6 +366,7 @@ BENCHES = [
     bench_train_throughput,
     bench_roofline_table,
     bench_executable_cache,
+    bench_fused_partitioned_step,
 ]
 
 
@@ -317,6 +377,78 @@ def write_json(path: str) -> None:
     with open(path, "w") as fh:
         json.dump(rec, fh, indent=2, sort_keys=True)
     print(f"# wrote {path}", flush=True)
+
+
+# --- regression gate (CI / `pytest -m benchcheck`) --------------------------
+
+# key metrics guarded against regression, with the benchmark function
+# that produces each (b1: dispatch overhead, b9: end-to-end training,
+# b12: cached multi-device step, b13: fused multi-device step)
+KEY_METRICS = {
+    "b1_session_run_overhead": bench_session_run_overhead,
+    "b9_train_tokens_per_s": bench_train_throughput,
+    "b12_run_cached_executable": bench_executable_cache,
+    "b13_fused_partitioned_step": bench_fused_partitioned_step,
+}
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_latest.json")
+
+
+def run_check(threshold: float = 0.25, baseline_path: str = BASELINE_PATH,
+              metrics=None) -> int:
+    """Re-run the key benchmarks and compare against the committed
+    baseline artifact; returns the number of metrics that regressed by
+    more than ``threshold`` (so 0 == pass).  A metric missing from the
+    baseline (e.g. first run after adding it) is reported but not failed.
+    """
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    wanted = dict(KEY_METRICS if metrics is None else
+                  {m: KEY_METRICS[m] for m in metrics})
+
+    def run_bench(bench) -> None:
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001
+            emit(f"FAIL_{bench.__name__}", -1.0, repr(e)[:80])
+
+    def best(metric: str):
+        # min across (re)runs: the noise-robust latency estimator
+        vals = [us for name, us, _ in ROWS if name == metric and us >= 0]
+        return min(vals) if vals else None
+
+    for bench in dict.fromkeys(wanted.values()):
+        run_bench(bench)
+    failures = 0
+    for metric, bench in wanted.items():
+        if metric not in baseline:
+            print(f"# CHECK SKIP {metric}: not in baseline "
+                  f"({os.path.basename(baseline_path)})")
+            continue
+        base_us = baseline[metric]["us_per_call"]
+
+        def ratio():
+            new_us = best(metric)
+            if new_us is None or base_us <= 0:
+                return None
+            return new_us / base_us
+
+        r = ratio()
+        retries = 2
+        while r is not None and r > 1.0 + threshold and retries:
+            retries -= 1  # looks like a regression: re-measure before failing
+            run_bench(bench)
+            r = ratio()
+        if r is None:
+            print(f"# CHECK FAIL {metric}: benchmark did not produce it")
+            failures += 1
+            continue
+        status = "FAIL" if r > 1.0 + threshold else "ok"
+        print(f"# CHECK {status} {metric}: {best(metric):.1f}us vs "
+              f"baseline {base_us:.1f}us ({r:.2f}x)")
+        if r > 1.0 + threshold:
+            failures += 1
+    return failures
 
 
 def main(argv=None) -> None:
@@ -330,7 +462,17 @@ def main(argv=None) -> None:
                          "default: BENCH_latest.json for full runs, disabled "
                          "for --only runs so a filtered subset never "
                          "clobbers the tracked artifact)")
+    ap.add_argument("--check", action="store_true",
+                    help="re-run the key metrics (b1, b9, b12, b13) and exit "
+                         "non-zero if any regressed >25%% vs the committed "
+                         "BENCH_latest.json")
+    ap.add_argument("--check-threshold", type=float, default=0.25,
+                    help="allowed relative regression for --check")
     args = ap.parse_args(argv)
+    if args.check:
+        print("name,us_per_call,derived")
+        failures = run_check(threshold=args.check_threshold)
+        sys.exit(1 if failures else 0)
     if args.json is None:
         args.json = "" if args.only else os.path.join(
             os.path.dirname(__file__), "BENCH_latest.json")

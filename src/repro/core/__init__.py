@@ -14,12 +14,14 @@ from .executable import Executable, ExecutableCache, RunSignature
 from .session import Session
 from .autodiff import gradients
 from .control_flow import while_loop, cond
-from .lowering import compile_subgraph, Lowered, LoweringError
+from .lowering import compile_subgraph, lower_region, Lowered, LoweringError
+from .fusion import FusionError, FusionResult, RegionSpec
 
 __all__ = [
     "Graph", "Node", "TensorRef", "GraphError", "as_ref",
     "GraphBuilder", "register", "register_gradient", "register_kernel", "REGISTRY",
     "Executable", "ExecutableCache", "RunSignature",
     "Session", "gradients", "while_loop", "cond",
-    "compile_subgraph", "Lowered", "LoweringError",
+    "compile_subgraph", "lower_region", "Lowered", "LoweringError",
+    "FusionError", "FusionResult", "RegionSpec",
 ]

@@ -42,6 +42,28 @@ class CondSpec:
     merge_names: List[str]              # per-output Merge (results)
 
 
+def loop_spec_members(lname: str, spec: "LoopSpec") -> List[str]:
+    """Every node name belonging to loop ``lname`` (primitives included).
+
+    Shared by the §10 lowering (macro expansion), the §5.1 CSE guard and
+    the region-fusion pass — all of which must treat a loop's members as
+    one indivisible control-flow unit.
+    """
+    return (
+        spec.cond_nodes + spec.body_nodes + spec.merge_names
+        + spec.switch_names + spec.exit_names
+        + [f"{lname}/enter{i}" for i in range(len(spec.init_refs))]
+        + [f"{lname}/next{i}" for i in range(len(spec.init_refs))]
+        + [f"{lname}/cond"]
+    )
+
+
+def cond_spec_members(spec: "CondSpec") -> List[str]:
+    """Every node name belonging to a conditional (primitives included)."""
+    return (spec.switch_names + spec.true_nodes + spec.false_nodes
+            + spec.merge_names)
+
+
 def while_loop(
     b: GraphBuilder,
     cond_fn: Callable[..., "Node | TensorRef"],

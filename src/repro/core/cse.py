@@ -29,21 +29,31 @@ def _attr_key(attrs) -> Tuple:
     return tuple(items)
 
 
-def eliminate_common_subexpressions(g: Graph) -> Dict[str, str]:
-    """Rewrite ``g`` in place; return {eliminated_node: survivor}."""
+def eliminate_common_subexpressions(g: Graph, node_names=None) -> Dict[str, str]:
+    """Rewrite ``g`` in place; return {eliminated_node: survivor}.
+
+    ``node_names`` restricts which nodes may be *merged* (eliminated or
+    chosen as a survivor); edges of every node are still rewired.  The
+    region-fusion pass uses this to scope CSE to one device's fusible
+    node set so nodes are never merged across devices or into
+    control-flow bodies.
+    """
     canonical: Dict[Tuple, str] = {}
     replaced: Dict[str, str] = {}
+    mergeable = set(node_names) if node_names is not None else None
 
     def resolve(ref: TensorRef) -> TensorRef:
         while ref.node in replaced:
             ref = TensorRef(replaced[ref.node], ref.port)
         return ref
 
-    for name in g.topo_sort():
+    for name in g.topo_sort(skip_back_edges=True):
         node = g.nodes[name]
         node.inputs = [resolve(r) for r in node.inputs]
         node.control_inputs = [replaced.get(c, c) for c in node.control_inputs]
         if node.op in _NEVER_MERGE or ops_mod.opdef(node.op).stateful:
+            continue
+        if mergeable is not None and name not in mergeable:
             continue
         key = (
             node.op,

@@ -26,6 +26,7 @@ caches its jitted slot step directly on the model instance
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -33,6 +34,7 @@ from typing import Any, Callable, Dict, FrozenSet, Hashable, List, Optional, Seq
 
 from .graph import TensorRef
 from .executor import ExecutionContext, Executor, ExecutorError
+from . import fusion as fusion_mod
 from . import placement as placement_mod
 from . import partition as partition_mod
 from . import scheduler as scheduler_mod
@@ -52,6 +54,13 @@ class RunSignature:
     feed_keys: FrozenSet[TensorRef]
     device_fingerprint: Tuple[str, ...]
     graph_version: int
+    # region fusion and its numerics mode are part of the signature:
+    # flipping ``Session.fuse_regions`` or ``REPRO_FUSE_NUMERICS``
+    # mid-process must rebuild, never reuse a stale plan (a cached
+    # strict executable silently serving a fast-mode process, or vice
+    # versa, would make results signature-dependent)
+    fuse_regions: bool = True
+    fuse_numerics: str = "strict"
 
     @staticmethod
     def for_session(session, fetch_refs: Sequence[TensorRef],
@@ -63,6 +72,8 @@ class RunSignature:
             feed_keys=frozenset(feed_keys),
             device_fingerprint=fp,
             graph_version=session.graph.version,
+            fuse_regions=getattr(session, "fuse_regions", True),
+            fuse_numerics=os.environ.get("REPRO_FUSE_NUMERICS", "strict"),
         )
 
 
@@ -143,12 +154,25 @@ class Executable:
                  node_set: Optional[Set[str]] = None,
                  compress: bool = False,
                  cost_model: Optional[placement_mod.CostModel] = None,
-                 force_partitioned: bool = False) -> None:
+                 force_partitioned: bool = False,
+                 fuse_regions: Optional[bool] = None) -> None:
         self.session = session
         self.fetches: Tuple[TensorRef, ...] = tuple(fetch_refs)
         self.feed_keys: FrozenSet[TensorRef] = frozenset(feed_keys)
         self.graph_version = session.graph.version
         self.compress = compress
+        self.fuse_regions = (getattr(session, "fuse_regions", True)
+                             if fuse_regions is None else fuse_regions)
+        # DESIGN.md §7: region fusion runs once per signature, here; the
+        # result (incl. each region's lazily-jitted kernel) is cached with
+        # the Executable.  Fetches into fused members are remapped to the
+        # exporting region's output port.
+        self.fusion: Optional[fusion_mod.FusionResult] = None
+        self._fetch_remap: Dict[TensorRef, TensorRef] = {}
+        # tracer= runs observe the faithful unfused interpretation (per-
+        # kernel EEG events, §9.2); built lazily on the first traced run
+        self._unfused: Optional[Tuple[Any, Any]] = None
+        self._unfused_lock = threading.Lock()
 
         if node_set is None:
             node_set = session.pruned_nodes(
@@ -163,28 +187,52 @@ class Executable:
         self.multi_device = devices is not None and (
             len(devices) > 1 or force_partitioned)
         if self.multi_device:
-            cm = cost_model or placement_mod.CostModel()
+            cm = self._cost_model = cost_model or placement_mod.CostModel()
             self.placement = placement_mod.place(
                 session.graph, devices, cm, self.node_set)
             self.partitioned = partition_mod.partition(
                 session.graph, self.placement, self.node_set, compress=compress)
+            exec_graph = self.partitioned.graph
+            exec_placement = self.partitioned.placement
+            device_nodes = self.partitioned.device_nodes
+            if self.fuse_regions:
+                fus = fusion_mod.try_fuse(
+                    exec_graph, set(exec_graph.nodes),
+                    placement=exec_placement,
+                    feeds=self.feed_keys, fetch_refs=self.fetches,
+                    written_vars=fusion_mod.written_variables(
+                        exec_graph, exec_graph.nodes))
+                if fus is not None and (fus.regions or fus.changed):
+                    self.fusion = fus
+                    exec_graph = fus.graph
+                    exec_placement = fus.placement
+                    self._fetch_remap = fus.fetch_map
+                    device_nodes = {}
+                    for n in fus.names:
+                        device_nodes.setdefault(
+                            exec_placement[n], set()).add(n)
             scheduler_mod.schedule_recvs(
-                self.partitioned.graph, set(self.partitioned.graph.nodes),
-                cm, devices, self.partitioned.placement)
+                exec_graph, set(exec_graph.nodes), cm, devices, exec_placement)
             # one immutable Executor per device, reused across runs
-            self.device_executors: Dict[str, Executor] = {
-                dev: Executor(self.partitioned.graph, node_filter=names,
-                              device_label=dev)
-                for dev, names in self.partitioned.device_nodes.items()
-            }
-            self.fetch_by_dev: Dict[str, List[int]] = {}
-            for i, ref in enumerate(self.fetches):
-                dev = self.partitioned.placement[ref.node]
-                self.fetch_by_dev.setdefault(dev, []).append(i)
-            self.n_nodes = len(self.partitioned.graph.nodes)
+            self.device_executors = self._build_executors(
+                exec_graph, device_nodes)
+            self.fetch_by_dev = self._route_fetches(
+                exec_placement, device_nodes, remap=True)
+            self.n_nodes = len(exec_graph.nodes)
         else:
-            self.executor = Executor(session.graph, node_filter=self.node_set)
-            self.n_nodes = len(self.node_set)
+            exec_graph, exec_names = session.graph, self.node_set
+            if self.fuse_regions:
+                fus = fusion_mod.try_fuse(
+                    session.graph, self.node_set, placement=None,
+                    feeds=self.feed_keys, fetch_refs=self.fetches,
+                    written_vars=fusion_mod.written_variables(
+                        session.graph, self.node_set))
+                if fus is not None and (fus.regions or fus.changed):
+                    self.fusion = fus
+                    exec_graph, exec_names = fus.graph, fus.names
+                    self._fetch_remap = fus.fetch_map
+            self.executor = Executor(exec_graph, node_filter=exec_names)
+            self.n_nodes = len(exec_names)
 
     # ------------------------------------------------------------------
     def run(self, feeds: Optional[Dict[TensorRef, Any]] = None, *,
@@ -195,17 +243,82 @@ class Executable:
             raise ExecutorError(
                 f"feed keys {sorted(map(str, feeds))} do not match the keys this "
                 f"Executable was compiled for {sorted(map(str, self.feed_keys))}")
+        if tracer is not None and self.fusion is not None:
+            # per-kernel tracing: run the faithful unfused interpretation
+            # (fused kernels are opaque blobs to an EEG-style tracer)
+            if self.multi_device:
+                execs, fetch_by_dev = self._unfused_pipeline()
+                return self._run_multi(
+                    feeds, trace=trace, tracer=tracer, timeout=timeout,
+                    executors=execs, fetch_by_dev=fetch_by_dev, remap=False)
+            executor, _ = self._unfused_pipeline()
+            return executor.run(self.fetches, feeds, ctx=self.session._ctx(),
+                                trace=trace, tracer=tracer)
         if self.multi_device:
             return self._run_multi(feeds, trace=trace, tracer=tracer,
                                    timeout=timeout)
-        return self.executor.run(self.fetches, feeds, ctx=self.session._ctx(),
+        fetches = [self._fetch_remap.get(r, r) for r in self.fetches]
+        return self.executor.run(fetches, feeds, ctx=self.session._ctx(),
                                  trace=trace, tracer=tracer)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _build_executors(graph, device_nodes) -> Dict[str, Executor]:
+        return {
+            dev: Executor(graph, node_filter=names, device_label=dev)
+            for dev, names in device_nodes.items()
+        }
+
+    def _route_fetches(self, placement: Dict[str, str], device_nodes,
+                       *, remap: bool) -> Dict[str, List[int]]:
+        """device -> indices of ``self.fetches`` that device produces.
+
+        ``remap`` routes fetches into fused members through the exporting
+        region's node (the fused pipeline); the unfused pipeline routes
+        the original refs.
+        """
+        fetch_by_dev: Dict[str, List[int]] = {}
+        for i, ref in enumerate(self.fetches):
+            mref = self._fetch_remap.get(ref, ref) if remap else ref
+            dev = placement.get(mref.node)
+            if dev is None and ref in self.feed_keys:
+                # fully-fed fetch: any worker returns the fed value
+                dev = next(iter(device_nodes))
+            fetch_by_dev.setdefault(dev, []).append(i)
+        return fetch_by_dev
+
+    def _unfused_pipeline(self):
+        """Lazily-built unfused executors for tracer= runs (DESIGN.md §7)."""
+        with self._unfused_lock:
+            if self._unfused is None:
+                if self.multi_device:
+                    pg = self.partitioned.graph
+                    scheduler_mod.schedule_recvs(
+                        pg, set(pg.nodes), self._cost_model,
+                        self.session.devices, self.partitioned.placement)
+                    self._unfused = (
+                        self._build_executors(
+                            pg, self.partitioned.device_nodes),
+                        self._route_fetches(
+                            self.partitioned.placement,
+                            self.partitioned.device_nodes, remap=False))
+                else:
+                    self._unfused = (
+                        Executor(self.session.graph, node_filter=self.node_set),
+                        None)
+            return self._unfused
 
     # ------------------------------------------------------------------
     def _run_multi(self, feeds: Dict[TensorRef, Any], *,
                    trace: Optional[List[str]], tracer: Any,
-                   timeout: float) -> List[Any]:
+                   timeout: float,
+                   executors: Optional[Dict[str, Executor]] = None,
+                   fetch_by_dev: Optional[Dict[str, List[int]]] = None,
+                   remap: bool = True) -> List[Any]:
         session = self.session
+        executors = executors if executors is not None else self.device_executors
+        fetch_by_dev = (fetch_by_dev if fetch_by_dev is not None
+                        else self.fetch_by_dev)
         # per-run rendezvous: concurrent runs never mix; its recv timeout
         # tracks the run deadline so a caller-raised timeout is honoured
         run_rdv = Rendezvous(timeout=timeout)
@@ -222,8 +335,13 @@ class Executable:
                 device_kind=dev_name.split("device:")[-1].split(":")[0],
             )
             local_trace: Optional[List[str]] = [] if trace is not None else None
-            idxs = self.fetch_by_dev.get(dev_name, [])
-            local_fetches = [self.fetches[i] for i in idxs]
+            idxs = fetch_by_dev.get(dev_name, [])
+            if remap:
+                local_fetches = [
+                    self._fetch_remap.get(self.fetches[i], self.fetches[i])
+                    for i in idxs]
+            else:
+                local_fetches = [self.fetches[i] for i in idxs]
             try:
                 vals = executor.run(local_fetches, feeds, ctx=ctx,
                                     trace=local_trace, tracer=tracer)
@@ -238,7 +356,7 @@ class Executable:
 
         threads = {
             dev: threading.Thread(target=worker, args=(dev, ex), daemon=True)
-            for dev, ex in self.device_executors.items()
+            for dev, ex in executors.items()
         }
         for t in threads.values():
             t.start()

@@ -13,7 +13,8 @@ flight; dead tensors propagate through untaken branches, and dead
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Node, TensorRef
 from . import ops as ops_mod
@@ -72,7 +73,10 @@ class ExecutorState:
     # per-(node, ctx) countdown of outstanding deps
     pending: Dict[Tuple[str, FrameCtx], int] = dataclasses.field(default_factory=dict)
     merge_fired: Set[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=set)
-    ready: List[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=list)
+    # deque: the scheduler pops from the head on every dispatch and
+    # rotates deferred Recvs to the tail — O(1) both ways (a list's
+    # pop(0) is O(n) per dispatch)
+    ready: Deque[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=deque)
     done: Set[Tuple[str, FrameCtx]] = dataclasses.field(default_factory=set)
     # loop-invariant inputs not yet produced: (producer, port|None) -> waiters
     waiters: Dict[Tuple[str, Any], List[Tuple[str, FrameCtx]]] = dataclasses.field(default_factory=dict)
@@ -90,6 +94,34 @@ def run_kernel(ctx: ExecutionContext, node: Node, inputs: Sequence[Any],
         raise ExecutorError(
             f"op {node.op} ({node.name}) produced {len(outs)} outputs, expected {n_out}")
     return outs
+
+
+def run_fused_interpreted(ctx: ExecutionContext, node: Node,
+                          inputs: Sequence[Any], tracer: Any,
+                          device_label: str, frame_ctx: FrameCtx) -> Tuple[Any, ...]:
+    """Execute a FusedRegion's members node-by-node through ``run_kernel``.
+
+    Used when a tracer is attached: per-member events are recorded exactly
+    as if the region had never been fused.  Variable reads/writes go
+    straight through ``ctx`` (the eager semantics), so state effects are
+    identical to both the jitted dispatch and the unfused executor.
+    """
+    spec = node.attrs["spec"]
+    g = spec.subgraph
+    vals: Dict[Tuple[str, int], Any] = {
+        (r.node, r.port): v for r, v in zip(spec.input_refs, inputs)}
+    bound = set(vals)  # fed member ports keep shadowing their producer (§4.2)
+    for m in spec.members:  # topo order by construction
+        mnode = g.nodes[m]
+        ins = [vals[(r.node, r.port)] for r in mnode.inputs]
+        t_start = tracer.now()
+        outs = run_kernel(ctx, mnode, ins)
+        tracer.record(m, mnode.op, device_label, t_start, tracer.now(),
+                      frame_ctx)
+        for p, v in enumerate(outs):
+            if (m, p) not in bound:
+                vals[(m, p)] = v
+    return tuple(vals[(r.node, r.port)] for r in spec.output_refs)
 
 
 class Executor:
@@ -325,7 +357,7 @@ class Executor:
             steps += 1
             if steps > MAX_ITERATIONS:
                 raise ExecutorError("executor exceeded MAX_ITERATIONS (livelock?)")
-            name, ctx = ready.pop(0)
+            name, ctx = ready.popleft()
             key = (name, ctx)
             if key in done:
                 continue
@@ -424,10 +456,18 @@ class Executor:
                 continue
 
             if tracer is not None:
-                t_start = tracer.now()
-                outs = run_kernel(run_ctx, node, ins)
-                tracer.record(name, node.op, self.device_label,
-                              t_start, tracer.now(), ctx)
+                if node.op == "FusedRegion":
+                    # EEG-style tracing (§9.2) needs per-kernel events, which
+                    # a jitted blob cannot provide: interpret the region's
+                    # members one by one instead (identical semantics — this
+                    # IS the eager path, scoped to the region).
+                    outs = run_fused_interpreted(run_ctx, node, ins, tracer,
+                                                 self.device_label, ctx)
+                else:
+                    t_start = tracer.now()
+                    outs = run_kernel(run_ctx, node, ins)
+                    tracer.record(name, node.op, self.device_label,
+                                  t_start, tracer.now(), ctx)
             else:
                 outs = run_kernel(run_ctx, node, ins)
             for p, v in enumerate(outs):

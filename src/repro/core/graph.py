@@ -184,17 +184,32 @@ class Graph:
         g.cond_specs = dict(self.cond_specs)
         return g
 
-    def topo_sort(self, names: Optional[Iterable[str]] = None) -> List[str]:
+    def topo_sort(self, names: Optional[Iterable[str]] = None, *,
+                  skip_back_edges: bool = False) -> List[str]:
         """Dependency-respecting order (construction order used as tiebreak,
-        the paper's §4.1 memory heuristic)."""
+        the paper's §4.1 memory heuristic).
+
+        ``skip_back_edges=True`` ignores edges whose producer is a
+        ``NextIteration`` node — the only legal cycle source (the §4.4
+        while-loop back edge into Merge) — so structural passes like
+        region fusion can order graphs that contain loops.
+        """
         keep = set(names) if names is not None else set(self.nodes)
         indeg: Dict[str, int] = {}
         consumers: Dict[str, List[str]] = {n: [] for n in keep}
+
+        def _deps(node: Node) -> List[str]:
+            ds = self.deps(node)
+            if skip_back_edges:
+                ds = [d for d in ds
+                      if d not in self.nodes or self.nodes[d].op != "NextIteration"]
+            return ds
+
         for n in self.nodes:  # insertion order => deterministic tie-break
             if n not in keep:
                 continue
             node = self.nodes[n]
-            ds = [d for d in self.deps(node) if d in keep]
+            ds = [d for d in _deps(node) if d in keep]
             indeg[n] = len(ds)
             for d in ds:
                 consumers[d].append(n)

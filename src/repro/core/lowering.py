@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import jax
 
 from .graph import Graph, Node, TensorRef, as_ref
+from . import control_flow
 from . import ops as ops_mod
 from . import cse as cse_mod
 
@@ -82,18 +83,10 @@ class _Evaluator:
         self.loop_of: Dict[str, str] = {}
         self.cond_of: Dict[str, str] = {}
         for lname, spec in g.loop_specs.items():
-            members = (
-                spec.cond_nodes + spec.body_nodes + spec.merge_names
-                + spec.switch_names + spec.exit_names
-                + [f"{lname}/enter{i}" for i in range(len(spec.init_refs))]
-                + [f"{lname}/next{i}" for i in range(len(spec.init_refs))]
-                + [f"{lname}/cond"]
-            )
-            for m in members:
+            for m in control_flow.loop_spec_members(lname, spec):
                 self.loop_of[m] = lname
         for cname, spec in g.cond_specs.items():
-            for m in (spec.switch_names + spec.true_nodes + spec.false_nodes
-                      + spec.merge_names):
+            for m in control_flow.cond_spec_members(spec):
                 self.cond_of[m] = cname
 
     # ------------------------------------------------------------------
@@ -229,6 +222,61 @@ class _Evaluator:
 # ---------------------------------------------------------------------------
 
 
+def _specs_intersect(g: Graph, node_set: Set[str]) -> bool:
+    """True iff any loop/cond spec has members inside ``node_set``."""
+    for lname, spec in g.loop_specs.items():
+        if node_set.intersection(control_flow.loop_spec_members(lname, spec)):
+            return True
+    for spec in g.cond_specs.values():
+        if node_set.intersection(control_flow.cond_spec_members(spec)):
+            return True
+    return False
+
+
+def lower_region(
+    g: Graph,
+    members: Sequence[str],
+    input_refs: Sequence[TensorRef],
+    output_refs: Sequence[TensorRef],
+    member_order: Optional[Sequence[str]] = None,
+) -> Callable:
+    """Lower one fused *region* of a (partitioned) graph to a pure function.
+
+    Unlike :func:`compile_subgraph`, which owns the whole (feeds->fetches)
+    signature, a region is an arbitrary pure node set cut out of a larger
+    graph: every external data edge (including fed tensors and tensors
+    produced by Send/Recv/other regions) is an explicit positional input
+    binding, and the exported tensors are explicit positional outputs.
+
+    Returns ``fn(input_values, var_values) -> (outputs, new_var_values)``:
+
+    * ``input_values`` — values for ``input_refs``, in order;
+    * ``var_values``   — {var_name: value} for every Variable member read;
+    * ``outputs``      — tuple of values for ``output_refs``, in order;
+    * ``new_var_values`` — {var_name: value} for every variable written.
+
+    Every member is force-executed (in ``member_order``) so effect-only
+    nodes (assignments, NoOps) run exactly as the eager executor would
+    have run them — the fused/unfused parity contract.
+    """
+    member_set = set(members)
+    in_refs = [as_ref(r) for r in input_refs]
+    out_refs = [as_ref(r) for r in output_refs]
+    order = list(member_order) if member_order is not None else list(members)
+
+    def fn(input_values: Sequence[Any], var_values: Dict[str, Any]):
+        state = _LoweringState(dict(var_values))
+        bindings = {(r.node, r.port): v for r, v in zip(in_refs, input_values)}
+        ev = _Evaluator(g, member_set, state, bindings)
+        outs = tuple(ev.value(r) for r in out_refs)
+        for m in order:
+            ev.execute(m)
+        new_vars = {n: state.var_current[n] for n in state.var_writes}
+        return outs, new_vars
+
+    return fn
+
+
 def compile_subgraph(
     session,
     fetches,
@@ -253,10 +301,12 @@ def compile_subgraph(
     g = copy.deepcopy(session.graph.subgraph(node_set))
     g.loop_specs = session.graph.loop_specs
     g.cond_specs = session.graph.cond_specs
-    if run_cse:
-        # CSE must not run across control-flow boundaries; cheap guard:
-        if not g.loop_specs and not g.cond_specs:
-            cse_mod.eliminate_common_subexpressions(g)
+    if run_cse and not _specs_intersect(g, set(g.nodes)):
+        # CSE must not run across control-flow boundaries — but only the
+        # loops/conds whose members are actually IN this pruned subgraph
+        # matter; unrelated specs elsewhere in the Session graph must not
+        # disable CSE for a straight-line step (§5.1).
+        cse_mod.eliminate_common_subexpressions(g)
     node_set = set(g.nodes)
 
     var_read_candidates = [n for n in g.nodes if g.nodes[n].op == "Variable"]

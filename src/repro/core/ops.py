@@ -503,6 +503,21 @@ def _decompress(ctx, node, x):
     return (compression.decompress_16_to_f32(x),)
 
 
+# --- region fusion (§10) — a compiled pure subregion as one super-node ------
+
+
+def _fused_region_num_outputs(node: Node) -> int:
+    return len(node.attrs["spec"].output_refs)
+
+
+@register("FusedRegion", num_outputs=_fused_region_num_outputs, stateful=True)
+def _fused_region(ctx, node, *inputs):
+    """Dispatch one fused region: the RegionSpec reads its variables from
+    ``ctx``, calls the jitted region kernel, and commits variable writes
+    (repro.core.fusion; DESIGN.md §7)."""
+    return node.attrs["spec"].dispatch(ctx, inputs)
+
+
 # --- control flow primitives (§4.4) — executor gives these special handling --
 
 @register("Switch", num_outputs=2)

@@ -66,6 +66,20 @@ def schedule_recvs(
     cm = cost_model or CostModel()
     asap, alap = _times(g, names, cm, devices, placement)
 
+    def closure(target: str) -> Set[str]:
+        # like Graph.transitive_closure, but tolerant of dangling refs —
+        # fed edges leave inputs pointing at producers that were pruned
+        # out of the executed graph (§4.2)
+        seen: Set[str] = set()
+        stack = [target]
+        while stack:
+            t = stack.pop()
+            if t in seen or t not in g.nodes:
+                continue
+            seen.add(t)
+            stack.extend(g.deps(g.nodes[t]))
+        return seen
+
     added = 0
     for n in list(names):
         node = g.nodes[n]
@@ -81,9 +95,9 @@ def schedule_recvs(
                 continue
             if placement is not None and placement.get(m) != placement.get(n):
                 continue
-            if alap[m] <= alap[n] and asap[m] > best_t and m not in g.transitive_closure([n]):
+            if alap[m] <= alap[n] and asap[m] > best_t and m not in closure(n):
                 # avoid cycles: m must not depend on the recv
-                if n in g.transitive_closure([m]):
+                if n in closure(m):
                     continue
                 best, best_t = m, asap[m]
         if best is not None and best not in node.control_inputs:

@@ -19,6 +19,7 @@ function.
 from __future__ import annotations
 
 import itertools
+import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Node, TensorRef, as_ref
@@ -49,8 +50,17 @@ class Session:
                  containers: Optional[ContainerManager] = None,
                  checkpoint_io: Any = None,
                  devices: Any = None,
-                 max_cached_executables: int = 16) -> None:
+                 max_cached_executables: int = 16,
+                 fuse_regions: Optional[bool] = None) -> None:
         self.graph = graph or Graph()
+        # §10 region fusion (DESIGN.md §7): default-on; per-Session
+        # escape hatch via fuse_regions=False, process-wide via
+        # REPRO_FUSE_REGIONS=0.  Part of the RunSignature, so flipping it
+        # rebuilds Executables instead of reusing a stale plan.
+        if fuse_regions is None:
+            fuse_regions = os.environ.get(
+                "REPRO_FUSE_REGIONS", "1").lower() not in ("0", "false", "off")
+        self.fuse_regions = bool(fuse_regions)
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
         self.rendezvous = Rendezvous()

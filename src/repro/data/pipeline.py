@@ -17,6 +17,7 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -113,6 +114,13 @@ class Prefetcher:
         try:
             for item in self._source:
                 self.queue.enqueue(item)
+                # Yield the GIL right after publishing: a consumer blocked
+                # in dequeue() was just notified, but without an explicit
+                # yield the producer keeps the GIL for up to the switch
+                # interval (5ms default) while it generates the *next*
+                # item, serialising the very overlap the queue exists to
+                # provide (the b5 convoy effect).
+                time.sleep(0)
         except QueueClosed:
             return
         finally:

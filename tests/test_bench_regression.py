@@ -1,0 +1,33 @@
+"""Opt-in perf-regression gate: `pytest -m benchcheck`.
+
+Re-runs the key benchmarks (b1 dispatch overhead, b9 train throughput,
+b12 cached multi-device step, b13 fused multi-device step) and fails if
+any regressed by more than 25% against the committed
+``benchmarks/BENCH_latest.json``.  Deselected by default (see pyproject
+``addopts``) because a fresh run costs ~a minute; CI or a developer
+opts in explicitly, or runs ``python benchmarks/run.py --check``.
+"""
+import importlib.util
+import os
+
+import pytest
+
+_RUN_PY = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "run.py")
+
+
+def _load_bench_module():
+    spec = importlib.util.spec_from_file_location("bench_run", _RUN_PY)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.benchcheck
+def test_key_benchmarks_within_regression_budget():
+    bench = _load_bench_module()
+    if not os.path.exists(bench.BASELINE_PATH):
+        pytest.skip("no committed BENCH_latest.json baseline")
+    failures = bench.run_check(threshold=0.25)
+    assert failures == 0, (
+        f"{failures} key metric(s) regressed >25% vs BENCH_latest.json "
+        "(see '# CHECK FAIL' lines above)")

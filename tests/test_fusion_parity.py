@@ -1,0 +1,316 @@
+"""Region fusion (§10, DESIGN.md §7): fused and unfused execution must be
+bit-identical on fetches and variable state, across representative graphs
+— multi-device Send/Recv, while-loops, queues, variable read-modify-write
+chains — and fusion must invalidate on Session.extend and honour the
+``fuse_regions=False`` escape hatch (PR 1 behavior restored exactly).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session, TensorRef, while_loop, cond
+from repro.core import fusion
+from repro.runtime.devices import DeviceSet
+from repro.runtime.queues import FIFOQueue
+
+
+def _bits(x):
+    if x is None:
+        return None
+    a = np.asarray(x)
+    return (a.dtype.str, a.shape, a.tobytes())
+
+
+def _assert_bit_identical(fused_vals, unfused_vals):
+    assert len(fused_vals) == len(unfused_vals)
+    for f, u in zip(fused_vals, unfused_vals):
+        assert _bits(f) == _bits(u)
+
+
+def _parity(build, fetches_of, *, feeds_of=None, devices=None, n_runs=3):
+    """Run the same graph in a fused and an unfused Session; every fetch
+    and every variable must match bit-for-bit after every run."""
+    sessions = []
+    for fuse in (True, False):
+        b = GraphBuilder()
+        extra = build(b)
+        sess = Session(b.graph, fuse_regions=fuse,
+                       devices=devices() if devices else None)
+        sessions.append((sess, fetches_of(b, extra), extra))
+    (fs, ffetch, fextra), (us, ufetch, uextra) = sessions
+    for step in range(n_runs):
+        feeds_f = feeds_of(fextra, step) if feeds_of else None
+        feeds_u = feeds_of(uextra, step) if feeds_of else None
+        fvals = fs.run(ffetch, feeds_f)
+        uvals = us.run(ufetch, feeds_u)
+        _assert_bit_identical(fvals, uvals)
+        fvars = sorted(n for n in fs.graph.nodes
+                       if fs.graph.nodes[n].op == "Variable")
+        for vn in fvars:
+            if fs.variables.has(vn):
+                assert _bits(fs.variable_value(vn)) == _bits(us.variable_value(vn))
+    return fs, us
+
+
+def test_single_device_chain_parity_and_one_trace_entry():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    cur = x
+    for i in range(16):
+        cur = b.add(b.mul(cur, cur, name=f"m{i}"), x, name=f"a{i}")
+    fused = Session(b.graph, fuse_regions=True)
+    unfused = Session(b.graph, fuse_regions=False)
+    xv = jnp.linspace(0.1, 0.9, 8)
+    trace_f, trace_u = [], []
+    fv = fused.run(cur.ref, {x.ref: xv}, trace=trace_f)
+    uv = unfused.run(cur.ref, {x.ref: xv}, trace=trace_u)
+    _assert_bit_identical([fv], [uv])
+    # the fused run dispatches ONE super-node; the unfused all 32
+    assert len(trace_f) == 1 and trace_f[0].startswith("fused/")
+    assert len(trace_u) == 32
+
+
+def test_multi_device_send_recv_parity():
+    def build(b):
+        remotes = [b.constant(jnp.full((4, 4), float(i + 1)), name=f"r{i}",
+                              device="/job:worker/task:0") for i in range(6)]
+        cur = b.placeholder("seed")
+        for i, r in enumerate(remotes):
+            cur = b.add(b.mul(cur, cur, name=f"m{i}",
+                              device="/job:worker/task:1"),
+                        r, name=f"u{i}", device="/job:worker/task:1")
+        out = b.reduce_sum(cur, name="out", device="/job:worker/task:1")
+        return {"seed": b.graph.nodes["seed"], "out": out}
+
+    fs, us = _parity(
+        build,
+        lambda b, ex: [ex["out"].ref],
+        feeds_of=lambda ex, step: {ex["seed"].ref:
+                                   jnp.full((4, 4), 1.0 + 0.125 * step)},
+        devices=lambda: DeviceSet.make_cluster(2, 1, kind="cpu"))
+    # fusion actually engaged on the fused session
+    exe = fs.executable([TensorRef("out", 0)],
+                        frozenset({TensorRef("seed", 0)}))
+    assert exe.fusion is not None and len(exe.fusion.regions) >= 1
+
+
+def test_while_loop_graph_parity():
+    def build(b):
+        lim = b.constant(jnp.array(5), name="lim")
+        one = b.constant(jnp.array(1), name="one")
+        i0 = b.constant(jnp.array(0), name="i0")
+        acc0 = b.placeholder("acc0")
+        outs = while_loop(
+            b, lambda i, a: b.less(i, lim),
+            lambda i, a: [b.add(i, one), b.add(a, b.cast(i, "float32"))],
+            [i0, acc0])
+        return {"outs": outs, "acc0": b.graph.nodes["acc0"]}
+
+    _parity(build, lambda b, ex: list(ex["outs"]),
+            feeds_of=lambda ex, step: {ex["acc0"].ref: jnp.array(0.5 * step)})
+
+
+def test_cond_graph_parity_both_branches():
+    def build(b):
+        p = b.placeholder("p")
+        x = b.placeholder("x")
+        pre = b.mul(x, x, name="pre")
+        res = cond(b, p, lambda t: [b.add(t, t)], lambda f: [b.neg(f)], [pre])
+        post = b.add(res[0], pre, name="post")
+        return {"p": p, "x": x, "post": post}
+
+    for pred in (True, False):
+        _parity(build, lambda b, ex: [ex["post"].ref],
+                feeds_of=lambda ex, step, pred=pred: {
+                    ex["p"].ref: jnp.array(pred),
+                    ex["x"].ref: jnp.array(2.0 + step)},
+                n_runs=2)
+
+
+def test_queue_ops_parity():
+    def build(b):
+        x = b.placeholder("x")
+        sq = b.square(x, name="sq")
+        enq = b.graph.add_node("QueueEnqueue", [sq], name="enq",
+                               attrs={"queue": "q"})
+        deq = b.graph.add_node("QueueDequeue", [], name="deq",
+                               attrs={"queue": "q", "n_components": 1},
+                               control_inputs=[enq])
+        out = b.reduce_sum(b.mul(deq, deq, name="dsq"), name="out")
+        return {"x": x, "out": out}
+
+    sessions = []
+    for fuse in (True, False):
+        b = GraphBuilder()
+        ex = build(b)
+        sess = Session(b.graph, fuse_regions=fuse)
+        sess.register_queue("q", FIFOQueue(capacity=4, timeout=5.0))
+        sessions.append((sess, ex))
+    for step in range(3):
+        xv = jnp.full((3,), 1.0 + step)
+        (fs, fex), (us, uex) = sessions
+        fv = fs.run(fex["out"].ref, {fex["x"].ref: xv})
+        uv = us.run(uex["out"].ref, {uex["x"].ref: xv})
+        _assert_bit_identical([fv], [uv])
+
+
+def test_variable_read_modify_write_chain_parity():
+    def build(b):
+        v = b.variable("v", init_value=lambda: jnp.array(1.0))
+        w = b.variable("w", init_value=lambda: jnp.full((2,), 2.0))
+        a1 = b.assign_add(v, b.constant(jnp.array(0.5), name="half"))
+        # second write depends on the first through a control edge and on
+        # a computed value through a data edge
+        delta = b.mul(a1, b.constant(jnp.array(3.0), name="three"), name="delta")
+        a2 = b.graph.add_node("AssignAdd", [v, delta], name="a2",
+                              control_inputs=[a1.name])
+        wupd = b.assign(w, b.add(w, b.reshape(a2, (1,)), name="wnew"))
+        step_op = b.group([a2, wupd], name="step")
+        return {"step": step_op, "a2": a2}
+
+    _parity(build, lambda b, ex: [ex["step"].ref, ex["a2"].ref], n_runs=4)
+
+
+def test_gradient_train_step_parity():
+    """A realistic optimizer graph: gradients + assigns, run repeatedly."""
+    from repro.optim import attach_train_op
+
+    def build(b):
+        W = b.variable("W", init_value=lambda: jnp.full((3, 1), 0.1))
+        x = b.placeholder("x")
+        y = b.placeholder("y")
+        loss = b.reduce_mean(b.square(b.sub(b.matmul(x, W), y)), name="loss")
+        op = attach_train_op(b, loss, [W], optimizer="sgd", lr=0.05)
+        return {"x": x, "y": y, "loss": loss, "op": op}
+
+    rs = np.random.RandomState(0)
+    X = jnp.array(rs.randn(8, 3).astype("f"))
+    Y = jnp.array(rs.randn(8, 1).astype("f"))
+    _parity(build, lambda b, ex: [ex["loss"].ref, ex["op"].ref],
+            feeds_of=lambda ex, step: {ex["x"].ref: X, ex["y"].ref: Y},
+            n_runs=4)
+
+
+def test_fusion_invalidated_by_extend():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    y = b.add(b.mul(x, x, name="m"), x, name="y")
+    sess = Session(b.graph, fuse_regions=True)
+    assert float(sess.run(y.ref, {x.ref: jnp.array(2.0)})) == 6.0
+    exe1 = sess.executable([y.ref], frozenset({x.ref}))
+
+    other = GraphBuilder()
+    c = other.constant(jnp.array(10.0), name="late")
+    sess.extend(other.graph)
+    z = sess.graph.add_node("Add", [TensorRef("y", 0), TensorRef("late", 0)],
+                            name="z")
+    assert float(sess.run(z.ref, {x.ref: jnp.array(2.0)})) == 16.0
+    # the old signature rebuilt too (graph version changed)
+    exe2 = sess.executable([y.ref], frozenset({x.ref}))
+    assert exe2 is not exe1
+    assert exe2.graph_version > exe1.graph_version
+
+
+def test_escape_hatch_restores_unfused_pipeline():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    cur = x
+    for i in range(4):
+        cur = b.add(cur, x, name=f"a{i}")
+    sess = Session(b.graph, fuse_regions=False)
+    trace = []
+    out = sess.run(cur.ref, {x.ref: jnp.ones(2)}, trace=trace)
+    np.testing.assert_array_equal(np.asarray(out), np.full((2,), 5.0))
+    assert trace == ["a0", "a1", "a2", "a3"]  # PR 1 behavior, node by node
+    exe = sess.executable([cur.ref], frozenset({x.ref}))
+    assert exe.fusion is None
+
+
+def test_fusion_planned_once_per_signature():
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    out = b.reduce_sum(b.mul(x, x, name="m"), name="out")
+    sess = Session(b.graph)
+    before = fusion.STATS["fuse_calls"]
+    for v in range(5):
+        sess.run(out.ref, {x.ref: jnp.full((2,), float(v))})
+    assert fusion.STATS["fuse_calls"] == before + 1  # cached with the Executable
+    assert sess.cache_stats["misses"] == 1 and sess.cache_stats["hits"] == 4
+
+
+def test_written_variables_stay_unfused_and_reads_snapshot():
+    """The eager executor reads dep-free Variables in the first ready
+    wave, before any assignment; fusion must preserve that snapshot."""
+    b = GraphBuilder()
+    v = b.variable("v", init_value=lambda: jnp.array(10.0))
+    doubled = b.mul(v, b.constant(jnp.array(2.0), name="two"), name="doubled")
+    upd = b.assign_add(v, b.constant(jnp.array(1.0), name="one"))
+    fused = Session(b.graph, fuse_regions=True)
+    unfused = Session(b.graph, fuse_regions=False)
+    for sess in (fused, unfused):
+        got = sess.run([doubled.ref, upd.ref])
+        assert float(got[0]) == 20.0  # pre-write snapshot
+        assert float(sess.variable_value("v")) == 11.0
+    _assert_bit_identical(fused.run([doubled.ref, upd.ref]),
+                          unfused.run([doubled.ref, upd.ref]))
+
+
+def test_cse_never_merges_across_devices():
+    """Two identical unconstrained Consts whose consumers are pinned to
+    different workers: placement puts the twins on different devices, so
+    the pre-fusion CSE must NOT merge them — a merge would leave a
+    cross-device edge with no Send/Recv pair and the fetch would never
+    be produced."""
+    b = GraphBuilder()
+    c1 = b.constant(3.0, name="c1")
+    c2 = b.constant(3.0, name="c2")
+    u1 = b.square(c1, name="u1", device="/job:worker/task:0")
+    u2 = b.square(c2, name="u2", device="/job:worker/task:1")
+    devices = DeviceSet.make_cluster(2, 1, kind="cpu")
+    fused = Session(b.graph, devices=devices, fuse_regions=True)
+    unfused = Session(b.graph, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+                      fuse_regions=False)
+    fv = fused.run([u1.ref, u2.ref])
+    uv = unfused.run([u1.ref, u2.ref])
+    _assert_bit_identical(fv, uv)
+    assert [float(v) for v in fv] == [9.0, 9.0]
+
+
+def test_strict_numerics_on_contraction_prone_patterns():
+    """mul->add chains (FMA contraction bait) and reductions over fused
+    chains must stay bit-identical across many random inputs — the
+    numerics="strict" contract (regions compile without cross-op
+    reassociation; reductions/dots dispatch eagerly)."""
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    w = b.placeholder("w")
+    cur = x
+    for i in range(6):
+        cur = b.add(b.mul(cur, w, name=f"fm{i}"), x, name=f"fa{i}")
+    total = b.reduce_sum(cur, name="total")
+    mean = b.reduce_mean(b.square(cur, name="sq"), name="mean")
+    fused = Session(b.graph, fuse_regions=True)
+    unfused = Session(b.graph, fuse_regions=False)
+    rs = np.random.RandomState(7)
+    for _ in range(10):
+        feeds_v = (jnp.array(rs.randn(33).astype("f")),
+                   jnp.array(rs.randn(33).astype("f")))
+        fv = fused.run([total.ref, mean.ref],
+                       {x.ref: feeds_v[0], w.ref: feeds_v[1]})
+        uv = unfused.run([total.ref, mean.ref],
+                         {x.ref: feeds_v[0], w.ref: feeds_v[1]})
+        _assert_bit_identical(fv, uv)
+
+
+def test_tracer_on_fused_session_keeps_per_kernel_events():
+    from repro.tools import Tracer
+
+    b = GraphBuilder()
+    a = b.placeholder("a")
+    m = b.matmul(a, a, name="mm")
+    out = b.reduce_sum(m, name="out")
+    sess = Session(b.graph, fuse_regions=True)
+    tr = Tracer()
+    sess.run(out.ref, {a.ref: jnp.ones((3, 3))}, tracer=tr)
+    ops = {e["op"] for e in tr.events}
+    assert "MatMul" in ops and "ReduceSum" in ops
