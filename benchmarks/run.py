@@ -67,6 +67,14 @@ def bench_session_run_overhead():
 
 
 def bench_compiled_vs_eager():
+    """§10/§6: whole-graph JIT vs interpreted per-op dispatch.
+
+    The eager Session runs UNFUSED — since PR 2 the default eager path
+    partially compiles via region fusion (and the deque ready queue made
+    dispatch ~2x cheaper), which was masking the gap this benchmark
+    exists to track.  The graph is a matmul-heavy residual chain so both
+    sides do real compute and the contrast stays §10 whole-graph jit vs
+    interpreted dispatch."""
     from repro.core import GraphBuilder, Session, compile_subgraph
 
     rs = np.random.RandomState(0)
@@ -75,10 +83,12 @@ def bench_compiled_vs_eager():
         rs.randn(256, 256).astype("f") * 0.05))
     x = b.placeholder("x")
     cur = x
-    for i in range(8):
-        cur = b.relu(b.matmul(cur, W, name=f"mm{i}"), name=f"r{i}")
+    n_layers = 16
+    for i in range(n_layers):
+        h = b.matmul(cur, W, name=f"mm{i}")
+        cur = b.relu(b.add(h, cur, name=f"res{i}"), name=f"r{i}")
     out = b.reduce_sum(cur)
-    sess = Session(b.graph)
+    sess = Session(b.graph, fuse_regions=False)
     X = jnp.array(rs.randn(64, 256).astype("f"))
     eager_us = _timeit(lambda: sess.run(out.ref, {x.ref: X}))
     low = compile_subgraph(sess, [out.ref], [x.ref])
@@ -87,7 +97,7 @@ def bench_compiled_vs_eager():
     jf({"x:0": X}, {"W": Wv})  # compile
     comp_us = _timeit(lambda: jax.block_until_ready(
         jf({"x:0": X}, {"W": Wv})[0][0]))
-    emit("b2_eager_graph", eager_us, "")
+    emit("b2_eager_graph", eager_us, f"interpreted,{n_layers}xmatmul256")
     emit("b2_compiled_graph", comp_us,
          f"speedup={eager_us / comp_us:.1f}x")
 
@@ -370,13 +380,35 @@ BENCHES = [
 ]
 
 
+def _git_rev() -> str:
+    try:
+        import subprocess
+
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — best effort outside a checkout
+        return "unknown"
+
+
 def write_json(path: str) -> None:
-    """Persist the run as BENCH_*.json so perf wins are tracked across PRs."""
+    """Persist the run as BENCH_latest.json (the --check baseline) AND
+    append it to BENCH_history.jsonl — one line per full run, so perf is
+    a time series across PRs/CI runs, not a single overwritten snapshot."""
     rec = {name: {"us_per_call": us, "derived": derived}
            for name, us, derived in ROWS}
     with open(path, "w") as fh:
         json.dump(rec, fh, indent=2, sort_keys=True)
     print(f"# wrote {path}", flush=True)
+    hist = os.path.join(os.path.dirname(os.path.abspath(path)),
+                        "BENCH_history.jsonl")
+    entry = {"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+             "rev": _git_rev(), "metrics": rec}
+    with open(hist, "a") as fh:
+        fh.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"# appended {hist}", flush=True)
 
 
 # --- regression gate (CI / `pytest -m benchcheck`) --------------------------

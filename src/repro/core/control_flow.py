@@ -10,10 +10,55 @@ subgraphs — the §10 compiler path for cyclic dataflow.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .graph import Graph, Node, TensorRef, as_ref
 from .ops import GraphBuilder
+
+
+def static_frames(g: Graph, names: Optional[Iterable[str]] = None
+                  ) -> Dict[str, Tuple[str, ...]]:
+    """Static frame path (tuple of frame names) per node (§4.4).
+
+    ``Enter`` pushes its ``frame`` attr onto the producing path, ``Exit``
+    pops it, every other node lives in the deepest frame of its inputs —
+    loop-invariant values produced in an *outer* frame are read from the
+    outer context by consumers in inner frames (TF's is_constant-Enter
+    semantics without materialising extra nodes).  Shared by the
+    executor's tagged-frame interpreter, the §3.2.2 frame-aware
+    partitioner, the §5.2 Recv scheduler and the §7 fusion pass, all of
+    which must agree on which frame a node executes in.
+    """
+    keep = set(names) if names is not None else set(g.nodes)
+    frames: Dict[str, Tuple[str, ...]] = {n: () for n in keep}
+    # Fixpoint over the (cycle-tolerant) topological order: all frame
+    # information flows along forward data edges, so one sweep propagates
+    # every path and the second merely confirms convergence.  Iterating an
+    # unordered set instead can need one sweep per chain hop and silently
+    # truncate at the cap — wrong (root) frames for deep loop bodies.
+    order = g.topo_sort(keep)
+    for _ in range(64):
+        changed = False
+        for name in order:
+            node = g.nodes[name]
+            if node.op == "Enter":
+                base = frames.get(node.inputs[0].node, ()) if node.inputs else ()
+                f = base + (node.attrs["frame"],)
+            elif node.op == "Exit":
+                f = frames.get(node.inputs[0].node, ())[:-1] if node.inputs else ()
+            else:
+                f = frames[name]
+                for ref in node.inputs:
+                    pf = frames.get(ref.node, ())
+                    if len(pf) > len(f):
+                        f = pf
+            if f != frames[name]:
+                frames[name] = f
+                changed = True
+        if not changed:
+            return frames
+    raise ValueError(
+        "static_frames did not converge: malformed Enter/Exit nesting?")
 
 
 @dataclasses.dataclass

@@ -47,7 +47,7 @@ def eliminate_common_subexpressions(g: Graph, node_names=None) -> Dict[str, str]
             ref = TensorRef(replaced[ref.node], ref.port)
         return ref
 
-    for name in g.topo_sort(skip_back_edges=True):
+    for name in g.topo_sort():
         node = g.nodes[name]
         node.inputs = [resolve(r) for r in node.inputs]
         node.control_inputs = [replaced.get(c, c) for c in node.control_inputs]

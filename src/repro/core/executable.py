@@ -190,6 +190,11 @@ class Executable:
             cm = self._cost_model = cost_model or placement_mod.CostModel()
             self.placement = placement_mod.place(
                 session.graph, devices, cm, self.node_set)
+            # §4.4/DESIGN.md §8: partition is frame-aware — a while-loop
+            # whose body straddles devices gets its control skeleton
+            # replicated per device here, once, and the resulting
+            # loop-bearing partition is cached by RunSignature exactly
+            # like any straight-line graph.
             self.partitioned = partition_mod.partition(
                 session.graph, self.placement, self.node_set, compress=compress)
             exec_graph = self.partitioned.graph

@@ -18,6 +18,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set, Tu
 
 from .graph import Graph, Node, TensorRef
 from . import ops as ops_mod
+from . import control_flow as cf_mod
+from ..runtime.rendezvous import DEAD_TENSOR
 
 # A frame context: tuple of (frame_name, iteration) pairs; () is the root.
 FrameCtx = Tuple[Tuple[str, int], ...]
@@ -25,6 +27,21 @@ FrameCtx = Tuple[Tuple[str, int], ...]
 _DEAD = object()  # dead-tensor marker
 
 MAX_ITERATIONS = 100_000
+
+
+def wire_key(node: Node, ctx: FrameCtx) -> str:
+    """Rendezvous key for a Send/Recv executing in frame context ``ctx``.
+
+    §4.4 distributed loops: every iteration of a cross-device loop is a
+    distinct transfer, so in-frame Send/Recv pairs tag their static
+    rendezvous key with the (frame, iteration) context.  Both ends of a
+    pair execute in the same context by construction — the Send is driven
+    by its in-frame data input, the Recv by its frame's iteration token
+    (see partition._replicate_loop_frames) — so the tags always agree.
+    Root-frame transfers keep the bare key.
+    """
+    key = node.attrs["rendezvous_key"]
+    return key if not ctx else f"{key}#{ctx!r}"
 
 
 class ExecutorError(Exception):
@@ -157,37 +174,9 @@ class Executor:
                 self.consumers.setdefault((ref.node, ref.port), []).append((name, slot))
             for c in node.control_inputs:
                 self.ctrl_consumers.setdefault(c, []).append(name)
-        self.frames = self._static_frames()
-
-    def _static_frames(self) -> Dict[str, Tuple[str, ...]]:
-        """Static frame path (tuple of frame names) per node.
-
-        Loop-invariant values produced in an *outer* frame are read from
-        the outer context by consumers in inner frames — TF's
-        is_constant-Enter semantics without materialising extra nodes.
-        """
-        frames: Dict[str, Tuple[str, ...]] = {n: () for n in self.names}
-        for _ in range(64):  # fixpoint (depth increases monotonically)
-            changed = False
-            for name in self.names:
-                node = self.graph.nodes[name]
-                if node.op == "Enter":
-                    base = frames.get(node.inputs[0].node, ()) if node.inputs else ()
-                    f = base + (node.attrs["frame"],)
-                elif node.op == "Exit":
-                    f = frames.get(node.inputs[0].node, ())[:-1] if node.inputs else ()
-                else:
-                    f = frames[name]
-                    for ref in node.inputs:
-                        pf = frames.get(ref.node, ())
-                        if len(pf) > len(f):
-                            f = pf
-                if f != frames[name]:
-                    frames[name] = f
-                    changed = True
-            if not changed:
-                break
-        return frames
+        # static frame path per node (§4.4) — the shared analysis in
+        # control_flow.static_frames, restricted to the executed set
+        self.frames = cf_mod.static_frames(graph, self.names)
 
     # ------------------------------------------------------------------
     def run(self, fetches: Sequence[TensorRef],
@@ -371,16 +360,16 @@ class Executor:
             # outstanding Recv (never one arbitrary key: the peer may
             # produce it last).
             if (node.op == "Recv" and run_ctx.rendezvous is not None
-                    and not run_ctx.rendezvous.ready(node.attrs["rendezvous_key"])):
+                    and not run_ctx.rendezvous.ready(wire_key(node, ctx))):
                 if ready and deferred <= len(ready):
                     deferred += 1
                     ready.append(key)
                     continue
-                pending_keys = [node.attrs["rendezvous_key"]] + [
-                    g.nodes[n].attrs["rendezvous_key"]
-                    for (n, _c) in ready if g.nodes[n].op == "Recv"]
+                pending_keys = [wire_key(node, ctx)] + [
+                    wire_key(g.nodes[n], c)
+                    for (n, c) in ready if g.nodes[n].op == "Recv"]
                 run_ctx.rendezvous.wait_any(pending_keys)
-                if not run_ctx.rendezvous.ready(node.attrs["rendezvous_key"]):
+                if not run_ctx.rendezvous.ready(wire_key(node, ctx)):
                     deferred = 0  # progress was made elsewhere; re-rotate
                     ready.append(key)
                     continue
@@ -445,6 +434,50 @@ class Executor:
                 if v is _DEAD:
                     continue  # dead NextIteration is swallowed: loop terminates
                 deliver(name, 0, octx, v)
+                deliver_control(name, octx)
+                continue
+
+            # ---- Send/Recv: frame-tagged rendezvous + wire deadness ----
+            # Interpreted here (not via run_kernel) because the rendezvous
+            # key depends on the execution context, and because deadness
+            # must cross the wire: a Send with a dead input transmits the
+            # DEAD_TENSOR marker (untaken branch / terminating iteration)
+            # so the peer device's consumers can propagate it (§4.4).
+            if node.op == "Send":
+                wkey = wire_key(node, ctx)
+                if any_dead:
+                    run_ctx.rendezvous.send(wkey, DEAD_TENSOR)
+                else:
+                    v = ins[0]
+                    t_start = tracer.now() if tracer is not None else None
+                    if node.attrs.get("compress", False):
+                        from . import compression
+
+                        v = compression.compress_f32_to_16(v)
+                    run_ctx.rendezvous.send(wkey, v)
+                    if tracer is not None:
+                        tracer.record(name, node.op, self.device_label,
+                                      t_start, tracer.now(), ctx)
+                deliver_control(name, octx)
+                continue
+            if node.op == "Recv":
+                t_start = tracer.now() if tracer is not None else None
+                v = run_ctx.rendezvous.recv(wire_key(node, ctx))
+                if v is DEAD_TENSOR or any_dead:
+                    # dead over the wire, or a dead iteration token (the
+                    # loop's terminating iteration — the matching Send
+                    # transmitted a marker, consumed above to keep the
+                    # rendezvous balanced): propagate deadness locally
+                    deliver(name, 0, octx, _DEAD)
+                else:
+                    if node.attrs.get("compress", False):
+                        from . import compression
+
+                        v = compression.decompress_16_to_f32(v)
+                    deliver(name, 0, octx, v)
+                    if tracer is not None:
+                        tracer.record(name, node.op, self.device_label,
+                                      t_start, tracer.now(), ctx)
                 deliver_control(name, octx)
                 continue
 

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph, GraphError, Node, TensorRef
+from . import control_flow as cf_mod
 from . import cse as cse_mod
 from . import ops as ops_mod
 
@@ -73,6 +74,17 @@ STRICT_UNFUSIBLE = {"MatMul", "Call", "ReduceSum", "ReduceMean",
 STATS = {"fuse_calls": 0, "regions_built": 0, "nodes_fused": 0,
          "consts_folded": 0, "nodes_pruned": 0, "cse_merged": 0,
          "fallbacks": 0}
+
+
+def REGION_CACHE_SIZE() -> int:
+    """Per-region cap on cached (shape, dtype) -> jitted-executable entries
+    (``REPRO_REGION_CACHE``, default 32; DESIGN.md §7)."""
+    import os
+
+    try:
+        return int(os.environ.get("REPRO_REGION_CACHE", "32"))
+    except ValueError:
+        return 32
 
 
 class FusionError(Exception):
@@ -123,43 +135,83 @@ class RegionSpec:
     numerics: str = "strict"
 
     def __post_init__(self) -> None:
-        self._jitted: Optional[Any] = None
+        self._fn: Optional[Any] = None   # lowered python callable (trace source)
+        self._jit_cache: Optional[Any] = None  # per-signature LRU of jitted fns
+        self._var_order = sorted(self.var_read_attrs)  # fixed signature order
+        # steady-state fast path: the last (signature, jitted fn) pair,
+        # read/written without the LRU lock (a lost race merely rebuilds)
+        self._last: Optional[Tuple[Any, Any]] = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
-    def _build(self):
-        from . import lowering
-
+    def _lowered(self):
         with self._lock:
-            if self._jitted is None:
-                fn = lowering.lower_region(
+            if self._fn is None:
+                from . import lowering
+
+                self._fn = lowering.lower_region(
                     self.subgraph, self.members, self.input_refs,
                     self.output_refs, self.members)
-                if self.numerics == "strict":
-                    try:
-                        self._jitted = jax.jit(fn, compiler_options={
-                            "xla_backend_optimization_level": 0})
-                    except TypeError:  # older jax without compiler_options
-                        import warnings
+            return self._fn
 
-                        warnings.warn(
-                            "this jax version cannot compile fused regions "
-                            "at backend-opt-level 0; region "
-                            f"{self.name!r} falls back to numerics='fast' "
-                            "(fused results may differ from unfused by "
-                            "~1 ulp)", RuntimeWarning, stacklevel=2)
-                        self.numerics = "fast"  # report the effective mode
-                        self._jitted = jax.jit(fn)
-                else:
-                    self._jitted = jax.jit(fn)
-            return self._jitted
+    def _cache(self):
+        with self._lock:
+            if self._jit_cache is None:
+                # lazy import: executable.py imports this module at top level
+                from .executable import ExecutableCache
+
+                self._jit_cache = ExecutableCache(maxsize=REGION_CACHE_SIZE())
+            return self._jit_cache
+
+    def _jit(self):
+        """A fresh jitted callable for one input signature.
+
+        One ``jax.jit`` wrapper per (shape, dtype) signature, held in a
+        bounded LRU: ``jax.jit``'s own per-wrapper trace cache is
+        unbounded, so a serving workload feeding many shapes through one
+        long-lived wrapper would grow memory without limit.  Evicting a
+        wrapper drops its traces/executables; re-feeding that signature
+        re-compiles transparently.
+        """
+        fn = self._lowered()
+        if self.numerics == "strict":
+            try:
+                return jax.jit(fn, compiler_options={
+                    "xla_backend_optimization_level": 0})
+            except TypeError:  # older jax without compiler_options
+                import warnings
+
+                warnings.warn(
+                    "this jax version cannot compile fused regions "
+                    "at backend-opt-level 0; region "
+                    f"{self.name!r} falls back to numerics='fast' "
+                    "(fused results may differ from unfused by "
+                    "~1 ulp)", RuntimeWarning, stacklevel=2)
+                self.numerics = "fast"  # report the effective mode
+        return jax.jit(fn)
+
+    @staticmethod
+    def _abstract(v: Any):
+        return (tuple(getattr(v, "shape", ()) or ()),
+                str(getattr(v, "dtype", type(v).__name__)))
+
+    def executable_for(self, inputs: Sequence[Any],
+                       var_values: Dict[str, Any]):
+        sig = (tuple(self._abstract(v) for v in inputs),
+               tuple(self._abstract(var_values[k]) for k in self._var_order))
+        last = self._last
+        if last is not None and last[0] == sig:
+            return last[1]  # single-signature steady state: no lock, no LRU
+        jfn = self._cache().get_or_build(sig, self._jit)
+        self._last = (sig, jfn)
+        return jfn
 
     def dispatch(self, ctx, inputs: Sequence[Any]) -> Tuple[Any, ...]:
         """Run the compiled region: read vars, call the jitted kernel,
         commit variable writes (the FusedRegion opdef's kernel)."""
-        jfn = self._jitted or self._build()
         var_values = {name: ctx.variables.read(name, attrs)
                       for name, attrs in self.var_read_attrs.items()}
+        jfn = self.executable_for(inputs, var_values)
         outs, new_vars = jfn(tuple(inputs), var_values)
         for vname, v in new_vars.items():
             ctx.write_variable(vname, v)
@@ -212,7 +264,7 @@ def _fold_constants(g: Graph, names: Set[str],
                     kind_of) -> int:
     """Evaluate pure single-output ops whose inputs are all Const (§5.1)."""
     folded = 0
-    for n in g.topo_sort(names, skip_back_edges=True):
+    for n in g.topo_sort(names):
         node = g.nodes[n]
         od = ops_mod.opdef(node.op)
         if (node.op == "Const" or node.op == "Call" or node.op in RUNTIME_ONLY
@@ -251,7 +303,7 @@ def _classify(g: Graph, names: Set[str], placement: Optional[Dict[str, str]],
               fetch_nodes: Set[str], written_vars: Set[str],
               numerics: str = "strict"):
     """Per-node fusibility + phase labels (see module docstring)."""
-    order = g.topo_sort(names, skip_back_edges=True)  # GraphError on real cycles
+    order = g.topo_sort(names)  # GraphError on real cycles
     idx = {n: i for i, n in enumerate(order)}
 
     # dependency edges, back edges dropped, plus Send->Recv pairing edges
@@ -268,6 +320,14 @@ def _classify(g: Graph, names: Set[str], placement: Optional[Dict[str, str]],
         if "Send" in pair and "Recv" in pair:
             edges.append((pair["Send"], pair["Recv"]))
     edges.sort(key=lambda e: idx[e[0]])
+
+    # frame boundary rule (§4.4 / DESIGN.md §8): a region never spans a
+    # loop-frame boundary — every node with a non-root static frame stays
+    # interpreted so the tagged-frame executor keeps driving it once per
+    # iteration.  (The control-flow taint below subsumes this for graphs
+    # built by the while_loop builder; the explicit frame check keeps the
+    # invariant independent of how the frame was constructed.)
+    frames = cf_mod.static_frames(g, names)
 
     # taint: anything downstream of a control-flow primitive may carry
     # dead tensors (§4.4) and must stay interpreted
@@ -294,6 +354,7 @@ def _classify(g: Graph, names: Set[str], placement: Optional[Dict[str, str]],
             node.op in RUNTIME_ONLY
             or (numerics == "strict" and node.op in STRICT_UNFUSIBLE)
             or n in tainted
+            or bool(frames.get(n))
             or (od.stateful and node.op not in FUSIBLE_STATEFUL)
             or (node.op == "Variable" and n in written_vars)
             or node.attrs.get("nofuse", False)
@@ -510,7 +571,7 @@ def fuse(
     fg_names = set(fg.nodes)
 
     try:  # safety net: region contraction must never create a cycle
-        fg.topo_sort(fg_names, skip_back_edges=True)
+        fg.topo_sort(fg_names)
     except GraphError as e:
         raise FusionError(f"region contraction created a cycle: {e}") from e
 

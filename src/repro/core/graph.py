@@ -184,26 +184,23 @@ class Graph:
         g.cond_specs = dict(self.cond_specs)
         return g
 
-    def topo_sort(self, names: Optional[Iterable[str]] = None, *,
-                  skip_back_edges: bool = False) -> List[str]:
+    def topo_sort(self, names: Optional[Iterable[str]] = None) -> List[str]:
         """Dependency-respecting order (construction order used as tiebreak,
         the paper's §4.1 memory heuristic).
 
-        ``skip_back_edges=True`` ignores edges whose producer is a
-        ``NextIteration`` node — the only legal cycle source (the §4.4
-        while-loop back edge into Merge) — so structural passes like
-        region fusion can order graphs that contain loops.
+        Edges whose producer is a ``NextIteration`` node — the only legal
+        cycle source (the §4.4 while-loop back edge into Merge) — are
+        treated as non-ordering, so structural passes (placement, Recv
+        scheduling, region fusion) can order graphs that contain loops
+        instead of raising.  Any other cycle raises :class:`GraphError`.
         """
         keep = set(names) if names is not None else set(self.nodes)
         indeg: Dict[str, int] = {}
         consumers: Dict[str, List[str]] = {n: [] for n in keep}
 
         def _deps(node: Node) -> List[str]:
-            ds = self.deps(node)
-            if skip_back_edges:
-                ds = [d for d in ds
-                      if d not in self.nodes or self.nodes[d].op != "NextIteration"]
-            return ds
+            return [d for d in self.deps(node)
+                    if d not in self.nodes or self.nodes[d].op != "NextIteration"]
 
         for n in self.nodes:  # insertion order => deterministic tie-break
             if n not in keep:

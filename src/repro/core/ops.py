@@ -551,6 +551,10 @@ def _loop_cond(ctx, node, x):
 
 
 # --- Send/Recv (§3.2.2) — inserted by partitioning, executed via rendezvous --
+# NOTE: the executor interprets Send/Recv itself (frame-tagged rendezvous
+# keys + wire deadness, executor.py §4.4) and never dispatches them through
+# run_kernel; the kernels below exist as the non-executed reference
+# semantics (and so the ops are registered/placeable like any other).
 
 @register("Send", num_outputs=0, stateful=True)
 def _send(ctx, node, x):
@@ -564,7 +568,9 @@ def _send(ctx, node, x):
 
 
 @register("Recv", stateful=True)
-def _recv(ctx, node):
+def _recv(ctx, node, *_token):
+    # ``_token``: the optional per-iteration frame token attached by the
+    # §4.4 frame-aware partitioner (drives re-execution; value unused)
     key = node.attrs["rendezvous_key"]
     x = ctx.rendezvous.recv(key)
     if node.attrs.get("compress", False):

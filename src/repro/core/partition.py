@@ -8,19 +8,33 @@ canonicalised onto a *single* Recv node so each tensor crosses each
 device pair at most once and is allocated once at the destination.
 Cross-device *control* edges become a zero-byte token transfer.
 
+§4.4 distributed control flow: when a while-loop's body straddles
+devices, the loop's Enter/Merge/Switch/Exit control skeleton is
+replicated on every participating device and the predicate is broadcast
+from the frame's *home* device (where LoopCond lives) once per
+iteration, so every device learns iteration-termination exactly as the
+paper prescribes.  Recvs inside the frame carry the local skeleton's
+``Switch:1`` output as an *iteration token* input — it is live once per
+continuing iteration (driving the Recv's re-execution in the right
+(frame, iteration) context) and dead on the terminating one (killing the
+Recv via ordinary dead-tensor propagation).  The executor tags in-frame
+rendezvous keys with the frame context so each iteration is a distinct
+transfer (executor.wire_key).
+
 Optionally (§5.5) Send/Recv pairs carry the lossy 32->16-bit compression.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
-from .graph import Graph, Node, TensorRef
+from .graph import Graph, GraphError, TensorRef
+from . import control_flow as cf_mod
 from ..runtime import rendezvous as rdv
 
 
 # pass-invocation counter (see placement.STATS; DESIGN.md §5)
-STATS = {"partition_calls": 0}
+STATS = {"partition_calls": 0, "frames_replicated": 0}
 
 
 @dataclasses.dataclass
@@ -29,6 +43,79 @@ class Partitioned:
     device_nodes: Dict[str, Set[str]]  # device -> node names
     placement: Dict[str, str]          # node -> device (incl. new nodes)
     n_transfers: int = 0
+
+
+def _replicate_loop_frames(
+    g: Graph,
+    pg: Graph,
+    names: Set[str],
+    place: Dict[str, str],
+) -> Tuple[Dict[Tuple[str, str], TensorRef], Dict[Tuple[str, int, str], str], int]:
+    """Replicate loop control skeletons across participating devices (§4.4).
+
+    For every while-frame in ``g.loop_specs`` whose executed members land
+    on more than one device: the device holding ``LoopCond`` is the
+    frame's *home*; every other participant gets a private
+    Const -> Enter -> Merge -> Switch -> (NextIteration | Exit) skeleton
+    whose predicate arrives from home via a per-iteration Send/Recv pair.
+
+    Returns ``(tokens, recv_cache_seed, n_transfers)`` where ``tokens``
+    maps (frame, device) to the Switch:1 ref that is live exactly once
+    per continuing iteration on that device, and ``recv_cache_seed``
+    pre-seeds the partitioner's Recv canonicalisation with the predicate
+    Recvs (so a body node consuming ``LoopCond`` output cross-device
+    reuses the broadcast instead of creating a colliding transfer).
+    """
+    tokens: Dict[Tuple[str, str], TensorRef] = {}
+    recv_seed: Dict[Tuple[str, int, str], str] = {}
+    n_transfers = 0
+    for lname, spec in g.loop_specs.items():
+        members = [m for m in cf_mod.loop_spec_members(lname, spec)
+                   if m in names]
+        if not members:
+            continue
+        cond_name = f"{lname}/cond"
+        home = place.get(cond_name)
+        if home is None:
+            continue
+        devs = sorted({place[m] for m in members if m in place})
+        # home's own iteration token: any surviving loop variable's
+        # Switch:1, live exactly while the loop continues (feed/fetch
+        # pruning may have dropped unobserved variables' switches)
+        home_switch = next((s for s in spec.switch_names if s in names), None)
+        if home_switch is not None:
+            tokens[(lname, home)] = TensorRef(home_switch, 1)
+        if len(devs) < 2:
+            continue
+        STATS["frames_replicated"] += 1
+        for i, dev in enumerate(d for d in devs if d != home):
+            pfx = f"{lname}/ctl{i}"
+            tok = pg.add_node("Const", [], name=f"{pfx}/token",
+                              attrs={"value": 0}, device=dev)
+            ent = pg.add_node("Enter", [tok], name=f"{pfx}/enter",
+                              attrs={"frame": lname}, device=dev)
+            mrg = pg.add_node("Merge", [ent], name=f"{pfx}/merge", device=dev)
+            rkey = rdv.make_key(f"{cond_name}:0", home, dev)
+            snd = pg.add_node(
+                "Send", [TensorRef(cond_name, 0)], name=f"{pfx}/pred_send",
+                attrs={"rendezvous_key": rkey, "compress": False}, device=home)
+            rcv = pg.add_node(
+                "Recv", [mrg.ref], name=f"{pfx}/pred_recv",
+                attrs={"rendezvous_key": rkey, "compress": False}, device=dev)
+            sw = pg.add_node("Switch", [mrg, rcv], name=f"{pfx}/switch",
+                             device=dev)
+            nxt = pg.add_node("NextIteration", [TensorRef(sw.name, 1)],
+                              name=f"{pfx}/next", device=dev)
+            mrg.inputs.append(nxt.ref)  # the replicated back edge
+            ext = pg.add_node("Exit", [TensorRef(sw.name, 0)],
+                              name=f"{pfx}/exit", device=dev)
+            for n in (tok, ent, mrg, nxt, rcv, sw, ext):
+                place[n.name] = dev
+            place[snd.name] = home
+            tokens[(lname, dev)] = TensorRef(sw.name, 1)
+            recv_seed[(cond_name, 0, dev)] = rcv.name
+            n_transfers += 1
+    return tokens, recv_seed, n_transfers
 
 
 def partition(
@@ -42,9 +129,15 @@ def partition(
     pg = g.subgraph(names)
     place = dict(placement)
 
+    # §4.4: static frame per node (from the Enter frame attrs) decides
+    # which Recvs need an iteration token; replicate control skeletons
+    # for loop frames that straddle devices before splitting edges.
+    frames = cf_mod.static_frames(pg, names)
+    frame_tokens, recv_cache, n_transfers = _replicate_loop_frames(
+        g, pg, names, place)
+
     # one Recv per (src_node, port, dst_device); one Send per (src_node, port, src->dst)
-    recv_cache: Dict[Tuple[str, int, str], str] = {}
-    n_transfers = 0
+    # (pre-seeded with the predicate-broadcast Recvs)
 
     def get_recv(ref: TensorRef, dst_dev: str) -> str:
         nonlocal n_transfers
@@ -56,8 +149,26 @@ def partition(
         send = pg.add_node(
             "Send", [ref], name=f"send/{ref.node}_{ref.port}/to_{len(recv_cache)}",
             attrs={"rendezvous_key": rkey, "compress": compress}, device=src_dev)
+        # §4.4: a producer inside a loop frame fires once per iteration —
+        # the Recv must too, so it takes that frame's iteration token on
+        # the destination device as a data input (live per continuing
+        # iteration, dead on the terminating one).
+        recv_inputs: List[TensorRef] = []
+        fpath = frames.get(ref.node, ())
+        if fpath:
+            if len(fpath) > 1:
+                raise GraphError(
+                    f"cross-device edge {ref} leaves a nested loop frame "
+                    f"{fpath!r}; nested multi-device loops are not supported "
+                    "yet — constrain the inner loop to one device")
+            tok = frame_tokens.get((fpath[-1], dst_dev))
+            if tok is None:
+                raise GraphError(
+                    f"no iteration token for frame {fpath[-1]!r} on "
+                    f"{dst_dev!r} (consumer of {ref} is outside the loop?)")
+            recv_inputs = [tok]
         recv = pg.add_node(
-            "Recv", [], name=f"recv/{ref.node}_{ref.port}/at_{len(recv_cache)}",
+            "Recv", recv_inputs, name=f"recv/{ref.node}_{ref.port}/at_{len(recv_cache)}",
             attrs={"rendezvous_key": rkey, "compress": compress}, device=dst_dev)
         place[send.name] = src_dev
         place[recv.name] = dst_dev

@@ -99,8 +99,20 @@ def feasible_devices(node: Node, devices: DeviceSet) -> List[str]:
 
 def colocation_groups(g: Graph, node_names) -> Dict[str, List[str]]:
     """§4.3: union-find over 'colocate_with' attrs; Assign ops colocate with
-    their Variable (state must live with its mutations)."""
+    their Variable (state must live with its mutations).
+
+    §4.4: each while-loop's control skeleton (Enter/Merge/Switch/Exit/
+    NextIteration/LoopCond) plus its predicate computation is one
+    colocation group — the frame's *home* device.  The loop *body* places
+    freely; the partitioner replicates the skeleton on every other
+    participating device and broadcasts the predicate from home once per
+    iteration (partition._replicate_loop_frames), so distributing the
+    skeleton itself would only add per-iteration round trips.
+    """
+    from . import control_flow as cf_mod
+
     uf = _UnionFind()
+    name_set = set(node_names)
     for name in node_names:
         node = g.nodes[name]
         uf.find(name)
@@ -109,6 +121,12 @@ def colocation_groups(g: Graph, node_names) -> Dict[str, List[str]]:
             uf.union(target, name)
         if node.op in ("Assign", "AssignAdd", "Variable") and node.inputs:
             uf.union(node.inputs[0].node, name)
+    for lname, spec in g.loop_specs.items():
+        body = set(spec.body_nodes)
+        skeleton = [m for m in cf_mod.loop_spec_members(lname, spec)
+                    if m in name_set and m not in body]
+        for a, b in zip(skeleton, skeleton[1:]):
+            uf.union(a, b)
     groups: Dict[str, List[str]] = {}
     for name in node_names:
         groups.setdefault(uf.find(name), []).append(name)

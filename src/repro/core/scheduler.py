@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Set
 
 from .graph import Graph, Node, TensorRef
 from .placement import CostModel
+from . import control_flow as cf_mod
 from ..runtime.devices import DeviceSet
 
 
@@ -25,22 +26,28 @@ def _times(g: Graph, names: Set[str], cm: CostModel, devices, placement):
             return 1.0
         return cm.compute_seconds(node, dev)
 
-    order = g.topo_sort(names)
+    def fwd_deps(n: str) -> List[str]:
+        # only deps inside the executed ``names`` (fed/pruned producers may
+        # linger in g.nodes without ASAP/ALAP times), and never through a
+        # NextIteration -> Merge back edge (§4.4) — back edges are
+        # non-ordering, so consulting them would read times of nodes that
+        # sort *after* their consumer
+        return [d for d in g.deps(g.nodes[n])
+                if d in names and g.nodes[d].op != "NextIteration"]
+
+    order = g.topo_sort(names)  # back edges are non-ordering (graph.py)
     asap: Dict[str, float] = {}
     for n in order:
-        node = g.nodes[n]
         start = 0.0
-        for d in g.deps(node):
-            if d in names:
-                start = max(start, asap[d] + dur(d))
+        for d in fwd_deps(n):
+            start = max(start, asap[d] + dur(d))
         asap[n] = start
     makespan = max((asap[n] + dur(n) for n in order), default=0.0)
     alap: Dict[str, float] = {}
     consumers: Dict[str, List[str]] = {n: [] for n in names}
     for n in order:
-        for d in g.deps(g.nodes[n]):
-            if d in names:
-                consumers[d].append(n)
+        for d in fwd_deps(n):
+            consumers[d].append(n)
     for n in reversed(order):
         latest_end = makespan
         for c in consumers[n]:
@@ -65,6 +72,11 @@ def schedule_recvs(
     names = set(node_names) if node_names is not None else set(g.nodes)
     cm = cost_model or CostModel()
     asap, alap = _times(g, names, cm, devices, placement)
+    # §4.4: in-frame Recvs fire once per loop iteration, driven by their
+    # frame's iteration token — start-time slack is meaningless for them,
+    # and a delaying edge into or out of a frame would couple one
+    # iteration's schedule to unrelated root work (or deadlock the frame)
+    frames = cf_mod.static_frames(g, names)
 
     def closure(target: str) -> Set[str]:
         # like Graph.transitive_closure, but tolerant of dangling refs —
@@ -85,6 +97,8 @@ def schedule_recvs(
         node = g.nodes[n]
         if node.op != "Recv":
             continue
+        if frames.get(n):
+            continue  # per-iteration Recv: paced by its frame token
         slack = alap[n] - asap[n]
         if slack <= 0:
             continue
@@ -93,6 +107,8 @@ def schedule_recvs(
         for m in names:
             if m == n or g.nodes[m].op in ("Recv", "Send"):
                 continue
+            if frames.get(m):
+                continue  # never pace a root Recv behind loop-frame work
             if placement is not None and placement.get(m) != placement.get(n):
                 continue
             if alap[m] <= alap[n] and asap[m] > best_t and m not in closure(n):

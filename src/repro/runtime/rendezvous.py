@@ -19,6 +19,25 @@ def make_key(tensor: str, src: str, dst: str, execution_id: int = 0) -> str:
     return f"{src};{dst};{tensor};{execution_id}"
 
 
+class _DeadTensor:
+    """Wire marker for a §4.4 dead tensor.
+
+    When control flow spans devices, deadness must cross the wire: a Send
+    whose input is dead (untaken cond branch, or the loop's terminating
+    iteration) transmits this marker so the receiving device's consumers
+    learn the value is dead and propagate it, instead of blocking forever
+    on a tensor that will never be produced.
+    """
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "<dead tensor>"
+
+
+DEAD_TENSOR = _DeadTensor()
+
+
 class Rendezvous:
     def __init__(self, timeout: float = 30.0) -> None:
         self._table: Dict[str, Any] = {}

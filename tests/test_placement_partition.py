@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GraphBuilder, Session, TensorRef
+from repro.core import GraphBuilder, Session, TensorRef, while_loop
 from repro.core import placement as pl
 from repro.core import partition as pt
 from repro.core import scheduler as sched
@@ -137,3 +137,44 @@ def test_scheduler_delays_recv():
     assert len(recvs) == 1
     assert added >= 1
     assert recvs[0].control_inputs  # delayed until just before needed
+
+
+def test_schedule_recvs_tolerates_pruned_deps_and_loop_adjacent_subgraph():
+    """Regression: ``_times`` must only consult deps inside ``names`` —
+    fed edges leave consumers whose producer was pruned from the executed
+    set but still sits in ``g.nodes`` — and must never walk the
+    ``NextIteration -> Merge`` back edge of a loop-adjacent subgraph
+    (KeyError: the back-edge producer sorts *after* its consumer)."""
+    b = GraphBuilder()
+    x = b.placeholder("x")       # fed -> pruned from the executed names
+    u = b.square(x, name="u")    # executed node whose dep is pruned
+    i0 = b.constant(jnp.array(0), name="i0")
+    lim = b.constant(jnp.array(2), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    while_loop(b, lambda i: b.less(i, lim),
+               lambda i: [b.add(i, one, name="inc")], [i0])
+    g = b.graph
+    g.add_node("Recv", [], name="recv/r", attrs={"rendezvous_key": "k"})
+    g.add_node("Add", [u.ref, TensorRef("recv/r", 0)], name="w")
+    names = set(g.nodes) - {"x"}
+    added = sched.schedule_recvs(g, names, pl.CostModel())
+    assert added >= 0  # no KeyError / GraphError
+
+
+def test_loop_skeleton_colocates_but_body_can_split():
+    """§4.4: the control skeleton + predicate land on one home device even
+    when the body is pinned across two tasks."""
+    b = GraphBuilder()
+    i0 = b.constant(jnp.array(0), name="i0", device=f"/job:worker/task:0")
+    lim = b.constant(jnp.array(3), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    while_loop(b, lambda i: b.less(i, lim),
+               lambda i: [b.add(i, one, name="inc", device="/job:worker/task:1")],
+               [i0])
+    place = pl.place(b.graph, _two_workers())
+    spec = b.graph.loop_specs["while"]
+    skeleton_devs = {place[m] for m in
+                     (spec.merge_names + spec.switch_names + spec.exit_names
+                      + spec.cond_nodes + ["while/cond"])}
+    assert len(skeleton_devs) == 1  # one home device
+    assert place["inc"] != next(iter(skeleton_devs))  # body still split
