@@ -1,0 +1,205 @@
+"""Benchmark trendline dashboard from BENCH_history.jsonl.
+
+Every full ``run.py`` sweep appends one line to BENCH_history.jsonl
+(timestamp + git rev + all metrics), so perf is a time series across
+PRs/CI runs.  This tool renders that series as:
+
+* a markdown table — latest value, delta vs the previous run, delta vs
+  the first recorded run, run count — with a unicode sparkline per
+  benchmark (renders anywhere markdown does, including the GitHub
+  Actions job summary);
+* an inline-SVG sparkline per benchmark in an HTML artifact (real
+  vector trendlines for local viewing / artifact download — GitHub's
+  markdown sanitizer strips inline ``<svg>``, hence the split).
+
+CI appends the markdown to ``$GITHUB_STEP_SUMMARY`` and uploads both
+renderings as artifacts (see .github/workflows/ci.yml).
+
+  python benchmarks/dashboard.py [--history PATH] [--md PATH]
+                                 [--html PATH] [--stdout]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+HISTORY = os.path.join(HERE, "BENCH_history.jsonl")
+
+SPARK_CHARS = "▁▂▃▄▅▆▇█"
+
+
+def load_history(path: str) -> List[dict]:
+    entries = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # a truncated line (killed run) must not hide the rest
+    return entries
+
+
+def series_of(entries: List[dict]) -> Dict[str, List[Tuple[str, str, float]]]:
+    """metric -> [(ts, rev, us_per_call), ...] in history order, negative
+    sentinel values (failed runs) dropped."""
+    out: Dict[str, List[Tuple[str, str, float]]] = {}
+    for e in entries:
+        ts = e.get("ts", "?")
+        rev = e.get("rev", "?")
+        for name, m in e.get("metrics", {}).items():
+            us = m.get("us_per_call")
+            if isinstance(us, (int, float)) and us >= 0:
+                out.setdefault(name, []).append((ts, rev, float(us)))
+    return out
+
+
+def _norm(vals: List[float]) -> List[float]:
+    lo, hi = min(vals), max(vals)
+    if hi <= lo:
+        return [0.5] * len(vals)
+    return [(v - lo) / (hi - lo) for v in vals]
+
+
+def sparkline(vals: List[float], width: int = 24) -> str:
+    """Unicode sparkline (down = faster, since values are latencies)."""
+    if len(vals) > width:  # keep the most recent window
+        vals = vals[-width:]
+    if not vals:
+        return ""
+    return "".join(SPARK_CHARS[int(round(x * (len(SPARK_CHARS) - 1)))]
+                   for x in _norm(vals))
+
+
+def svg_sparkline(vals: List[float], width: int = 160, height: int = 36,
+                  pad: int = 3) -> str:
+    """Inline SVG trendline: polyline over history order, latest point
+    marked; lower is better so the reference band is the series min."""
+    if len(vals) < 2:
+        vals = vals * 2
+    norm = _norm(vals)
+    n = len(norm)
+    xs = [pad + i * (width - 2 * pad) / (n - 1) for i in range(n)]
+    ys = [height - pad - v * (height - 2 * pad) for v in norm]
+    pts = " ".join(f"{x:.1f},{y:.1f}" for x, y in zip(xs, ys))
+    return (
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" viewBox="0 0 {width} {height}" '
+        f'role="img" aria-label="trend">'
+        f'<polyline points="{pts}" fill="none" stroke="#4078c0" '
+        f'stroke-width="1.5"/>'
+        f'<circle cx="{xs[-1]:.1f}" cy="{ys[-1]:.1f}" r="2.5" '
+        f'fill="#d73a49"/></svg>')
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.1f}us"
+
+
+def _fmt_delta(new: float, old: float) -> str:
+    if old <= 0:
+        return "—"
+    pct = (new - old) / old * 100.0
+    arrow = "🔺" if pct > 2 else ("🔻" if pct < -2 else "·")
+    return f"{arrow}{pct:+.1f}%"
+
+
+def to_markdown(series: Dict[str, List[Tuple[str, str, float]]],
+                entries: List[dict]) -> str:
+    lines = [
+        "# Benchmark trend dashboard",
+        "",
+        f"{len(entries)} recorded run(s); latest: "
+        f"`{entries[-1].get('rev', '?')}` at {entries[-1].get('ts', '?')}. "
+        "Values are µs/call — **lower is better**; sparklines read "
+        "oldest→newest.",
+        "",
+        "| benchmark | latest | vs prev | vs first | runs | trend |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name in sorted(series):
+        pts = series[name]
+        vals = [v for _, _, v in pts]
+        latest = vals[-1]
+        prev = _fmt_delta(latest, vals[-2]) if len(vals) > 1 else "—"
+        first = _fmt_delta(latest, vals[0]) if len(vals) > 1 else "—"
+        lines.append(
+            f"| {name} | {_fmt_us(latest)} | {prev} | {first} |"
+            f" {len(vals)} | `{sparkline(vals)}` |")
+    return "\n".join(lines) + "\n"
+
+
+def to_html(series: Dict[str, List[Tuple[str, str, float]]],
+            entries: List[dict]) -> str:
+    rows = []
+    for name in sorted(series):
+        pts = series[name]
+        vals = [v for _, _, v in pts]
+        latest = vals[-1]
+        prev = _fmt_delta(latest, vals[-2]) if len(vals) > 1 else "—"
+        rows.append(
+            f"<tr><td><code>{name}</code></td><td>{_fmt_us(latest)}</td>"
+            f"<td>{prev}</td><td>{len(vals)}</td>"
+            f"<td>{svg_sparkline(vals)}</td></tr>")
+    return (
+        "<!doctype html><meta charset='utf-8'>"
+        "<title>Benchmark trend dashboard</title>"
+        "<style>body{font:14px system-ui;margin:2em}"
+        "table{border-collapse:collapse}td,th{border:1px solid #ddd;"
+        "padding:4px 10px;text-align:left}</style>"
+        f"<h1>Benchmark trend dashboard</h1>"
+        f"<p>{len(entries)} recorded run(s); latest "
+        f"<code>{entries[-1].get('rev', '?')}</code> at "
+        f"{entries[-1].get('ts', '?')}. Lower is better.</p>"
+        "<table><tr><th>benchmark</th><th>latest</th><th>vs prev</th>"
+        "<th>runs</th><th>trend</th></tr>"
+        + "".join(rows) + "</table>")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--history", default=HISTORY)
+    ap.add_argument("--md", default=os.path.join(HERE, "BENCH_dashboard.md"),
+                    help="markdown output path ('' disables)")
+    ap.add_argument("--html", default=os.path.join(HERE, "BENCH_dashboard.html"),
+                    help="HTML (inline-SVG) output path ('' disables)")
+    ap.add_argument("--stdout", action="store_true",
+                    help="also print the markdown to stdout (CI pipes this "
+                         "into $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.history):
+        print(f"no history at {args.history}; nothing to render",
+              file=sys.stderr)
+        return 1
+    entries = load_history(args.history)
+    if not entries:
+        print(f"history {args.history} is empty; nothing to render",
+              file=sys.stderr)
+        return 1
+    series = series_of(entries)
+    md = to_markdown(series, entries)
+    if args.md:
+        with open(args.md, "w") as fh:
+            fh.write(md)
+        print(f"# wrote {args.md}", file=sys.stderr)
+    if args.html:
+        with open(args.html, "w") as fh:
+            fh.write(to_html(series, entries))
+        print(f"# wrote {args.html}", file=sys.stderr)
+    if args.stdout:
+        print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -74,7 +74,10 @@ def bench_compiled_vs_eager():
     dispatch ~2x cheaper), which was masking the gap this benchmark
     exists to track.  The graph is a matmul-heavy residual chain so both
     sides do real compute and the contrast stays §10 whole-graph jit vs
-    interpreted dispatch."""
+    interpreted dispatch.  The fused-fast row (DESIGN.md §9) runs the
+    SAME Session engine with numerics="fast": matmuls/reductions join the
+    region and compile at full XLA opt, so the eager engine closes most
+    of the gap to the hand-lowered jit."""
     from repro.core import GraphBuilder, Session, compile_subgraph
 
     rs = np.random.RandomState(0)
@@ -90,7 +93,16 @@ def bench_compiled_vs_eager():
     out = b.reduce_sum(cur)
     sess = Session(b.graph, fuse_regions=False)
     X = jnp.array(rs.randn(64, 256).astype("f"))
-    eager_us = _timeit(lambda: sess.run(out.ref, {x.ref: X}))
+    # block on every fetch: jax dispatch is async even on CPU, and the
+    # fused engine issues ONE region call — an unblocked timer would
+    # measure dispatch, not compute (the eager side blocks too so the
+    # derived speedup divides like for like)
+    eager_us = _timeit(lambda: jax.block_until_ready(
+        sess.run(out.ref, {x.ref: X})))
+    fast_sess = Session(b.graph, fuse_regions=True, numerics="fast",
+                        parity_guard=False)
+    fast_us = _timeit(lambda: jax.block_until_ready(
+        fast_sess.run(out.ref, {x.ref: X})))
     low = compile_subgraph(sess, [out.ref], [x.ref])
     jf = jax.jit(low.fn)
     Wv = sess.variable_value("W")
@@ -98,6 +110,8 @@ def bench_compiled_vs_eager():
     comp_us = _timeit(lambda: jax.block_until_ready(
         jf({"x:0": X}, {"W": Wv})[0][0]))
     emit("b2_eager_graph", eager_us, f"interpreted,{n_layers}xmatmul256")
+    emit("b2_fused_fast_graph", fast_us,
+         f"numerics=fast,speedup={eager_us / fast_us:.1f}x_over_interp")
     emit("b2_compiled_graph", comp_us,
          f"speedup={eager_us / comp_us:.1f}x")
 
@@ -330,21 +344,24 @@ def bench_fused_partitioned_step():
     """§10 region fusion (DESIGN.md §7): the b12 2-worker graph executed
     as a handful of FusedRegion kernels + Send/Recv, vs the same cached
     Executable interpreted node-by-node; plus per-op dispatch overhead on
-    a fused 64-op chain vs the b1-style interpreted chain."""
+    a fused 64-op chain vs the b1-style interpreted chain.  The fused
+    session runs numerics="fast" — the shipping default for the graph
+    engine (DESIGN.md §9) — so the terminal ReduceSum joins the region
+    and regions compile at full XLA optimization."""
     from repro.core import GraphBuilder, Session
     from repro.runtime.devices import DeviceSet
 
     g1, out1 = _two_worker_graph()
     g2, out2 = _two_worker_graph()
     fused = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                    fuse_regions=True)
+                    fuse_regions=True, numerics="fast", parity_guard=False)
     interp = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
                      fuse_regions=False)
     us_interp = _timeit(lambda: interp.run(out2.ref), n=8, warmup=2)
     us_fused = _timeit(lambda: fused.run(out1.ref), n=8, warmup=2)
     emit("b13_fused_partitioned_step", us_fused,
          f"{1e6 / us_fused:.0f}steps/s,interp={1e6 / us_interp:.0f}steps/s,"
-         f"speedup={us_interp / us_fused:.1f}x")
+         f"speedup={us_interp / us_fused:.1f}x,numerics=fast")
 
     # per-op dispatch overhead: placeholder-fed so constant folding cannot
     # collapse the chain — the fused run dispatches ONE super-node
@@ -354,7 +371,8 @@ def bench_fused_partitioned_step():
     cur = x
     for i in range(n_ops):
         cur = b.add(cur, x, name=f"a{i}")
-    sf = Session(b.graph, fuse_regions=True)
+    sf = Session(b.graph, fuse_regions=True, numerics="fast",
+                 parity_guard=False)
     su = Session(b.graph, fuse_regions=False)
     X = jnp.ones((8, 8))
     us_u = _timeit(lambda: su.run(cur.ref, {x.ref: X}))
@@ -414,10 +432,12 @@ def write_json(path: str) -> None:
 # --- regression gate (CI / `pytest -m benchcheck`) --------------------------
 
 # key metrics guarded against regression, with the benchmark function
-# that produces each (b1: dispatch overhead, b9: end-to-end training,
-# b12: cached multi-device step, b13: fused multi-device step)
+# that produces each (b1: dispatch overhead, b2: fused-fast eager engine,
+# b9: end-to-end training, b12: cached multi-device step, b13: fused
+# multi-device step)
 KEY_METRICS = {
     "b1_session_run_overhead": bench_session_run_overhead,
+    "b2_fused_fast_graph": bench_compiled_vs_eager,
     "b9_train_tokens_per_s": bench_train_throughput,
     "b12_run_cached_executable": bench_executable_cache,
     "b13_fused_partitioned_step": bench_fused_partitioned_step,
@@ -495,9 +515,9 @@ def main(argv=None) -> None:
                          "for --only runs so a filtered subset never "
                          "clobbers the tracked artifact)")
     ap.add_argument("--check", action="store_true",
-                    help="re-run the key metrics (b1, b9, b12, b13) and exit "
-                         "non-zero if any regressed >25%% vs the committed "
-                         "BENCH_latest.json")
+                    help="re-run the key metrics (b1, b2-fast, b9, b12, b13) "
+                         "and exit non-zero if any regressed >25%% vs the "
+                         "committed BENCH_latest.json")
     ap.add_argument("--check-threshold", type=float, default=0.25,
                     help="allowed relative regression for --check")
     args = ap.parse_args(argv)

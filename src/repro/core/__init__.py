@@ -7,6 +7,10 @@ Public surface:
   gradients                     §4.1 autodiff by graph extension
   while_loop / cond             §4.4 control flow builders
   compile_subgraph              §10 JIT lowering to a pure JAX function
+  numerics                      §9 tolerance-gated fast-numerics parity
+                                (import as a submodule — not re-exported
+                                here so `python -m repro.core.numerics`
+                                stays runpy-clean)
 """
 from .graph import Graph, Node, TensorRef, GraphError, as_ref
 from .ops import GraphBuilder, register, register_gradient, register_kernel, REGISTRY

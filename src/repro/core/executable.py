@@ -40,6 +40,14 @@ from . import partition as partition_mod
 from . import scheduler as scheduler_mod
 from ..runtime.rendezvous import Rendezvous
 
+# Ops whose side effects cannot be replayed for a reference re-execution:
+# running the unfused-strict reference AND the fused-fast candidate on the
+# same feeds would double-consume queue items / double-write checkpoints.
+# Executables containing these skip the per-session parity guard (the CI
+# gate covers their op classes instead; DESIGN.md §9).
+GUARD_UNSAFE = frozenset(
+    {"QueueEnqueue", "QueueDequeue", "Save", "Restore", "Send", "Recv"})
+
 
 @dataclasses.dataclass(frozen=True)
 class RunSignature:
@@ -55,10 +63,11 @@ class RunSignature:
     device_fingerprint: Tuple[str, ...]
     graph_version: int
     # region fusion and its numerics mode are part of the signature:
-    # flipping ``Session.fuse_regions`` or ``REPRO_FUSE_NUMERICS``
-    # mid-process must rebuild, never reuse a stale plan (a cached
-    # strict executable silently serving a fast-mode process, or vice
-    # versa, would make results signature-dependent)
+    # flipping ``Session.fuse_regions`` or ``Session.numerics`` mid-
+    # process must rebuild, never reuse a stale plan — strict and fast
+    # executables cache separately (a cached strict executable silently
+    # serving a fast-mode session, or vice versa, would make results
+    # signature-dependent; DESIGN.md §9)
     fuse_regions: bool = True
     fuse_numerics: str = "strict"
 
@@ -73,7 +82,9 @@ class RunSignature:
             device_fingerprint=fp,
             graph_version=session.graph.version,
             fuse_regions=getattr(session, "fuse_regions", True),
-            fuse_numerics=os.environ.get("REPRO_FUSE_NUMERICS", "strict"),
+            fuse_numerics=getattr(
+                session, "numerics",
+                os.environ.get("REPRO_FUSE_NUMERICS", "strict")),
         )
 
 
@@ -155,7 +166,8 @@ class Executable:
                  compress: bool = False,
                  cost_model: Optional[placement_mod.CostModel] = None,
                  force_partitioned: bool = False,
-                 fuse_regions: Optional[bool] = None) -> None:
+                 fuse_regions: Optional[bool] = None,
+                 numerics: Optional[str] = None) -> None:
         self.session = session
         self.fetches: Tuple[TensorRef, ...] = tuple(fetch_refs)
         self.feed_keys: FrozenSet[TensorRef] = frozenset(feed_keys)
@@ -163,6 +175,12 @@ class Executable:
         self.compress = compress
         self.fuse_regions = (getattr(session, "fuse_regions", True)
                              if fuse_regions is None else fuse_regions)
+        # numerics policy for fused regions (DESIGN.md §9): "strict"
+        # (bit-parity) or "fast" (full XLA opt, tolerance-bounded drift)
+        self.numerics: str = (
+            numerics if numerics is not None
+            else getattr(session, "numerics",
+                         os.environ.get("REPRO_FUSE_NUMERICS", "strict")))
         # DESIGN.md §7: region fusion runs once per signature, here; the
         # result (incl. each region's lazily-jitted kernel) is cached with
         # the Executable.  Fetches into fused members are remapped to the
@@ -206,7 +224,8 @@ class Executable:
                     placement=exec_placement,
                     feeds=self.feed_keys, fetch_refs=self.fetches,
                     written_vars=fusion_mod.written_variables(
-                        exec_graph, exec_graph.nodes))
+                        exec_graph, exec_graph.nodes),
+                    numerics=self.numerics)
                 if fus is not None and (fus.regions or fus.changed):
                     self.fusion = fus
                     exec_graph = fus.graph
@@ -231,13 +250,45 @@ class Executable:
                     session.graph, self.node_set, placement=None,
                     feeds=self.feed_keys, fetch_refs=self.fetches,
                     written_vars=fusion_mod.written_variables(
-                        session.graph, self.node_set))
+                        session.graph, self.node_set),
+                    numerics=self.numerics)
                 if fus is not None and (fus.regions or fus.changed):
                     self.fusion = fus
                     exec_graph, exec_names = fus.graph, fus.names
                     self._fetch_remap = fus.fetch_map
             self.executor = Executor(exec_graph, node_filter=exec_names)
             self.n_nodes = len(exec_names)
+
+        # ---- fast-mode parity guard (DESIGN.md §9) -------------------
+        # The first run of a fast-numerics Executable is verified against
+        # the unfused-strict reference within the §9 per-op-class
+        # tolerances; a breach warns and permanently falls back to strict
+        # (unfused) execution.  Skipped when the executed set contains
+        # ops whose side effects cannot be replayed (queues, checkpoint
+        # IO) — the CI parity gate still covers those op classes.
+        self._strict_fallback = False
+        self._parity_pending = False
+        self._guard_lock = threading.Lock()
+        self._guard_vars: List[str] = []
+        self._guard_tol = None
+        if (self.numerics == "fast" and self.fusion is not None
+                and self.fusion.regions
+                and getattr(session, "parity_guard", False)):
+            ops = {session.graph.nodes[n].op for n in self.node_set}
+            if not ops & GUARD_UNSAFE:
+                from . import numerics as numerics_mod  # lazy: import cycle
+
+                self._parity_pending = True
+                # only *written* variables can drift (read-only ones are
+                # restored-snapshot-identical by construction); limiting
+                # the snapshot avoids holding 3 extra copies of e.g. a
+                # serve graph's full params through the first token
+                self._guard_vars = sorted(
+                    fusion_mod.written_variables(session.graph,
+                                                 self.node_set)
+                    & {n for n in self.node_set
+                       if session.graph.nodes[n].op == "Variable"})
+                self._guard_tol = numerics_mod.tolerance_for_ops(ops)
 
     # ------------------------------------------------------------------
     def run(self, feeds: Optional[Dict[TensorRef, Any]] = None, *,
@@ -251,20 +302,108 @@ class Executable:
         if tracer is not None and self.fusion is not None:
             # per-kernel tracing: run the faithful unfused interpretation
             # (fused kernels are opaque blobs to an EEG-style tracer)
-            if self.multi_device:
-                execs, fetch_by_dev = self._unfused_pipeline()
-                return self._run_multi(
-                    feeds, trace=trace, tracer=tracer, timeout=timeout,
-                    executors=execs, fetch_by_dev=fetch_by_dev, remap=False)
-            executor, _ = self._unfused_pipeline()
-            return executor.run(self.fetches, feeds, ctx=self.session._ctx(),
-                                trace=trace, tracer=tracer)
+            return self._run_unfused(feeds, trace=trace, tracer=tracer,
+                                     timeout=timeout)
+        if self._strict_fallback:
+            # a parity breach demoted this Executable (DESIGN.md §9): the
+            # unfused pipeline IS strict execution, bit-identical to the
+            # pre-fusion engine
+            return self._run_unfused(feeds, trace=trace, tracer=tracer,
+                                     timeout=timeout)
+        if self._parity_pending:
+            return self._guarded_first_run(feeds, trace, tracer, timeout)
+        return self._dispatch(feeds, trace=trace, tracer=tracer,
+                              timeout=timeout)
+
+    def _dispatch(self, feeds: Dict[TensorRef, Any], *,
+                  trace: Optional[List[str]], tracer: Any,
+                  timeout: float) -> List[Any]:
+        """The prepared (possibly fused) pipeline, no guard logic."""
         if self.multi_device:
             return self._run_multi(feeds, trace=trace, tracer=tracer,
                                    timeout=timeout)
         fetches = [self._fetch_remap.get(r, r) for r in self.fetches]
         return self.executor.run(fetches, feeds, ctx=self.session._ctx(),
                                  trace=trace, tracer=tracer)
+
+    def _run_unfused(self, feeds: Dict[TensorRef, Any], *,
+                     trace: Optional[List[str]], tracer: Any,
+                     timeout: float) -> List[Any]:
+        """The lazily-built unfused pipeline: per-kernel tracing, the
+        parity-guard reference, and the post-breach strict fallback."""
+        if self.multi_device:
+            execs, fetch_by_dev = self._unfused_pipeline()
+            return self._run_multi(
+                feeds, trace=trace, tracer=tracer, timeout=timeout,
+                executors=execs, fetch_by_dev=fetch_by_dev, remap=False)
+        executor, _ = self._unfused_pipeline()
+        return executor.run(self.fetches, feeds, ctx=self.session._ctx(),
+                            trace=trace, tracer=tracer)
+
+    def _guarded_first_run(self, feeds: Dict[TensorRef, Any],
+                           trace: Optional[List[str]], tracer: Any,
+                           timeout: float) -> List[Any]:
+        """First run of a fast-numerics Executable: execute the unfused-
+        strict reference AND the fused-fast pipeline on the same feeds
+        (variable state snapshotted in between so both start identically)
+        and require the drift to stay within the §9 tolerances.  On a
+        breach: warn, restore the reference results/state, and demote the
+        Executable to strict execution permanently.
+        """
+        with self._guard_lock:
+            if not self._parity_pending:  # raced with another first run
+                if self._strict_fallback:
+                    return self._run_unfused(feeds, trace=trace,
+                                             tracer=tracer, timeout=timeout)
+                return self._dispatch(feeds, trace=trace, tracer=tracer,
+                                      timeout=timeout)
+            from . import numerics as numerics_mod
+
+            store = self.session.variables
+            g = self.session.graph
+            # force-init so both executions observe identical initial state
+            snap = {n: store.read(n, g.nodes[n].attrs)
+                    for n in self._guard_vars}
+            ref = self._run_unfused(feeds, trace=None, tracer=None,
+                                    timeout=timeout)
+            ref_vars = {n: store.read(n, g.nodes[n].attrs)
+                        for n in self._guard_vars}
+            for n, v in snap.items():
+                store.write(n, v)
+            got = self._dispatch(feeds, trace=trace, tracer=tracer,
+                                 timeout=timeout)
+            got_vars = {n: store.read(n, g.nodes[n].attrs)
+                        for n in self._guard_vars}
+            # elementwise either-criterion (compare), NOT an aggregate
+            # max-drift check: max ULP and max rel may come from
+            # different tensors that each pass on their own bound —
+            # merging them first would demote spuriously
+            ok, drift = numerics_mod.compare(
+                list(ref) + [ref_vars[n] for n in self._guard_vars],
+                list(got) + [got_vars[n] for n in self._guard_vars],
+                self._guard_tol)
+            if not ok:
+                import warnings
+
+                warnings.warn(
+                    f"fast-numerics parity breach: fused-fast drifted "
+                    f"{drift} from the unfused-strict reference, beyond "
+                    f"the {self._guard_tol} tolerance for this graph's op "
+                    f"classes; falling back to strict execution for "
+                    f"fetches {[str(r) for r in self.fetches]} "
+                    f"(DESIGN.md §9)", RuntimeWarning, stacklevel=3)
+                self._strict_fallback = True
+                for n, v in ref_vars.items():
+                    store.write(n, v)
+                # cleared only with the verdict, inside the lock: an
+                # early clear would let a concurrent run() slip past the
+                # guard unverified and race the comparison; and if either
+                # execution raised above, the Executable stays pending so
+                # the next run re-verifies
+                self._parity_pending = False
+                return ref
+            self._parity_pending = False
+            return got
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -426,6 +426,17 @@ class Executor:
                 continue
             if node.op in ("Enter", "Exit", "LoopCond", "Identity"):
                 v = ins[0]
+                if node.op == "Exit" and v is _DEAD:
+                    # dead Exit is swallowed, symmetric with dead
+                    # NextIteration: the exit-side Switch port is dead on
+                    # every *continuing* iteration, and all iterations of
+                    # the frame share one parent context — propagating
+                    # those would poison root-frame consumers (mark them
+                    # done-with-dead) before the terminating iteration
+                    # delivers the single live value that actually leaves
+                    # the frame (§4.4; the numerics parity suite consumes
+                    # loop outputs downstream and relies on this).
+                    continue
                 deliver(name, 0, octx, v)
                 deliver_control(name, octx)
                 continue

@@ -66,7 +66,9 @@ FUSIBLE_STATEFUL = {"Variable", "Assign", "AssignAdd"}
 # bit-parity contract ("strict" numerics) they stay eagerly dispatched —
 # a fused kernel compiled at a different backend optimization level
 # reassociates them — while order-insensitive elementwise/data-movement
-# ops fuse freely.  numerics="fast" fuses everything.
+# ops fuse freely.  numerics="fast" fuses everything at full XLA
+# optimization under the per-op-class tolerance contract of DESIGN.md §9
+# (repro.core.numerics), re-proven by the CI parity gate.
 STRICT_UNFUSIBLE = {"MatMul", "Call", "ReduceSum", "ReduceMean",
                     "SoftMax", "SoftmaxXent"}
 
@@ -188,6 +190,9 @@ class RegionSpec:
                     "(fused results may differ from unfused by "
                     "~1 ulp)", RuntimeWarning, stacklevel=2)
                 self.numerics = "fast"  # report the effective mode
+        # "fast": plain jax.jit == full XLA backend optimization (FMA
+        # contraction, reduction reassociation) — the §9 tolerance
+        # contract bounds the drift and the CI parity gate enforces it
         return jax.jit(fn)
 
     @staticmethod

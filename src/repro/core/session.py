@@ -51,7 +51,9 @@ class Session:
                  checkpoint_io: Any = None,
                  devices: Any = None,
                  max_cached_executables: int = 16,
-                 fuse_regions: Optional[bool] = None) -> None:
+                 fuse_regions: Optional[bool] = None,
+                 numerics: Optional[str] = None,
+                 parity_guard: Optional[bool] = None) -> None:
         self.graph = graph or Graph()
         # §10 region fusion (DESIGN.md §7): default-on; per-Session
         # escape hatch via fuse_regions=False, process-wide via
@@ -61,6 +63,25 @@ class Session:
             fuse_regions = os.environ.get(
                 "REPRO_FUSE_REGIONS", "1").lower() not in ("0", "false", "off")
         self.fuse_regions = bool(fuse_regions)
+        # Numerics policy (DESIGN.md §9): "strict" keeps fused == unfused
+        # bit-for-bit (regions compile at XLA backend-opt-0, MatMul/
+        # reductions/Call dispatch eagerly); "fast" fuses everything at
+        # full XLA optimization, accepting tolerance-bounded drift.  Part
+        # of the RunSignature, so strict and fast executables never share
+        # a cache entry.
+        if numerics is None:
+            numerics = os.environ.get("REPRO_FUSE_NUMERICS", "strict")
+        if numerics not in ("strict", "fast"):
+            raise ValueError(
+                f"numerics must be 'strict' or 'fast', got {numerics!r}")
+        self.numerics = numerics
+        # Fast-mode safety net (DESIGN.md §9): verify each Executable's
+        # first run against the unfused-strict reference; on a tolerance
+        # breach, warn and permanently fall back to strict execution.
+        if parity_guard is None:
+            parity_guard = os.environ.get(
+                "REPRO_NUMERICS_GUARD", "1").lower() not in ("0", "false", "off")
+        self.parity_guard = bool(parity_guard)
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
         self.rendezvous = Rendezvous()

@@ -99,9 +99,20 @@ class Prefetcher:
     """Background thread: source iterator -> (shuffling) queue (§4.6)."""
 
     def __init__(self, source: Iterator[Any], capacity: int = 8,
-                 shuffle: bool = False, min_after_dequeue: int = 0,
+                 shuffle: bool = False, min_after_dequeue: Optional[int] = None,
                  seed: Optional[int] = None) -> None:
         if shuffle:
+            # Pre-fill contract: without a floor, a consumer that drains
+            # as fast as the producer fills holds the shuffle window at
+            # ~1 item and the "shuffled" stream can come out in order
+            # (the old test_prefetcher_shuffling flake).  Defaulting the
+            # floor to half the capacity keeps a real window resident
+            # until the source closes; pass min_after_dequeue=0 to opt
+            # out (e.g. latency-critical consumers).
+            if min_after_dequeue is None:
+                # clamped to capacity-1: a capacity-1 queue can never
+                # hold the min_after_dequeue+1 items dequeue waits for
+                min_after_dequeue = min(capacity - 1, max(1, capacity // 2))
             self.queue: FIFOQueue = ShufflingQueue(
                 capacity=capacity, min_after_dequeue=min_after_dequeue, seed=seed)
         else:

@@ -23,10 +23,13 @@ from .steps import build_serve_step, build_eager_serve_step
 def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 16, gen: int = 32, max_seq: int = 128,
           seed: int = 0, temperature: float = 0.0,
-          engine: str = "jit") -> Dict[str, Any]:
+          engine: str = "jit", numerics: str = "fast") -> Dict[str, Any]:
     """``engine="jit"`` jits one decode step; ``engine="graph"`` drives the
     decode loop through ``Session.run`` with the KV cache as a Variable —
-    every token re-runs one cached Executable (DESIGN.md §5)."""
+    every token re-runs one cached Executable (DESIGN.md §5).  The graph
+    engine defaults to ``numerics="fast"`` (the decode Call + cache Assign
+    fuse into one region at full XLA optimization, §9 tolerance contract);
+    ``numerics="strict"`` restores bit-parity with unfused execution."""
     cfg = get_config(arch, smoke=smoke)
     model = Model.for_config(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -49,7 +52,7 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
 
     eb = None
     if engine == "graph":
-        eb = build_eager_serve_step(cfg)
+        eb = build_eager_serve_step(cfg, numerics=numerics)
         eb.session.set_variable("params", params)
         eb.session.set_variable("cache", cache)
 
@@ -87,7 +90,8 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
 
     gen_arr = np.concatenate(out_tokens, axis=1)
     tput = batch * gen / decode_s if decode_s > 0 else float("inf")
-    print(f"[serve] arch={cfg.arch_id} engine={engine} batch={batch} "
+    print(f"[serve] arch={cfg.arch_id} engine={engine}"
+          f"{'/' + numerics if engine == 'graph' else ''} batch={batch} "
           f"prefill {prefill_s:.2f}s "
           f"decode {decode_s:.2f}s ({tput:.1f} tok/s)")
     res = {"generated": gen_arr, "prefill_s": prefill_s,
@@ -107,9 +111,14 @@ def main(argv=None) -> int:
     ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
                     help="jit: jitted decode step; graph: eager Session.run "
                          "through the cached Executable (DESIGN.md §5)")
+    ap.add_argument("--numerics", choices=("fast", "strict"), default="fast",
+                    help="graph-engine fused-region numerics (DESIGN.md §9): "
+                         "fast (default) fuses the decode step at full XLA "
+                         "optimization; strict restores bit-parity")
     args = ap.parse_args(argv)
     res = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                prompt_len=args.prompt_len, gen=args.gen, engine=args.engine)
+                prompt_len=args.prompt_len, gen=args.gen, engine=args.engine,
+                numerics=args.numerics)
     print("[serve] sample token ids:", res["generated"][0][:16].tolist())
     return 0
 

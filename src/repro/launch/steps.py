@@ -423,11 +423,14 @@ def build_eager_train_step(
     *,
     lr: float = 3e-4,
     hparam_overrides: Optional[Dict[str, Any]] = None,
+    numerics: Optional[str] = None,
 ) -> EagerStepBundle:
     """Train step for the eager multi-run path: the same graph as
     ``build_train_step(via_graph=True)`` but *run*, not lowered — each call
     re-enters ``Session.run`` and hits the cached Executable for the
-    (loss, train_op) signature (compile once, run many; DESIGN.md §5)."""
+    (loss, train_op) signature (compile once, run many; DESIGN.md §5).
+    ``numerics`` selects the fused-region policy (DESIGN.md §9): the
+    train tool defaults the graph engine to "fast"."""
     model = Model.for_config(cfg)
     hp = step_hparams(cfg, shape, 1)
     hp.update(hparam_overrides or {})
@@ -447,7 +450,7 @@ def build_eager_train_step(
     b, loss_node, a1, a2, feed_nodes = _train_graph(
         feed_names, loss_of, update_of, None, 1)
     train_op = b.group([a1, a2], name="train_op")
-    sess = Session(b.graph)
+    sess = Session(b.graph, numerics=numerics)
     run = sess.make_callable([loss_node.ref, train_op.ref],
                              [feed_nodes[n].ref for n in feed_names])
 
@@ -460,10 +463,13 @@ def build_eager_train_step(
                            graph_nodes=len(b.graph.nodes))
 
 
-def build_eager_serve_step(cfg: ModelConfig) -> EagerStepBundle:
+def build_eager_serve_step(cfg: ModelConfig,
+                           numerics: Optional[str] = None) -> EagerStepBundle:
     """One-token decode as a Session graph: the KV cache is a Variable
     updated by an Assign node, so the decode loop is exactly the paper's
-    steady-state serving shape — one cached Executable re-run per token."""
+    steady-state serving shape — one cached Executable re-run per token.
+    Under ``numerics="fast"`` (the serve tool's graph-engine default) the
+    ``Call`` + cache Assign fuse into one jitted region (DESIGN.md §9)."""
     model = Model.for_config(cfg)
 
     def serve_of(params, cache, tokens, pos):
@@ -477,7 +483,7 @@ def build_eager_serve_step(cfg: ModelConfig) -> EagerStepBundle:
     out = b.call(serve_of, [v_params, v_cache, t_ph, p_ph],
                  name="serve", n_out=2)
     a_cache = b.assign(v_cache, out.output(1))
-    sess = Session(b.graph)
+    sess = Session(b.graph, numerics=numerics)
     run = sess.make_callable([out.output(0), a_cache.ref],
                              [t_ph.ref, p_ph.ref])
 

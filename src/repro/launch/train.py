@@ -33,11 +33,16 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
           batch: int = 8, seq: int = 256, lr: float = 1e-3,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
           log_every: int = 10, seed: int = 0,
-          resume: bool = True, engine: str = "jit") -> Dict[str, Any]:
+          resume: bool = True, engine: str = "jit",
+          numerics: str = "fast") -> Dict[str, Any]:
     """``engine="jit"`` lowers the step graph and jits it (§10);
     ``engine="graph"`` drives the same graph through ``Session.run``, where
     the steady-state loop re-runs one cached Executable per step
-    (compile once, run many; DESIGN.md §5)."""
+    (compile once, run many; DESIGN.md §5).  The graph engine defaults to
+    ``numerics="fast"`` — fused regions (incl. matmuls/reductions) compile
+    at full XLA optimization under the §9 tolerance contract enforced by
+    the CI parity gate; ``numerics="strict"`` restores bit-parity with
+    unfused execution."""
     cfg = get_config(arch, smoke=smoke)
     shape = Shape("custom", seq, batch, "train")
     hparam_overrides = {"compute_dtype": jnp.float32,
@@ -45,14 +50,16 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
     eb = None
     if engine == "graph":
         eb = build_eager_train_step(cfg, shape, lr=lr,
-                                    hparam_overrides=hparam_overrides)
+                                    hparam_overrides=hparam_overrides,
+                                    numerics=numerics)
         model, graph_nodes = eb.model, eb.graph_nodes
     else:
         sb = build_train_step(cfg, shape, lr=lr,
                               hparam_overrides=hparam_overrides)
         model, graph_nodes = sb.model, sb.graph_nodes
     n_params = count_params(model.describe_params())
-    print(f"[train] arch={cfg.arch_id} engine={engine} "
+    print(f"[train] arch={cfg.arch_id} engine={engine}"
+          f"{'/' + numerics if engine == 'graph' else ''} "
           f"params={n_params/1e6:.1f}M "
           f"batch={batch} seq={seq} graph_nodes={graph_nodes}")
 
@@ -143,12 +150,18 @@ def main(argv=None) -> int:
     ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
                     help="jit: lowered+jitted step; graph: eager Session.run "
                          "through the cached Executable (DESIGN.md §5)")
+    ap.add_argument("--numerics", choices=("fast", "strict"), default="fast",
+                    help="graph-engine fused-region numerics (DESIGN.md §9): "
+                         "fast (default) compiles regions at full XLA "
+                         "optimization under the CI-enforced tolerance "
+                         "contract; strict restores fused==unfused "
+                         "bit-parity")
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
     res = train(args.arch, smoke=args.smoke, steps=args.steps,
                 batch=args.batch, seq=args.seq, lr=args.lr,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                engine=args.engine)
+                engine=args.engine, numerics=args.numerics)
     print(f"[train] done: final loss {res['final_loss']:.4f}")
     return 0
 

@@ -82,13 +82,23 @@ class FIFOQueue:
 
 
 class ShufflingQueue(FIFOQueue):
-    """Randomly shuffles elements within its in-memory buffer (§4.6)."""
+    """Randomly shuffles elements within its in-memory buffer (§4.6).
+
+    ``min_after_dequeue`` is a *pre-fill target*, not a hard gate: each
+    dequeue first gives the producer a bounded grace period
+    (``prefill_grace``) to build the window up to the target, then
+    serves whatever is buffered.  A fast producer therefore yields a
+    real shuffle window (the deflake contract for
+    ``Prefetcher(shuffle=True)``); a slow producer degrades the window
+    instead of stalling the stream into a TimeoutError.
+    """
 
     def __init__(self, capacity: int = 1024, min_after_dequeue: int = 0,
                  seed: Optional[int] = None, timeout: float = 30.0,
-                 name: str = "shuffle") -> None:
+                 name: str = "shuffle", prefill_grace: float = 1.0) -> None:
         super().__init__(capacity=capacity, timeout=timeout, name=name)
         self.min_after_dequeue = min_after_dequeue
+        self.prefill_grace = prefill_grace
         self._rng = random.Random(seed)
 
     def _pick(self) -> Any:
@@ -98,9 +108,13 @@ class ShufflingQueue(FIFOQueue):
     def dequeue(self) -> Any:
         with self._cv:
             need = self.min_after_dequeue + 1
-            self._cv.wait_for(lambda: len(self._items) >= need or self._closed,
+            if len(self._items) < need and not self._closed:
+                self._cv.wait_for(
+                    lambda: len(self._items) >= need or self._closed,
+                    timeout=min(self.timeout, self.prefill_grace))
+            self._cv.wait_for(lambda: bool(self._items) or self._closed,
                               timeout=self.timeout)
-            if self._items and (len(self._items) >= need or self._closed):
+            if self._items:
                 it = self._pick()
                 self._cv.notify_all()
                 return it

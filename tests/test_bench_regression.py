@@ -1,7 +1,8 @@
 """Opt-in perf-regression gate: `pytest -m benchcheck`.
 
-Re-runs the key benchmarks (b1 dispatch overhead, b9 train throughput,
-b12 cached multi-device step, b13 fused multi-device step) and fails if
+Re-runs the key benchmarks (b1 dispatch overhead, b2 fused-fast eager
+engine, b9 train throughput, b12 cached multi-device step, b13 fused
+multi-device step) and fails if
 any regressed by more than 25% against the committed
 ``benchmarks/BENCH_latest.json``.  Deselected by default (see pyproject
 ``addopts``) because a fresh run costs ~a minute; CI or a developer

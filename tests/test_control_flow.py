@@ -89,3 +89,23 @@ def test_loop_over_vector_state():
                       [i0, x0])
     i, x = Session(b.graph).run(outs)
     np.testing.assert_allclose(x, np.full((4,), 8.0))
+
+
+def test_loop_outputs_consumed_by_downstream_compute():
+    """Exit values feed post-loop compute (§4.4).  Regression: a dead
+    Exit fired on every *continuing* iteration and poisoned root-frame
+    consumers (marked them done-with-dead) before the terminating
+    iteration delivered the live value — dead Exits are now swallowed
+    like dead NextIterations."""
+    b = GraphBuilder()
+    lim = b.constant(jnp.array(3), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    i0 = b.constant(jnp.array(0), name="i0")
+    a0 = b.constant(jnp.array(2.0), name="a0")
+    outs = while_loop(b, lambda i, a: b.less(i, lim),
+                      lambda i, a: [b.add(i, one), b.add(a, a)], [i0, a0])
+    post = b.mul(outs[1], outs[1], name="post")
+    total = b.add(post, b.cast(outs[0], "float32"), name="total")
+    for fuse in (False, True):
+        got = Session(b.graph, fuse_regions=fuse).run(total.ref)
+        assert float(got) == 16.0 * 16.0 + 3.0
