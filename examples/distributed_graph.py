@@ -1,10 +1,17 @@
 """The paper's §3.2/§3.3 distributed machinery, visibly at work.
 
-Places a graph across 3 virtual workers with the §3.2.1 greedy cost-model
-placer, partitions it with canonicalised Send/Recv (§3.2.2), schedules
-Recvs ASAP/ALAP (§5.2), runs it with one executor thread per worker
-coordinating through the rendezvous — optionally with §5.5 lossy 32->16
-bit compression on every cross-worker edge.
+Part 1 (in-process): places a graph across 3 virtual workers with the
+§3.2.1 greedy cost-model placer, partitions it with canonicalised
+Send/Recv (§3.2.2), schedules Recvs ASAP/ALAP (§5.2), runs it with one
+executor thread per worker coordinating through the rendezvous —
+optionally with §5.5 lossy 32->16 bit compression on every cross-worker
+edge.
+
+Part 2 (multi-process, DESIGN.md §11): spawns two REAL worker processes
+serving the TCP wire protocol, ships the partitioned subgraphs to them
+(RegisterGraph), runs the same computation with tensors crossing OS
+process boundaries through the WireRendezvous, and shows the result
+bit-matching the in-process run — plus the heartbeat view of the pool.
 
   PYTHONPATH=src python examples/distributed_graph.py
 """
@@ -59,7 +66,53 @@ def main():
     rel = abs(float(lossy) - float(exact)) / abs(float(exact))
     print(f"with 32->16 bit wire compression: {float(lossy):.4f} "
           f"(rel err {rel:.2e}, bound 2^-7={2**-7:.2e})")
+    return float(exact)
+
+
+def main_wire(expected):
+    """DESIGN.md §11: the same machinery across real OS processes."""
+    from repro.distrib import start_worker_processes, stop_worker_processes
+
+    print("\n-- multi-process (2 worker processes over TCP) --")
+    procs, spec = start_worker_processes(2)
+    sess = None
+    try:
+        rs = np.random.RandomState(0)
+        b = GraphBuilder()
+        data = b.constant(jnp.array(rs.randn(256, 256).astype("f")),
+                          name="data", device="/job:worker/task:0")
+        w1 = b.constant(jnp.array(rs.randn(256, 256).astype("f") * 0.05),
+                        name="w1", device="/job:worker/task:1")
+        h = b.relu(b.matmul(data, w1, name="mm1", device="/job:worker/task:1"),
+                   name="h", device="/job:worker/task:1")
+        w2 = b.constant(jnp.array(rs.randn(256, 64).astype("f") * 0.05),
+                        name="w2", device="/job:worker/task:0")
+        out = b.reduce_sum(
+            b.matmul(h, w2, name="mm2", device="/job:worker/task:0"),
+            name="out", device="/job:worker/task:0")
+
+        sess = Session(b.graph, cluster=spec)
+        wire = sess.run(out.ref)     # RegisterGraph + RunGraph under the hood
+        again = sess.run(out.ref)    # cached Executable: RunGraph only
+        print(f"worker pool: {', '.join(spec.workers)}")
+        print(f"result over the wire rendezvous: {float(wire):.4f} "
+              f"(run 2: {float(again):.4f}; cache {sess.cache_stats})")
+        print(f"bit-matches the in-process run: {float(wire) == expected}")
+        exe = sess.executable([out.ref], set())
+        stats = exe.wire_plan.last_run_stats
+        print("per-task wire traffic:",
+              {f"task:{t}": s for t, s in sorted(stats.items())})
+        import time
+
+        time.sleep(1.0)  # let a heartbeat cycle land
+        hb = {t: exe.wire_plan.master._info.get(t, {}).get("pid")
+              for t in sorted(stats)}
+        print(f"heartbeats: worker pids {hb} (master pid {os.getpid()})")
+    finally:
+        if sess is not None:
+            sess.close()
+        stop_worker_processes(procs, spec)
 
 
 if __name__ == "__main__":
-    main()
+    main_wire(main())

@@ -20,9 +20,42 @@ from .graph import Graph, Node, TensorRef, as_ref
 from . import ops as ops_mod
 
 
+def _ones_like(v):
+    return jnp.ones_like(v)
+
+
+def _zeros_like(x):
+    return jnp.zeros_like(x)
+
+
+class _GradFn:
+    """The backward kernel of one forward node, as a *picklable* callable.
+
+    Closures cannot cross a process boundary; this class-with-state form
+    pickles by reference to the class plus the forward :class:`Node`
+    (plain data), so §4.1 gradient graphs ship to §11 worker pools like
+    any other primitive-op graph — the opdef is re-resolved from the
+    registry at call time on whichever process executes the node.
+    """
+
+    def __init__(self, node: Node, n_in: int, n_out: int) -> None:
+        self.node, self.n_in, self.n_out = node, n_in, n_out
+
+    def __call__(self, *vals):
+        od = ops_mod.opdef(self.node.op)
+        ins = vals[:self.n_in]
+        outs = vals[self.n_in:self.n_in + self.n_out]
+        gouts = vals[self.n_in + self.n_out:]
+        gins = od.grad(self.node, list(ins), list(outs), list(gouts))
+        return tuple(
+            jnp.zeros_like(ins[i]) if gi is None else gi
+            for i, gi in enumerate(gins)
+        )
+
+
 def _zeros_like_node(g: Graph, ref: TensorRef) -> TensorRef:
     node = g.add_node("Call", [ref], name=f"grad/zeros_{ref.node}_{ref.port}",
-                      attrs={"fn": lambda x: jnp.zeros_like(x), "n_out": 1})
+                      attrs={"fn": _zeros_like, "n_out": 1})
     return node.ref
 
 
@@ -66,7 +99,7 @@ def gradients(
         else:
             seed = g.add_node(
                 "Call", [yr], name=f"grad/ones_{yr.node}",
-                attrs={"fn": lambda v: jnp.ones_like(v), "n_out": 1},
+                attrs={"fn": _ones_like, "n_out": 1},
             ).ref
         grads.setdefault((yr.node, yr.port), []).append(seed)
 
@@ -94,23 +127,12 @@ def gradients(
         n_in = len(node.inputs)
         fwd_out_refs = [TensorRef(name, p) for p in range(n_out)]
 
-        def make_grad_fn(node=node, od=od, n_in=n_in, n_out=n_out):
-            def grad_fn(*vals):
-                ins = vals[:n_in]
-                outs = vals[n_in:n_in + n_out]
-                gouts = vals[n_in + n_out:]
-                gins = od.grad(node, list(ins), list(outs), list(gouts))
-                return tuple(
-                    jnp.zeros_like(ins[i]) if gi is None else gi
-                    for i, gi in enumerate(gins)
-                )
-            return grad_fn
-
         gnode = g.add_node(
             "Call",
             list(node.inputs) + fwd_out_refs + gout_refs,
             name=f"grad/{name}",
-            attrs={"fn": make_grad_fn(), "n_out": n_in, "is_grad_of": name},
+            attrs={"fn": _GradFn(node, n_in, n_out), "n_out": n_in,
+                   "is_grad_of": name},
         )
         for i, in_ref in enumerate(node.inputs):
             if in_ref.node in active or in_ref.node in {r.node for r in x_refs}:

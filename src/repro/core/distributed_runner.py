@@ -10,7 +10,16 @@ entry point that builds a one-off Executable and runs it.
 Worker failure semantics (§3.3): any worker exception aborts the whole
 graph execution; workers that never finish within ``timeout`` raise an
 :class:`~repro.core.executor.ExecutorError` naming the stuck device(s)
-instead of silently dropping their fetches.
+*and their owning worker process* (in-process: thread + pid; cluster:
+task + host:port + pid via repro.distrib) instead of silently dropping
+their fetches.
+
+When the session carries a ``cluster=`` spec (DESIGN.md §11) the same
+entry point executes across OS processes: the Executable ships each
+per-device subgraph to its owning worker and Send/Recv — including the
+§5.5 ``compress=True`` lossy wire compression — ride the TCP
+:class:`~repro.distrib.wire.WireRendezvous` instead of the in-process
+table.
 """
 from __future__ import annotations
 

@@ -76,6 +76,13 @@ class RunSignature:
                     feed_keys) -> "RunSignature":
         devs = session.devices
         fp = devs.fingerprint() if devs is not None else ()
+        cluster = getattr(session, "cluster", None)
+        if cluster is not None:
+            # §3.3/DESIGN.md §11: the cluster spec is part of the device
+            # fingerprint — rebinding a session to a different pool (or a
+            # restarted one on new ports) must rebuild Executables, since
+            # their WirePlans hold per-worker registrations
+            fp = tuple(fp) + cluster.fingerprint()
         return RunSignature(
             fetches=tuple(fetch_refs),
             feed_keys=frozenset(feed_keys),
@@ -201,9 +208,15 @@ class Executable:
         # Session.run uses the plain in-thread executor for 0/1-device
         # sessions; run_partitioned forces the worker-thread path even for
         # one device (it carries the device-kind kernel dispatch and the
-        # join timeout).
+        # join timeout), and a cluster session always partitions — even a
+        # one-worker pool executes in its worker process, not here.
         self.multi_device = devices is not None and (
-            len(devices) > 1 or force_partitioned)
+            len(devices) > 1 or force_partitioned
+            or getattr(session, "cluster", None) is not None)
+        # §3.3/DESIGN.md §11: a cluster session ships per-device subgraphs
+        # to worker processes instead of running local executor threads
+        self.cluster = getattr(session, "cluster", None)
+        self.wire_plan = None
         if self.multi_device:
             cm = self._cost_model = cost_model or placement_mod.CostModel()
             self.placement = placement_mod.place(
@@ -218,6 +231,23 @@ class Executable:
             exec_graph = self.partitioned.graph
             exec_placement = self.partitioned.placement
             device_nodes = self.partitioned.device_nodes
+            if self.cluster is not None:
+                # ship the *unfused* partitioned subgraphs (fusion specs
+                # hold jitted closures that cannot cross a process
+                # boundary); each worker re-fuses its local slice under
+                # the same numerics policy (distrib/worker.py, §7/§9)
+                scheduler_mod.schedule_recvs(
+                    exec_graph, set(exec_graph.nodes), cm, devices,
+                    exec_placement)
+                self.device_executors = {}
+                self.fetch_by_dev = self._route_fetches(
+                    exec_placement, device_nodes, remap=False)
+                self.n_nodes = len(exec_graph.nodes)
+                from ..distrib.master import WirePlan
+
+                self.wire_plan = WirePlan(self, device_nodes)
+                self._init_parity_guard(session)
+                return
             if self.fuse_regions:
                 fus = fusion_mod.try_fuse(
                     exec_graph, set(exec_graph.nodes),
@@ -259,20 +289,30 @@ class Executable:
             self.executor = Executor(exec_graph, node_filter=exec_names)
             self.n_nodes = len(exec_names)
 
+        self._init_parity_guard(session)
+
+    def _init_parity_guard(self, session) -> None:
         # ---- fast-mode parity guard (DESIGN.md §9) -------------------
         # The first run of a fast-numerics Executable is verified against
         # the unfused-strict reference within the §9 per-op-class
-        # tolerances; a breach warns and permanently falls back to strict
+        # tolerances; with ``REPRO_NUMERICS_GUARD=sample:N`` every Nth
+        # subsequent run re-verifies too (long-lived serving processes:
+        # input distribution shift can expose drift the first batch
+        # didn't).  A breach warns and permanently falls back to strict
         # (unfused) execution.  Skipped when the executed set contains
         # ops whose side effects cannot be replayed (queues, checkpoint
-        # IO) — the CI parity gate still covers those op classes.
+        # IO) — the CI parity gate still covers those op classes — and
+        # for cluster executions (Variable state lives in the worker
+        # processes; the reference would run against stale local state).
         self._strict_fallback = False
         self._parity_pending = False
         self._guard_lock = threading.Lock()
         self._guard_vars: List[str] = []
         self._guard_tol = None
+        self._guard_every: Optional[int] = None
+        self._guard_runs = 0
         if (self.numerics == "fast" and self.fusion is not None
-                and self.fusion.regions
+                and self.fusion.regions and self.wire_plan is None
                 and getattr(session, "parity_guard", False)):
             ops = {session.graph.nodes[n].op for n in self.node_set}
             if not ops & GUARD_UNSAFE:
@@ -289,6 +329,7 @@ class Executable:
                     & {n for n in self.node_set
                        if session.graph.nodes[n].op == "Variable"})
                 self._guard_tol = numerics_mod.tolerance_for_ops(ops)
+                self._guard_every = getattr(session, "parity_guard_every", None)
 
     # ------------------------------------------------------------------
     def run(self, feeds: Optional[Dict[TensorRef, Any]] = None, *,
@@ -299,6 +340,14 @@ class Executable:
             raise ExecutorError(
                 f"feed keys {sorted(map(str, feeds))} do not match the keys this "
                 f"Executable was compiled for {sorted(map(str, self.feed_keys))}")
+        if self.wire_plan is not None:
+            # DESIGN.md §11: multi-process execution over the wire
+            # rendezvous; per-kernel tracing needs the in-process engine
+            if tracer is not None or trace is not None:
+                raise ExecutorError(
+                    "trace=/tracer= are not supported for cluster execution "
+                    "(run without cluster= for per-kernel EEG tracing)")
+            return self.wire_plan.run(feeds, timeout=timeout)
         if tracer is not None and self.fusion is not None:
             # per-kernel tracing: run the faithful unfused interpretation
             # (fused kernels are opaque blobs to an EEG-style tracer)
@@ -311,9 +360,21 @@ class Executable:
             return self._run_unfused(feeds, trace=trace, tracer=tracer,
                                      timeout=timeout)
         if self._parity_pending:
-            return self._guarded_first_run(feeds, trace, tracer, timeout)
+            return self._guarded_run(feeds, trace, tracer, timeout)
+        if self._sample_due():
+            return self._guarded_run(feeds, trace, tracer, timeout,
+                                     sampled=True)
         return self._dispatch(feeds, trace=trace, tracer=tracer,
                               timeout=timeout)
+
+    def _sample_due(self) -> bool:
+        """REPRO_NUMERICS_GUARD=sample:N — is this run a re-verification?
+        The counter starts after the (always-verified) first run."""
+        if self._guard_every is None or self._strict_fallback:
+            return False
+        with self._guard_lock:
+            self._guard_runs += 1
+            return self._guard_runs % self._guard_every == 0
 
     def _dispatch(self, feeds: Dict[TensorRef, Any], *,
                   trace: Optional[List[str]], tracer: Any,
@@ -340,10 +401,11 @@ class Executable:
         return executor.run(self.fetches, feeds, ctx=self.session._ctx(),
                             trace=trace, tracer=tracer)
 
-    def _guarded_first_run(self, feeds: Dict[TensorRef, Any],
-                           trace: Optional[List[str]], tracer: Any,
-                           timeout: float) -> List[Any]:
-        """First run of a fast-numerics Executable: execute the unfused-
+    def _guarded_run(self, feeds: Dict[TensorRef, Any],
+                     trace: Optional[List[str]], tracer: Any,
+                     timeout: float, *, sampled: bool = False) -> List[Any]:
+        """Verified run of a fast-numerics Executable (the first run, and
+        with guard sampling every Nth thereafter): execute the unfused-
         strict reference AND the fused-fast pipeline on the same feeds
         (variable state snapshotted in between so both start identically)
         and require the drift to stay within the §9 tolerances.  On a
@@ -351,7 +413,8 @@ class Executable:
         Executable to strict execution permanently.
         """
         with self._guard_lock:
-            if not self._parity_pending:  # raced with another first run
+            if not sampled and not self._parity_pending:
+                # raced with another first run
                 if self._strict_fallback:
                     return self._run_unfused(feeds, trace=trace,
                                              tracer=tracer, timeout=timeout)
@@ -513,9 +576,16 @@ class Executable:
             raise errors[0]
         stuck = sorted(dev for dev, t in threads.items() if t.is_alive())
         if stuck:
+            # §3.3: name the owning worker *process*, not just the virtual
+            # device — multi-process hangs are diagnosed by which OS
+            # process holds the stuck executor (distrib workers report
+            # their task/pid the same way; DESIGN.md §11)
+            ident = ", ".join(
+                f"{dev} (in-process worker thread {threads[dev].name!r}, "
+                f"pid {os.getpid()})" for dev in stuck)
             raise ExecutorError(
                 f"graph execution timed out after {timeout:.1f}s: worker(s) for "
-                f"device(s) {stuck} never finished (stuck Send/Recv or a hung "
+                f"{ident} never finished (stuck Send/Recv or a hung "
                 f"kernel; §3.3 failure reporting)")
         missing = [str(self.fetches[i]) for i in range(len(self.fetches))
                    if i not in results]

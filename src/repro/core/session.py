@@ -43,6 +43,30 @@ class _DictCheckpointIO:
         return self.table[path]
 
 
+def _parse_guard(value) -> Tuple[bool, Optional[int]]:
+    """Parity-guard policy -> (enabled, sample_every).
+
+    ``True``/``"1"`` verify the first run only; ``"sample:N"`` (or an int
+    N > 1) additionally re-verifies every Nth run — the opt-in sampling
+    mode for long-lived serving processes where input distribution shift
+    could expose drift the first batch didn't (DESIGN.md §9)."""
+    if isinstance(value, bool):
+        return value, None
+    if isinstance(value, int):
+        # 0 disables (falsy, like the old bool-only signature); N > 1
+        # samples every Nth run
+        return value > 0, (value if value > 1 else None)
+    s = str(value).strip().lower()
+    if s in ("0", "false", "off"):
+        return False, None
+    if s.startswith("sample:"):
+        n = int(s.split(":", 1)[1])
+        if n < 1:
+            raise ValueError(f"parity guard sample period must be >= 1, got {n}")
+        return True, n  # sample:1 re-verifies every run
+    return True, None
+
+
 class Session:
     _ids = itertools.count()
 
@@ -50,10 +74,11 @@ class Session:
                  containers: Optional[ContainerManager] = None,
                  checkpoint_io: Any = None,
                  devices: Any = None,
+                 cluster: Any = None,
                  max_cached_executables: int = 16,
                  fuse_regions: Optional[bool] = None,
                  numerics: Optional[str] = None,
-                 parity_guard: Optional[bool] = None) -> None:
+                 parity_guard: Any = None) -> None:
         self.graph = graph or Graph()
         # §10 region fusion (DESIGN.md §7): default-on; per-Session
         # escape hatch via fuse_regions=False, process-wide via
@@ -76,23 +101,101 @@ class Session:
                 f"numerics must be 'strict' or 'fast', got {numerics!r}")
         self.numerics = numerics
         # Fast-mode safety net (DESIGN.md §9): verify each Executable's
-        # first run against the unfused-strict reference; on a tolerance
+        # first run — and with REPRO_NUMERICS_GUARD=sample:N every Nth
+        # run — against the unfused-strict reference; on a tolerance
         # breach, warn and permanently fall back to strict execution.
         if parity_guard is None:
-            parity_guard = os.environ.get(
-                "REPRO_NUMERICS_GUARD", "1").lower() not in ("0", "false", "off")
-        self.parity_guard = bool(parity_guard)
+            parity_guard = os.environ.get("REPRO_NUMERICS_GUARD", "1")
+        self.parity_guard, self.parity_guard_every = _parse_guard(parity_guard)
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
         self.rendezvous = Rendezvous()
         self.queues: Dict[str, Any] = {}
         self.checkpoint_io = checkpoint_io or _DictCheckpointIO()
+        # §3.3/DESIGN.md §11: a cluster spec turns multi-device execution
+        # into multi-*process* execution — the same place/partition/
+        # schedule pipeline, with per-device subgraphs shipped to worker
+        # processes and Send/Recv riding the wire rendezvous.
+        self.cluster = None
+        self._master: Any = None
+        if cluster is not None:
+            import uuid
+
+            from ..distrib.wire import ClusterSpec
+
+            self.cluster = ClusterSpec.parse(cluster)
+            if devices is None:
+                devices = self.cluster.device_set()
+            # worker-side Variable containers are namespaced per session,
+            # mirroring the in-process default of one ContainerManager
+            # per Session (§4.7): two sessions sharing a worker pool must
+            # not silently share state through colliding Variable names.
+            # Stable across pool restarts (recovery keeps the session).
+            self.wire_namespace = uuid.uuid4().hex[:8]
         self.devices = devices  # DeviceSet for the multi-device eager path
         self.id = next(Session._ids)
         self._run_count = 0
         # compile-once/run-many: RunSignature -> Executable (DESIGN.md §5);
         # max_cached_executables=0 disables caching (benchmark baseline).
         self._executables = ExecutableCache(maxsize=max_cached_executables)
+
+    # ------------------------------------------------------------------
+    @property
+    def master(self):
+        """Lazily-started :class:`repro.distrib.master.Master` for cluster
+        sessions (heartbeats begin on first touch; DESIGN.md §11)."""
+        if self.cluster is None:
+            raise RuntimeError("Session has no cluster= spec")
+        if self._master is None:
+            from ..distrib.master import Master
+
+            self._master = Master(self.cluster)
+            self._master.start()
+        return self._master
+
+    def rebind_cluster(self, cluster: Any = None) -> None:
+        """§3.3 recovery: point this session at a restarted worker pool.
+
+        The pool must have the same shape (task count / devices per task
+        — placement is per-task).  The session store's *current* Variable
+        values are pushed to the pool here and cached Executables
+        re-register lazily, so the recovery recipe is: restore the last
+        checkpoint into the session (``set_variable``), restart the
+        workers, call this, keep running.
+        """
+        from ..distrib.wire import ClusterSpec
+
+        spec = ClusterSpec.parse(cluster) if cluster is not None else self.cluster
+        if spec is None:
+            raise RuntimeError("Session has no cluster= spec")
+        self.cluster = spec
+        self.master.reset(spec)
+        # registration only *seeds* worker Variables (it must not clobber
+        # live mid-training state); recovery state is pushed explicitly —
+        # restore the checkpoint into the session store BEFORE calling
+        for plan in self.master.live_plans():
+            plan.push_variables()
+
+    def pull_cluster_variables(self) -> Dict[str, Any]:
+        """Fetch Variable state back from the worker pool into the local
+        store; returns the pulled values (checkpoint them with
+        CheckpointManager for §3.3 recovery)."""
+        if self._master is None:
+            return {}
+        out: Dict[str, Any] = {}
+        seen = set()
+        for plan in self._master.live_plans():
+            names = set(plan.var_owner) - seen
+            if names:
+                out.update(plan.pull_variables())
+                seen |= set(plan.var_owner)
+        return out
+
+    def close(self) -> None:
+        """Stop heartbeat threads / close worker channels (cluster sessions)."""
+        if self._master is not None:
+            self._master.stop()
+            self._master = None
 
     # ------------------------------------------------------------------
     def extend(self, graph: Graph) -> None:

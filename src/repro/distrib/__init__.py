@@ -1,0 +1,22 @@
+"""repro.distrib — the §3.2/§3.3 multi-process runtime (DESIGN.md §11).
+
+Public surface:
+  ClusterSpec                 worker-pool topology ("host:port,..." per task)
+  WireRendezvous              runtime/rendezvous.py interface over TCP
+  Worker                      one task's server process (also a CLI:
+                              ``python -m repro.distrib.worker``)
+  Master / WirePlan           heartbeat monitor + per-Executable shipping
+  start_worker_processes /    local pool helpers for tests, examples and
+  stop_worker_processes       the CI 2-process smoke job
+"""
+from .wire import ClusterSpec, WireRendezvous
+from .worker import Worker, start_worker_processes, stop_worker_processes
+from .master import Master, WirePlan
+from .protocol import Channel, ProtocolError, WorkerError, encode_tensor, decode_tensor
+
+__all__ = [
+    "ClusterSpec", "WireRendezvous", "Worker", "Master", "WirePlan",
+    "Channel", "ProtocolError", "WorkerError",
+    "encode_tensor", "decode_tensor",
+    "start_worker_processes", "stop_worker_processes",
+]

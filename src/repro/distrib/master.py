@@ -1,0 +1,403 @@
+"""§3.2/§3.3 master: drives a worker pool from the Executable pipeline.
+
+The master is the paper's client+master pair in one process: the
+Session's Executable pipeline still runs place → partition → schedule
+exactly once per run signature, and when the Session carries a
+``cluster=`` spec the resulting per-device subgraphs are *shipped* to
+their owning worker processes (``register_graph``) instead of executed
+on local threads.  Each ``run`` then fans one ``run_graph`` RPC out per
+task under a fresh execution id; workers coordinate tensor transfers
+peer-to-peer through the :class:`~repro.distrib.wire.WireRendezvous`,
+and the master only collects fetch values.
+
+Fault tolerance (§3.3, §4.3 of the OSDI follow-up): a heartbeat monitor
+pings every worker; on a timeout (or a transport error mid-run) the
+worker is marked dead, in-flight executions abort with an
+:class:`~repro.core.executor.ExecutorError` naming the lost process/host
+(task, endpoint, pid), and training resumes by restarting the pool,
+rebinding the session (``Session.rebind_cluster``) and restoring the
+last checkpoint — re-registration ships the restored Variable state.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+import uuid
+import weakref
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.executor import ExecutorError
+from ..core.graph import Graph, TensorRef
+from .protocol import Channel, WorkerError
+from .wire import ClusterSpec
+
+
+class Master:
+    """Connection + liveness manager for one worker pool."""
+
+    def __init__(self, cluster: "ClusterSpec | str", *,
+                 heartbeat_interval: float = 0.5,
+                 heartbeat_misses: int = 3) -> None:
+        self.cluster = ClusterSpec.parse(cluster)
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_misses = heartbeat_misses
+        self.generation = 0  # bumped on reset(); plans re-register lazily
+        self.dead: Dict[int, str] = {}
+        # weak refs: a plan lives exactly as long as its Executable — the
+        # session's LRU eviction must actually free partitioned graphs
+        # and shipped-payload copies, not pin them here forever
+        self.plans: List["weakref.ref[WirePlan]"] = []
+        self._info: Dict[int, Dict[str, Any]] = {}
+        self._misses: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+        self.channels: Dict[int, Channel] = {
+            t: Channel(*self.cluster.host_port(t))
+            for t in range(len(self.cluster.workers))}
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._hb_thread is None and self.heartbeat_interval > 0:
+            self._stop.clear()
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, daemon=True, name="master-hb")
+            self._hb_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        t, self._hb_thread = self._hb_thread, None
+        if t is not None:
+            t.join(timeout=2.0)
+        for ch in self.channels.values():
+            ch.close()
+
+    def reset(self, cluster: "ClusterSpec | str | None" = None) -> None:
+        """§3.3 recovery: point at a restarted pool (same task count).
+
+        Bumps ``generation`` so every WirePlan re-registers on its next
+        run.  Registration *seeds* missing worker Variables from the
+        session store; live state is never clobbered — recovery pushes
+        restored values explicitly (``Session.rebind_cluster`` /
+        ``WirePlan.push_variables``)."""
+        new = ClusterSpec.parse(cluster) if cluster is not None else self.cluster
+        if len(new.workers) != len(self.cluster.workers):
+            raise ValueError(
+                f"recovery pool has {len(new.workers)} workers, expected "
+                f"{len(self.cluster.workers)} (placement is per-task)")
+        self.stop()
+        self.cluster = new
+        self.channels = {t: Channel(*new.host_port(t))
+                         for t in range(len(new.workers))}
+        self.dead.clear()
+        self._info.clear()
+        self._misses.clear()
+        self.generation += 1
+        self.start()
+
+    # ------------------------------------------------------------------
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_interval):
+            for task, ch in list(self.channels.items()):
+                if self._stop.is_set() or task in self.dead:
+                    continue
+                try:
+                    rep = ch.call("heartbeat",
+                                  _timeout=max(1.0, self.heartbeat_interval * 4))
+                    with self._lock:
+                        self._info[task] = rep
+                        self._misses[task] = 0
+                except Exception as e:  # noqa: BLE001 — count, then condemn
+                    with self._lock:
+                        self._misses[task] = self._misses.get(task, 0) + 1
+                        if self._misses[task] >= self.heartbeat_misses:
+                            self.dead.setdefault(
+                                task, f"{self._misses[task]} consecutive "
+                                      f"heartbeats failed ({type(e).__name__}: {e})")
+
+    def live_plans(self) -> List["WirePlan"]:
+        out, refs = [], []
+        for r in self.plans:
+            plan = r()
+            if plan is not None:
+                out.append(plan)
+                refs.append(r)
+        self.plans = refs  # prune dead refs as a side effect
+        return out
+
+    def identity(self, task: int) -> str:
+        """Human-readable process identity for §3.3 failure reports."""
+        host, port = self.cluster.host_port(task)
+        pid = self._info.get(task, {}).get("pid")
+        pid_s = f", pid {pid}" if pid is not None else ""
+        return f"worker task:{task} ({host}:{port}{pid_s})"
+
+    def mark_dead(self, task: int, reason: str) -> None:
+        self.dead.setdefault(task, reason)
+
+    def check(self) -> None:
+        if self.dead:
+            lost = "; ".join(f"{self.identity(t)}: {r}"
+                             for t, r in sorted(self.dead.items()))
+            raise ExecutorError(
+                f"§3.3: lost {lost} — in-flight executions aborted; restart "
+                f"the worker pool, rebind the session "
+                f"(Session.rebind_cluster) and resume from the last "
+                f"checkpoint")
+
+
+class WirePlan:
+    """Distributed run state of one Executable: per-task payloads + RPCs.
+
+    Built once per run signature from the Executable's partitioned graph;
+    registration with the workers is lazy and generation-aware, so a
+    restarted pool transparently re-receives the subgraphs and the
+    session's current Variable values on the next run.
+    """
+
+    def __init__(self, exe: Any, device_nodes: Dict[str, set]) -> None:
+        session = exe.session
+        self.exe = exe
+        self.session = session
+        self.master: Master = session.master
+        self.handle = uuid.uuid4().hex[:12]
+        self._eid_prefix = uuid.uuid4().hex[:8]
+        self._eid_counter = itertools.count()
+        self._registered_gen: Optional[int] = None
+        self._reg_lock = threading.Lock()
+
+        parted = exe.partitioned
+        graph: Graph = parted.graph
+        cluster: ClusterSpec = session.cluster
+        n_tasks = len(cluster.workers)
+
+        # unshippable-graph check up front, with a better error than a
+        # deep pickle traceback: Call kernels must pickle by reference
+        # (module-level functions, autodiff's _GradFn) — closures cannot
+        # cross a process boundary
+        from .protocol import pack_msg
+
+        for name, node in graph.nodes.items():
+            if node.op == "Call":
+                try:
+                    pack_msg({"fn": node.attrs.get("fn")})
+                except Exception as e:  # noqa: BLE001 — rewrap with the node name
+                    raise ExecutorError(
+                        f"Call node {name!r} holds a Python closure that "
+                        f"cannot ship to a worker process ({e}); distributed "
+                        f"graphs must use registered primitive ops or "
+                        f"importable callables (DESIGN.md §11)") from e
+
+        task_devices: Dict[int, List[str]] = {}
+        for dev in device_nodes:
+            task_devices.setdefault(cluster.task_of_device(dev), []).append(dev)
+
+        # Variable state: force-init through the session store so every
+        # worker receives concrete values; the shipped subgraph carries
+        # init=None (workers never run initializers).
+        self.var_owner: Dict[str, int] = {}
+        self._var_containers: Dict[str, str] = {}
+        # each session gets its own VariableStore on every worker (§4.7:
+        # in-process sessions default to one ContainerManager each; two
+        # sessions sharing a pool must not share state through colliding
+        # Variable names)
+        self.namespace = getattr(session, "wire_namespace", "s")
+        for name, node in graph.nodes.items():
+            if node.op != "Variable":
+                continue
+            session._ctx().read_variable(session.graph.nodes.get(name, node))
+            self.var_owner[name] = cluster.task_of_device(parted.placement[name])
+            self._var_containers[name] = node.attrs.get("container", "")
+
+        self.payloads: Dict[int, Dict[str, Any]] = {}
+        self.feed_routing: Dict[int, set] = {}  # task -> feed keys it consumes
+        for task in range(n_tasks):
+            devs = task_devices.get(task, [])
+            local_names = set().union(*(device_nodes[d] for d in devs)) if devs else set()
+            sub = graph.subgraph(local_names)
+            # a fed tensor is read at input-gather time by every LOCAL
+            # consumer of the fed edge (§4.2 feed semantics), so ship each
+            # feed only to tasks that consume it (plus fully-fed fetches
+            # routed to this task's devices)
+            needed = {r for name in local_names
+                      for r in graph.nodes[name].inputs if r in exe.feed_keys}
+            for dev in devs:
+                needed |= {exe.fetches[i] for i in exe.fetch_by_dev.get(dev, [])
+                           if exe.fetches[i] in exe.feed_keys}
+            self.feed_routing[task] = needed
+            for name in sub.nodes:
+                if sub.nodes[name].op == "Variable":
+                    # workers never run initializers — state is seeded /
+                    # pushed as concrete values
+                    sub.nodes[name].attrs["init"] = None
+            fetches: Dict[str, List[Tuple[int, str, int]]] = {}
+            for dev in devs:
+                idxs = exe.fetch_by_dev.get(dev, [])
+                if idxs:
+                    fetches[dev] = [(i, exe.fetches[i].node, exe.fetches[i].port)
+                                    for i in idxs]
+            self.payloads[task] = {
+                "handle": self.handle,
+                "namespace": self.namespace,
+                "task": task,
+                "graph": sub,
+                "device_nodes": {d: sorted(device_nodes[d]) for d in devs},
+                "placement": {n: parted.placement[n] for n in local_names},
+                "fetches": fetches,
+                "feed_keys": [(r.node, r.port) for r in exe.feed_keys],
+                "fuse": exe.fuse_regions,
+                "numerics": exe.numerics,
+            }
+        self.master.plans.append(weakref.ref(self))
+
+    # ------------------------------------------------------------------
+    def _variable_payload(self, task: int) -> Dict[str, Tuple[str, Any]]:
+        """Current session-store values of the Variables this task owns —
+        read at registration time so recovery ships restored state."""
+        g = self.session.graph
+        out: Dict[str, Tuple[str, Any]] = {}
+        for name, owner in self.var_owner.items():
+            if owner != task:
+                continue
+            node = g.nodes[name]
+            value = self.session.variables.read(name, node.attrs)
+            out[name] = (self._var_containers[name], value)
+        return out
+
+    def ensure_registered(self) -> None:
+        self.master.check()
+        with self._reg_lock:
+            if self._registered_gen == self.master.generation:
+                return
+            cluster_wire = self.master.cluster.to_wire()
+            for task, payload in self.payloads.items():
+                try:
+                    self.master.channels[task].call(
+                        "register_graph", _timeout=60.0, cluster=cluster_wire,
+                        variables=self._variable_payload(task), **payload)
+                except WorkerError:
+                    raise
+                except Exception as e:  # noqa: BLE001 — transport = lost worker
+                    self.master.mark_dead(task, f"register_graph failed: {e}")
+                    self.master.check()
+                    raise
+            self._registered_gen = self.master.generation
+
+    # ------------------------------------------------------------------
+    def push_variables(self) -> None:
+        """Force-write the session store's values for this plan's
+        Variables into their owning workers (§3.3 recovery: registration
+        itself only *seeds* missing state, never clobbers live weights)."""
+        for task in sorted(set(self.var_owner.values())):
+            values = self._variable_payload(task)
+            if values:
+                self.master.channels[task].call(
+                    "set_variables", _timeout=30.0,
+                    namespace=self.namespace, values=values)
+
+    def run(self, feeds: Dict[TensorRef, Any], *, timeout: float = 60.0) -> List[Any]:
+        try:
+            return self._run_once(feeds, timeout=timeout)
+        except ExecutorError as e:
+            # a worker's bounded graph registry may have evicted (or a
+            # worker restarted under an unchanged endpoint): one
+            # transparent re-registration retry
+            if "is not registered here" not in str(e) or self.master.dead:
+                raise
+            with self._reg_lock:
+                self._registered_gen = None
+            return self._run_once(feeds, timeout=timeout)
+
+    def _run_once(self, feeds: Dict[TensorRef, Any], *,
+                  timeout: float = 60.0) -> List[Any]:
+        self.ensure_registered()
+        eid = f"{self._eid_prefix}:{next(self._eid_counter)}"
+        results: Dict[int, Any] = {}
+        failures: Dict[int, BaseException] = {}
+        stats: Dict[int, Dict[str, int]] = {}
+        lock = threading.Lock()
+
+        def call_one(task: int) -> None:
+            try:
+                local_feeds = {r: v for r, v in feeds.items()
+                               if r in self.feed_routing.get(task, ())}
+                rep = self.master.channels[task].call(
+                    "run_graph", _timeout=timeout + 15.0, handle=self.handle,
+                    execution_id=eid, feeds=local_feeds, timeout=timeout)
+                with lock:
+                    results.update(rep.get("results", {}))
+                    stats[task] = {k: rep.get(k, 0) for k in
+                                   ("sends", "bytes_sent", "remote_fetches")}
+            except BaseException as e:  # noqa: BLE001 — classified below
+                with lock:
+                    failures[task] = e
+
+        threads = {t: threading.Thread(target=call_one, args=(t,), daemon=True,
+                                       name=f"master-run:{t}")
+                   for t in self.payloads}
+        for t in threads.values():
+            t.start()
+        deadline = time.monotonic() + timeout + 20.0
+        try:
+            while any(t.is_alive() for t in threads.values()):
+                if self.master.dead:
+                    self.master.check()  # raises, naming the lost process/host
+                if failures:
+                    break
+                if time.monotonic() > deadline:
+                    stuck = sorted(t for t, th in threads.items() if th.is_alive())
+                    raise ExecutorError(
+                        f"graph execution {eid} timed out after {timeout:.1f}s:"
+                        f" {', '.join(self.master.identity(t) for t in stuck)} "
+                        f"never replied (§3.3 failure reporting)")
+                time.sleep(0.05)
+            if failures:
+                task, err = sorted(failures.items())[0]
+                ident = self.master.identity(task)
+                if isinstance(err, WorkerError):
+                    # worker alive; the graph execution itself failed there
+                    raise ExecutorError(
+                        f"graph execution {eid} failed on {ident}: {err}") from err
+                self.master.mark_dead(task, f"{type(err).__name__}: {err}")
+                self.master.check()
+        finally:
+            threading.Thread(target=self._cleanup, args=(eid,),
+                             daemon=True).start()
+
+        self.last_run_stats = stats  # per-task wire instrumentation
+        missing = [str(self.exe.fetches[i])
+                   for i in range(len(self.exe.fetches)) if i not in results]
+        if missing:
+            raise ExecutorError(
+                f"workers finished but fetches {missing} were never produced "
+                f"(partition/fetch routing bug; §3.3 failure reporting)")
+        return [results[i] for i in range(len(self.exe.fetches))]
+
+    def _cleanup(self, eid: str) -> None:
+        for task in self.payloads:
+            if task in self.master.dead:
+                continue
+            try:
+                self.master.channels[task].call("cleanup", _timeout=5.0,
+                                                execution_id=eid)
+            except Exception:  # noqa: BLE001 — best-effort
+                pass
+
+    # ------------------------------------------------------------------
+    def pull_variables(self) -> Dict[str, Any]:
+        """Fetch Variable state back from the pool into the session store
+        (§3.3: the master-side CheckpointManager snapshots from here)."""
+        self.master.check()
+        out: Dict[str, Any] = {}
+        by_task: Dict[int, List[str]] = {}
+        for name, task in self.var_owner.items():
+            by_task.setdefault(task, []).append(name)
+        for task, names in sorted(by_task.items()):
+            rep = self.master.channels[task].call(
+                "get_variables", _timeout=30.0,
+                namespace=self.namespace, names=names)
+            for name, value in rep["values"].items():
+                self.session.variables.write(name, value)
+                out[name] = value
+        return out

@@ -1,0 +1,282 @@
+"""Wire protocol of the multi-process distributed runtime (DESIGN.md §11).
+
+Framing is deliberately minimal: every message is a 4-byte big-endian
+length prefix followed by that many payload bytes.  A payload is a
+pickled ``dict`` with a ``"kind"`` field naming the RPC
+(``register_graph`` / ``run_graph`` / ``recv_tensor`` / ``heartbeat`` /
+``get_variables`` / ``set_variables`` / ``cleanup`` / ``shutdown``).
+
+Tensors anywhere inside a message are hoisted through an explicit binary
+codec (:func:`encode_tensor` / :func:`decode_tensor`) instead of relying
+on ndarray pickling internals: the wire layout is ``flags | dtype name |
+shape | C-order bytes``, which is deterministic and bit-faithful for
+every dtype the graph engine produces (including ``bfloat16`` via
+ml_dtypes and the §5.5 ``uint16`` compress16 wire format).  §4.4 dead
+tensors are a first-class wire concept — ``DEAD_TENSOR`` crosses a
+process boundary as a dedicated flag, never as data — so deadness
+propagates through untaken cond branches and terminating loop iterations
+exactly as it does between threads.
+
+Graphs ship as pickled :class:`~repro.core.graph.Graph` slices; any
+``Call`` node closure is rejected with a clear :class:`ProtocolError`
+(distributed graphs must be built from registered primitive ops —
+ROADMAP: wire-shippable Call via importable factories).
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import select
+import socket
+import struct
+import threading
+from collections import deque
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..runtime.rendezvous import DEAD_TENSOR, _DeadTensor
+
+MAX_FRAME = 1 << 30  # 1 GiB sanity bound per message
+
+_FLAG_DEAD = 0x01
+_FLAG_JAX = 0x02  # value was a jax.Array at the producer
+
+
+class ProtocolError(Exception):
+    """Malformed frame, oversized message, or non-wire-serializable object."""
+
+
+class WorkerError(Exception):
+    """The peer processed the request and replied with an application error
+    (the worker itself is alive — distinct from a dead-connection OSError)."""
+
+
+# ---------------------------------------------------------------------------
+# tensor codec
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        # bfloat16 / float8 etc. live in ml_dtypes, not numpy proper
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_tensor(x: Any) -> bytes:
+    """Array (numpy / jax / scalar) or DEAD_TENSOR -> deterministic bytes.
+
+    The producer's array *kind* travels with the bytes: a jax array
+    rehydrates as a jax array, a numpy array as numpy.  Execution is
+    kind-sensitive (``a @ b`` dispatches to XLA vs numpy with different
+    accumulation orders), so preserving it is part of the bit-parity
+    contract between wire and in-process runs.
+    """
+    if isinstance(x, _DeadTensor):
+        return struct.pack(">B", _FLAG_DEAD)
+    flags = 0
+    try:
+        import jax
+
+        if isinstance(x, jax.Array):
+            flags |= _FLAG_JAX
+    except ImportError:  # pragma: no cover - jax is a hard dep elsewhere
+        pass
+    arr = np.asarray(x)
+    if not arr.flags.c_contiguous:
+        # 0-d arrays are always contiguous, so this can never flatten a
+        # scalar (ascontiguousarray promotes 0-d to 1-d — a shape change)
+        arr = np.ascontiguousarray(arr)
+    dt = arr.dtype.name.encode("ascii")
+    head = struct.pack(">BB", flags, len(dt)) + dt + struct.pack(">B", arr.ndim)
+    head += b"".join(struct.pack(">Q", d) for d in arr.shape)
+    return head + arr.tobytes()
+
+
+def decode_tensor(data: bytes) -> Any:
+    """Inverse of :func:`encode_tensor` — bit-identical, a buffer copy,
+    never a cast.  Numpy-origin arrays stay numpy (jnp.asarray would
+    silently downcast 64-bit dtypes with x64 disabled); jax-origin arrays
+    come back as jax arrays so kernels see the kind the producer had."""
+    (flags,) = struct.unpack_from(">B", data, 0)
+    if flags & _FLAG_DEAD:
+        return DEAD_TENSOR
+    (dtlen,) = struct.unpack_from(">B", data, 1)
+    off = 2
+    dtype = _np_dtype(data[off:off + dtlen].decode("ascii"))
+    off += dtlen
+    (ndim,) = struct.unpack_from(">B", data, off)
+    off += 1
+    shape = struct.unpack_from(f">{ndim}Q", data, off) if ndim else ()
+    off += 8 * ndim
+    # .copy(): writable, and decoupled from the (much larger) frame buffer
+    arr = np.frombuffer(data, dtype=dtype, offset=off).reshape(shape).copy()
+    if flags & _FLAG_JAX:
+        import jax.numpy as jnp
+
+        return jnp.asarray(arr)
+    return arr
+
+
+class _WirePickler(pickle.Pickler):
+    """Pickler that routes every tensor through the explicit codec."""
+
+    def reducer_override(self, obj):  # noqa: D102 — pickle hook
+        if isinstance(obj, _DeadTensor):
+            return (_load_dead, ())
+        if isinstance(obj, (np.ndarray, np.generic)):
+            return (decode_tensor, (encode_tensor(obj),))
+        try:
+            import jax
+
+            if isinstance(obj, jax.Array):
+                return (decode_tensor, (encode_tensor(obj),))
+        except ImportError:  # pragma: no cover - jax is a hard dep elsewhere
+            pass
+        return NotImplemented
+
+
+def _load_dead() -> _DeadTensor:
+    return DEAD_TENSOR
+
+
+def pack_msg(msg: Dict[str, Any]) -> bytes:
+    buf = io.BytesIO()
+    try:
+        _WirePickler(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(msg)
+    except Exception as e:  # noqa: BLE001 — rewrap with actionable context
+        raise ProtocolError(
+            f"message {msg.get('kind')!r} contains a non-wire-serializable "
+            f"object ({e}); distributed graphs must be built from registered "
+            f"primitive ops — Call closures cannot ship (DESIGN.md §11)"
+        ) from e
+    return buf.getvalue()
+
+
+def unpack_msg(data: bytes) -> Dict[str, Any]:
+    return pickle.loads(data)
+
+
+# ---------------------------------------------------------------------------
+# framing
+
+
+def write_frame(sock: socket.socket, data: bytes) -> None:
+    if len(data) > MAX_FRAME:
+        raise ProtocolError(f"frame of {len(data)} bytes exceeds MAX_FRAME")
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def _read_exact(sock: socket.socket, n: int, *, eof_ok: bool) -> Optional[bytes]:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if eof_ok and got == 0:
+                return None
+            raise ProtocolError(f"connection closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def read_frame(sock: socket.socket) -> Optional[bytes]:
+    """One frame, or None on a clean EOF at a frame boundary."""
+    head = _read_exact(sock, 4, eof_ok=True)
+    if head is None:
+        return None
+    (n,) = struct.unpack(">I", head)
+    if n > MAX_FRAME:
+        raise ProtocolError(f"peer announced {n}-byte frame (> MAX_FRAME)")
+    return _read_exact(sock, n, eof_ok=False)
+
+
+def send_msg(sock: socket.socket, msg: Dict[str, Any]) -> None:
+    write_frame(sock, pack_msg(msg))
+
+
+def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
+    data = read_frame(sock)
+    return None if data is None else unpack_msg(data)
+
+
+# ---------------------------------------------------------------------------
+# client channel
+
+
+class Channel:
+    """Pooled request/reply client to one worker endpoint.
+
+    Each in-flight RPC owns a whole TCP connection (no multiplexing):
+    concurrent calls draw distinct connections from the idle pool or dial
+    new ones.  This is what makes concurrent ``recv_tensor`` fetches
+    deadlock-free — a blocked fetch for a late tensor can never head-of-
+    line-block the fetch whose arrival would unblock the producer.
+    """
+
+    def __init__(self, host: str, port: int, *, connect_timeout: float = 5.0) -> None:
+        self.host, self.port = host, port
+        self.connect_timeout = connect_timeout
+        self._idle: deque = deque()
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def _acquire(self) -> socket.socket:
+        while True:
+            with self._lock:
+                if self._closed:
+                    raise OSError(f"channel to {self.host}:{self.port} is closed")
+                sock = self._idle.popleft() if self._idle else None
+            if sock is None:
+                break
+            # liveness probe: a socket closed while parked (peer restarted
+            # on the same endpoint) is readable with EOF — reusing it
+            # would surface a transport error and falsely condemn the
+            # healthy restarted worker.  select(timeout=0) is cheap and,
+            # unlike retry-on-failure, can never double-execute an RPC.
+            readable, _, _ = select.select([sock], [], [], 0)
+            if not readable:
+                return sock
+            sock.close()
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.connect_timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _release(self, sock: socket.socket) -> None:
+        with self._lock:
+            if not self._closed and len(self._idle) < 8:
+                self._idle.append(sock)
+                return
+        sock.close()
+
+    def call(self, kind: str, *, _timeout: float = 60.0, **fields: Any) -> Dict[str, Any]:
+        """One RPC round trip.  Raises :class:`WorkerError` on application
+        errors (peer alive) and ``OSError``/:class:`ProtocolError` on
+        transport failures (peer presumed lost)."""
+        sock = self._acquire()
+        try:
+            sock.settimeout(_timeout)
+            send_msg(sock, {"kind": kind, **fields})
+            reply = recv_msg(sock)
+        except Exception:
+            sock.close()  # transport/encode failure: connection state unknown
+            raise
+        if reply is None:
+            sock.close()
+            raise ProtocolError(
+                f"{self.host}:{self.port} closed the connection mid-call ({kind})")
+        self._release(sock)
+        if not reply.get("ok", False):
+            raise WorkerError(reply.get("error", f"unknown {kind} failure"))
+        return reply
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            while self._idle:
+                self._idle.popleft().close()

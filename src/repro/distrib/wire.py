@@ -1,0 +1,252 @@
+"""§3.2.2 rendezvous over TCP — the distributed half of Send/Recv.
+
+``runtime/rendezvous.py`` promised that "a distributed implementation
+would swap TCP/RDMA underneath the same interface"; :class:`WireRendezvous`
+is that implementation.  It exposes the exact executor-facing surface
+(``send`` / ``ready`` / ``wait_any`` / ``recv``) so ``core/executor.py``
+— including the §4.4 frame-tagged keys and the DEAD_TENSOR wire marker
+of the distributed-control-flow machinery — runs unchanged whether the
+peer device is a thread or a process.
+
+Transport model (the paper's §3.2.2 and the TF RecvTensor RPC): ``send``
+is always local — the producing worker deposits into its own mailbox.
+The *consuming* worker pulls: the first ``ready``/``recv``/``wait_any``
+probe for a remote key starts an async fetcher thread that issues a
+``recv_tensor`` RPC to the producing worker and deposits the reply into
+the local mailbox, so the executor's Recv-deferral logic (defer while
+other work is runnable, then ``wait_any``) behaves identically to the
+in-process case.  Keys are namespaced by execution id so concurrent runs
+of the same registered graph never mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..runtime.devices import Device, DeviceName, DeviceSet
+from ..runtime.rendezvous import Rendezvous
+from .protocol import Channel
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Topology of a worker pool: one ``host:port`` endpoint per task.
+
+    Task ``t`` serves the virtual devices
+    ``/job:worker/task:t/device:<kind>:<i>`` for ``i < devices_per_task``,
+    so the §3.2.1 placer's device names map 1:1 onto owning processes.
+    """
+
+    workers: Tuple[str, ...]
+    devices_per_task: int = 1
+    kind: str = "cpu"
+
+    @staticmethod
+    def parse(spec: "ClusterSpec | str | Sequence[str]",
+              devices_per_task: int = 1, kind: str = "cpu") -> "ClusterSpec":
+        if isinstance(spec, ClusterSpec):
+            return spec
+        if isinstance(spec, str):
+            workers = tuple(s.strip() for s in spec.split(",") if s.strip())
+        else:
+            workers = tuple(spec)
+        if not workers:
+            raise ValueError(f"empty cluster spec {spec!r}")
+        for w in workers:
+            host, _, port = w.rpartition(":")
+            if not host or not port.isdigit():
+                raise ValueError(f"bad cluster endpoint {w!r} (want host:port)")
+        return ClusterSpec(workers, devices_per_task, kind)
+
+    def device_set(self) -> DeviceSet:
+        return DeviceSet([
+            Device(DeviceName(job="worker", task=t, kind=self.kind, index=i))
+            for t in range(len(self.workers))
+            for i in range(self.devices_per_task)
+        ])
+
+    def task_of_device(self, device_name: str) -> int:
+        task = DeviceName.parse(device_name).task
+        if task >= len(self.workers):
+            raise ValueError(
+                f"device {device_name!r} names task {task} but the cluster "
+                f"has only {len(self.workers)} workers")
+        return task
+
+    def host_port(self, task: int) -> Tuple[str, int]:
+        host, _, port = self.workers[task].rpartition(":")
+        return host, int(port)
+
+    def fingerprint(self) -> Tuple[str, ...]:
+        """Part of the RunSignature device fingerprint: re-pointing a
+        Session at a different pool must rebuild, never reuse, cached
+        Executables (their WirePlans hold worker registrations)."""
+        return ("cluster",) + self.workers
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"workers": list(self.workers),
+                "devices_per_task": self.devices_per_task, "kind": self.kind}
+
+    @staticmethod
+    def from_wire(d: Dict[str, Any]) -> "ClusterSpec":
+        return ClusterSpec(tuple(d["workers"]), d["devices_per_task"], d["kind"])
+
+
+class _FetchError:
+    """Poison value a failed remote fetch deposits under the awaited key so
+    the blocked executor raises instead of timing out blind."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: str) -> None:
+        self.error = error
+
+
+class WireRendezvous:
+    """The ``runtime/rendezvous.py`` interface over sockets (DESIGN.md §11).
+
+    Wraps the worker's process-wide mailbox (a plain :class:`Rendezvous`)
+    with (a) per-execution key namespacing and (b) pull-based remote
+    fetches.  One instance exists per (worker, execution); the underlying
+    mailbox is shared so the worker's ``recv_tensor`` server can serve
+    peers directly from it.
+    """
+
+    _POLL = 0.25  # abort-check granularity while blocked
+
+    def __init__(self, mailbox: Rendezvous, cluster: ClusterSpec,
+                 local_task: int, execution_id: str, *,
+                 timeout: float = 30.0,
+                 channel_of: Optional[Callable[[int], Channel]] = None) -> None:
+        self._mb = mailbox
+        self._cluster = cluster
+        self._task = local_task
+        self._eid = execution_id
+        self.timeout = timeout
+        self._channel_of = channel_of
+        self._fetching: set = set()
+        self._lock = threading.Lock()
+        self._abort: Optional[BaseException] = None
+        self._closed = False
+        self.sends = 0  # instrumentation (mirrors Rendezvous)
+        self.bytes_sent = 0
+        self.remote_fetches = 0
+
+    # -- key plumbing ---------------------------------------------------
+    def _ns(self, key: str) -> str:
+        return f"{self._eid}|{key}"
+
+    def _owner(self, key: str) -> int:
+        # rendezvous keys are "src_device;dst_device;tensor;execution" and
+        # the executor's frame tag only ever appends "#...", so the source
+        # device is always the first ';' field
+        return self._cluster.task_of_device(key.split(";", 1)[0])
+
+    def _is_remote(self, key: str) -> bool:
+        return self._owner(key) != self._task
+
+    # -- interface ------------------------------------------------------
+    def abort(self, exc: BaseException) -> None:
+        """§3.3: poison this execution — blocked recv/wait_any raise."""
+        self._abort = exc
+
+    def close(self) -> None:
+        """End-of-execution: straggler fetchers must drop their deposits
+        (the mailbox outlives this view; see worker run_graph cleanup)."""
+        self._closed = True
+
+    def send(self, key: str, value: Any) -> None:
+        # Send is always local: the §3.2.2 partitioner places a Send on
+        # the producing device, so only this worker's executors call it.
+        self._mb.send(self._ns(key), value)
+        self.sends += 1
+        try:
+            self.bytes_sent += value.nbytes
+        except AttributeError:
+            pass
+
+    def ready(self, key: str) -> bool:
+        nk = self._ns(key)
+        if self._mb.ready(nk):
+            return True
+        if self._is_remote(key):
+            self._ensure_fetch(key)
+            return self._mb.ready(nk)
+        return False
+
+    def wait_any(self, keys: Iterable[str], timeout: Optional[float] = None) -> str:
+        keys = list(keys)
+        for k in keys:
+            if self._is_remote(k):
+                self._ensure_fetch(k)
+        ns_of = {self._ns(k): k for k in keys}
+        deadline = time.monotonic() + (self.timeout if timeout is None else timeout)
+        while True:
+            if self._abort is not None:
+                raise self._abort
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"recv timed out waiting for any of {keys!r} "
+                    f"(task:{self._task}, execution {self._eid})")
+            try:
+                got = self._mb.wait_any(list(ns_of),
+                                        timeout=min(self._POLL, remaining))
+            except TimeoutError:
+                continue
+            return ns_of[got]
+
+    def recv(self, key: str) -> Any:
+        if self._is_remote(key):
+            self._ensure_fetch(key)
+        nk = self._ns(key)
+        deadline = time.monotonic() + self.timeout
+        while True:
+            if self._abort is not None:
+                raise self._abort
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"recv timed out waiting for {key!r} "
+                    f"(task:{self._task}, execution {self._eid})")
+            try:
+                v = self._mb.recv(nk, timeout=min(self._POLL, remaining))
+            except TimeoutError:
+                continue
+            if isinstance(v, _FetchError):
+                raise RuntimeError(v.error)
+            return v
+
+    # -- remote pull ----------------------------------------------------
+    def _ensure_fetch(self, key: str) -> None:
+        with self._lock:
+            if key in self._fetching:
+                return
+            self._fetching.add(key)
+        t = threading.Thread(target=self._fetch, args=(key,), daemon=True,
+                             name=f"wire-fetch:{key[:40]}")
+        t.start()
+
+    def _fetch(self, key: str) -> None:
+        owner = self._owner(key)
+        nk = self._ns(key)
+        try:
+            if self._channel_of is None:
+                raise RuntimeError("no peer channels configured")
+            rep = self._channel_of(owner).call(
+                "recv_tensor", key=nk, wait=self.timeout,
+                _timeout=self.timeout + 10.0)
+            value = rep["value"]
+            self.remote_fetches += 1
+        except BaseException as e:  # noqa: BLE001 — poison, never hang
+            value = _FetchError(
+                f"fetching {key!r} from worker task:{owner} "
+                f"({self._cluster.workers[owner]}): {type(e).__name__}: {e}")
+        if self._closed:
+            return  # execution already over; don't leak into the mailbox
+        try:
+            self._mb.send(nk, value)
+        except RuntimeError:
+            pass  # duplicate deposit after an abort/cleanup race — drop

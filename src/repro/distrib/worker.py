@@ -1,0 +1,462 @@
+"""§3.3 worker process: serves per-device subgraphs over the wire protocol.
+
+A Worker owns the runtime state of its slice of the cluster — a
+process-wide rendezvous mailbox, a VariableStore, queues and checkpoint
+IO — and serves the DESIGN.md §11 RPCs:
+
+* ``register_graph`` — receive a partitioned per-task subgraph from the
+  master, seed Variable state, optionally run §7 region fusion on each
+  local device subgraph (strict fusion is bit-identical, so wire runs
+  keep the compiled-super-node speedups), and build one reusable
+  :class:`~repro.core.executor.Executor` per local device.
+* ``run_graph`` — execute one registered graph under an execution id:
+  one thread per local device, all coordinating through a
+  :class:`~repro.distrib.wire.WireRendezvous` view of the mailbox.
+* ``recv_tensor`` — the pull half of a cross-process Send/Recv pair:
+  block until the local mailbox holds the (execution-namespaced) key,
+  pop it and reply.  DEAD_TENSOR replies carry §4.4 deadness across the
+  process boundary.
+* ``heartbeat`` / ``get_variables`` / ``set_variables`` / ``cleanup`` /
+  ``shutdown`` — liveness, checkpoint sync and lifecycle.
+
+CLI (one process per task)::
+
+    python -m repro.distrib.worker --host 127.0.0.1 --port 7077 --task 0
+
+``--port 0`` picks a free port; the worker announces
+``WORKER_READY host:port task=N pid=P`` on stdout either way, which is
+what :func:`start_worker_processes` parses.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import select
+import socket
+import subprocess
+import sys
+import threading
+import time
+import traceback
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.executor import ExecutionContext, Executor
+from ..core.graph import Graph, TensorRef
+from ..core import fusion as fusion_mod
+from ..runtime.containers import ContainerManager, VariableStore
+from ..runtime.rendezvous import Rendezvous
+from .protocol import Channel, recv_msg, send_msg
+from .wire import ClusterSpec, WireRendezvous
+
+
+@dataclasses.dataclass
+class _Registered:
+    """One graph the master registered with this worker."""
+
+    graph: Graph
+    executors: Dict[str, Executor]                 # local device -> Executor
+    fetch_specs: Dict[str, List[Tuple[int, TensorRef]]]  # dev -> (global idx, ref)
+    fetch_remap: Dict[TensorRef, TensorRef]
+    cluster: ClusterSpec
+    task: int
+    namespace: str  # owning session's store namespace (§4.7)
+
+
+class Worker:
+    """One OS process serving one cluster task's devices (DESIGN.md §11)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, task: int = 0, *,
+                 rendezvous_timeout: float = 30.0,
+                 checkpoint_root: Optional[str] = None) -> None:
+        self.host, self.port, self.task = host, port, task
+        self.mailbox = Rendezvous(timeout=rendezvous_timeout)
+        # one VariableStore per *session* namespace, mirroring the
+        # in-process default of one ContainerManager per Session (§4.7):
+        # sessions sharing this pool never alias each other's Variables
+        # (VariableStore.write resolves names across its containers)
+        self._stores: Dict[str, VariableStore] = {}
+        self._var_containers: Dict[str, Dict[str, str]] = {}
+        self.queues: Dict[str, Any] = {}
+        if checkpoint_root:
+            from ..checkpoint import FileCheckpointIO
+
+            self.checkpoint_io: Any = FileCheckpointIO(checkpoint_root)
+        else:
+            from ..core.session import _DictCheckpointIO
+
+            self.checkpoint_io = _DictCheckpointIO()
+        self._graphs: "OrderedDict[str, _Registered]" = OrderedDict()
+        self.max_graphs = 32  # LRU bound on registered graphs
+        self._active: Dict[str, WireRendezvous] = {}
+        # keyed by ENDPOINT, not task id: after a partial pool restart
+        # (dead task re-spawned on a new port) the re-registered cluster
+        # spec must dial the new endpoint, never a stale cached channel
+        self._peers: Dict[Tuple[str, int], Channel] = {}
+        self._peers_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._sock: Optional[socket.socket] = None
+        self._started = time.monotonic()
+
+    # ------------------------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self.host, self.port))
+        sock.listen(64)
+        self.port = sock.getsockname()[1]
+        self._sock = sock
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name=f"worker{self.task}-accept").start()
+        return self.host, self.port
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.mailbox.abort(RuntimeError(
+            f"worker task:{self.task} (pid {os.getpid()}) shut down"))
+        for rdv in list(self._active.values()):
+            rdv.abort(RuntimeError(f"worker task:{self.task} shutting down"))
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        with self._peers_lock:
+            for ch in self._peers.values():
+                ch.close()
+            self._peers.clear()
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # ------------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listener closed
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True,
+                             name=f"worker{self.task}-conn").start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                msg = recv_msg(conn)
+                if msg is None:
+                    return
+                kind = msg.pop("kind", "?")
+                handler = getattr(self, f"_rpc_{kind}", None)
+                if handler is None:
+                    reply: Dict[str, Any] = {"ok": False,
+                                             "error": f"unknown RPC {kind!r}"}
+                else:
+                    try:
+                        reply = handler(msg)
+                        reply.setdefault("ok", True)
+                    except Exception as e:  # noqa: BLE001 — report, don't die
+                        reply = {"ok": False,
+                                 "error": f"worker task:{self.task} "
+                                          f"(pid {os.getpid()}) {kind} failed: "
+                                          f"{type(e).__name__}: {e}\n"
+                                          f"{traceback.format_exc(limit=8)}"}
+                send_msg(conn, reply)
+                if kind == "shutdown":
+                    self.stop()
+                    return
+        except Exception:  # noqa: BLE001 — connection-level failure
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def store(self, namespace: str) -> VariableStore:
+        st = self._stores.get(namespace)
+        if st is None:
+            st = self._stores[namespace] = VariableStore(ContainerManager())
+            self._var_containers[namespace] = {}
+        return st
+
+    def _peer_channel(self, cluster: ClusterSpec, task: int) -> Channel:
+        endpoint = cluster.host_port(task)
+        with self._peers_lock:
+            ch = self._peers.get(endpoint)
+            if ch is None:
+                ch = Channel(*endpoint)
+                self._peers[endpoint] = ch
+            return ch
+
+    # ------------------------------------------------------------------
+    # RPC handlers
+    def _rpc_register_graph(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        cluster = ClusterSpec.from_wire(p["cluster"])
+        g: Graph = p["graph"]
+        device_nodes = {d: set(ns) for d, ns in p["device_nodes"].items()}
+        names = set().union(*device_nodes.values()) if device_nodes else set()
+        placement = dict(p["placement"])
+        feed_keys = frozenset(TensorRef(n, pt) for n, pt in p["feed_keys"])
+        fetch_specs = {d: [(i, TensorRef(n, pt)) for i, n, pt in lst]
+                       for d, lst in p["fetches"].items()}
+        ns = p.get("namespace", "s")
+        store = self.store(ns)
+        for vname, (container, value) in p["variables"].items():
+            cont = store.manager.get(container)
+            if not cont.has(vname):
+                # SEED-only: registration must never clobber live state —
+                # a second Executable on the same session registers here
+                # mid-training, when this store (not the master's) holds
+                # the trained weights.  Recovery pushes explicitly via
+                # set_variables (Session.rebind_cluster).
+                cont.write(vname, value)
+            self._var_containers[ns][vname] = container
+
+        fetch_remap: Dict[TensorRef, TensorRef] = {}
+        if p.get("fuse", True) and names:
+            # §7 region fusion on the local slice: placement keeps regions
+            # per-device, Send/Recv nodes are runtime ops and never join a
+            # region, so the fused graph is safe to interleave with wire
+            # transfers.  Strict numerics stays bit-identical (§9).
+            all_fetch_refs = [r for lst in fetch_specs.values() for _, r in lst]
+            fus = fusion_mod.try_fuse(
+                g, set(names), placement=placement, feeds=feed_keys,
+                fetch_refs=all_fetch_refs,
+                written_vars=fusion_mod.written_variables(g, names),
+                numerics=p.get("numerics", "strict"))
+            if fus is not None and (fus.regions or fus.changed):
+                g = fus.graph
+                fetch_remap = fus.fetch_map
+                device_nodes = {}
+                for n in fus.names:
+                    device_nodes.setdefault(fus.placement[n], set()).add(n)
+        executors = {dev: Executor(g, node_filter=ns, device_label=dev)
+                     for dev, ns in device_nodes.items()}
+        self._graphs[p["handle"]] = _Registered(
+            graph=g, executors=executors, fetch_specs=fetch_specs,
+            fetch_remap=fetch_remap, cluster=cluster, task=p["task"],
+            namespace=ns)
+        self._graphs.move_to_end(p["handle"])
+        while len(self._graphs) > self.max_graphs:
+            # bounded registry: masters whose signature churn outlives
+            # this cap get a "not registered" reply and transparently
+            # re-register (master.WirePlan.run)
+            self._graphs.popitem(last=False)
+        return {"devices": sorted(executors), "n_nodes": len(g.nodes)}
+
+    def _rpc_run_graph(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        reg = self._graphs.get(p["handle"])
+        if reg is None:
+            raise KeyError(f"graph {p['handle']!r} is not registered here "
+                           f"(worker restarted or registry evicted? "
+                           f"re-register before running)")
+        self._graphs.move_to_end(p["handle"])
+        eid: str = p["execution_id"]
+        timeout: float = float(p.get("timeout", 60.0))
+        feeds: Dict[TensorRef, Any] = p.get("feeds") or {}
+        wire = WireRendezvous(
+            self.mailbox, reg.cluster, reg.task, eid, timeout=timeout,
+            channel_of=lambda t: self._peer_channel(reg.cluster, t))
+        self._active[eid] = wire
+        results: Dict[int, Any] = {}
+        errors: List[BaseException] = []
+        lock = threading.Lock()
+
+        store = self.store(reg.namespace)
+
+        def run_device(dev: str, ex: Executor) -> None:
+            ctx = ExecutionContext(
+                variables=store, rendezvous=wire, queues=self.queues,
+                checkpoint_io=self.checkpoint_io,
+                device_kind=dev.split("device:")[-1].split(":")[0])
+            specs = reg.fetch_specs.get(dev, [])
+            local = [reg.fetch_remap.get(r, r) for _, r in specs]
+            try:
+                vals = ex.run(local, feeds, ctx=ctx)
+                with lock:
+                    for (i, _), v in zip(specs, vals):
+                        results[i] = v
+            except BaseException as e:  # noqa: BLE001 — §3.3 surface any failure
+                with lock:
+                    errors.append(e)
+
+        threads = {dev: threading.Thread(target=run_device, args=(dev, ex),
+                                         daemon=True,
+                                         name=f"worker{reg.task}:{dev}")
+                   for dev, ex in reg.executors.items()}
+        try:
+            for t in threads.values():
+                t.start()
+            deadline = time.monotonic() + timeout
+            for t in threads.values():
+                t.join(timeout=max(0.0, deadline - time.monotonic()))
+            if errors:
+                raise errors[0]
+            stuck = sorted(dev for dev, t in threads.items() if t.is_alive())
+            if stuck:
+                wire.abort(RuntimeError(f"execution {eid} timed out"))
+                raise TimeoutError(
+                    f"worker task:{reg.task} (pid {os.getpid()}): device(s) "
+                    f"{stuck} never finished within {timeout:.1f}s (stuck "
+                    f"Send/Recv or hung kernel; §3.3 failure reporting)")
+            return {"results": results, "sends": wire.sends,
+                    "bytes_sent": wire.bytes_sent,
+                    "remote_fetches": wire.remote_fetches}
+        finally:
+            # stop straggler fetcher threads (blocked in recv_tensor RPCs
+            # for up to their timeout) from depositing into the mailbox
+            # after the master's cleanup purge has run — a late deposit
+            # would leak for the worker's lifetime
+            wire.close()
+            self._active.pop(eid, None)
+
+    def _rpc_recv_tensor(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        wait = float(p.get("wait", self.mailbox.timeout))
+        value = self.mailbox.recv(p["key"], timeout=wait)
+        return {"value": value}
+
+    def _rpc_heartbeat(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        return {"task": self.task, "pid": os.getpid(),
+                "active": len(self._active),
+                "uptime_s": time.monotonic() - self._started,
+                "registered": len(self._graphs)}
+
+    def _rpc_get_variables(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        ns = p.get("namespace", "s")
+        store = self.store(ns)
+        names = p.get("names")
+        out: Dict[str, Any] = {}
+        for vname, container in self._var_containers.get(ns, {}).items():
+            if names is not None and vname not in names:
+                continue
+            cont = store.manager.get(container)
+            if cont.has(vname):
+                out[vname] = cont.read(vname)
+        return {"values": out}
+
+    def _rpc_set_variables(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        ns = p.get("namespace", "s")
+        store = self.store(ns)
+        for vname, (container, value) in p["values"].items():
+            store.manager.get(container).write(vname, value)
+            self._var_containers[ns].setdefault(vname, container)
+        return {"n": len(p["values"])}
+
+    def _rpc_cleanup(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        purged = self.mailbox.purge_prefix(f"{p['execution_id']}|")
+        return {"purged": purged}
+
+    def _rpc_shutdown(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        return {"task": self.task}  # _serve_conn stops after replying
+
+
+# ---------------------------------------------------------------------------
+# process helpers (tests, examples, CI smoke)
+
+
+def start_worker_processes(
+    n: int, *, host: str = "127.0.0.1", timeout: float = 120.0,
+    rendezvous_timeout: float = 30.0,
+) -> Tuple[List[subprocess.Popen], ClusterSpec]:
+    """Spawn ``n`` worker processes on free ports; returns (procs, spec).
+
+    Blocks until every worker announced ``WORKER_READY`` (imports of
+    jax dominate startup).  Callers own the processes — pair with
+    :func:`stop_worker_processes`.
+    """
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    procs: List[subprocess.Popen] = []
+    addrs: List[str] = []
+    try:
+        for t in range(n):
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.distrib.worker",
+                 "--host", host, "--port", "0", "--task", str(t),
+                 "--rendezvous-timeout", str(rendezvous_timeout)],
+                stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+                text=True, env=env))
+        deadline = time.monotonic() + timeout
+        for t, proc in enumerate(procs):
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"worker task:{t} never became ready")
+                # select before readline: a worker that hangs silently
+                # (wedged import, deadlock) must trip the deadline, not
+                # block this call forever on an empty pipe
+                rl, _, _ = select.select([proc.stdout], [], [],
+                                         min(remaining, 1.0))
+                if not rl:
+                    continue
+                line = proc.stdout.readline()
+                if not line:
+                    raise RuntimeError(
+                        f"worker task:{t} exited (rc={proc.poll()}) before ready")
+                if line.startswith("WORKER_READY "):
+                    addrs.append(line.split()[1])
+                    break
+            # keep draining stdout so the pipe can never fill and block
+            threading.Thread(target=lambda s=proc.stdout: s.read(),
+                             daemon=True).start()
+    except BaseException:
+        stop_worker_processes(procs)
+        raise
+    return procs, ClusterSpec(tuple(addrs))
+
+
+def stop_worker_processes(procs: Sequence[subprocess.Popen],
+                          spec: Optional[ClusterSpec] = None) -> None:
+    """Best-effort graceful shutdown, then terminate/kill."""
+    if spec is not None:
+        for t in range(len(spec.workers)):
+            try:
+                ch = Channel(*spec.host_port(t), connect_timeout=1.0)
+                ch.call("shutdown", _timeout=2.0)
+                ch.close()
+            except Exception:  # noqa: BLE001 — already gone is fine
+                pass
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    for p in procs:
+        try:
+            p.wait(timeout=5.0)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            p.wait(timeout=5.0)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks a free port (announced on stdout)")
+    ap.add_argument("--task", type=int, default=0)
+    ap.add_argument("--rendezvous-timeout", type=float, default=30.0)
+    ap.add_argument("--ckpt-root", default=None,
+                    help="directory for worker-local Save/Restore nodes")
+    args = ap.parse_args(argv)
+    w = Worker(args.host, args.port, args.task,
+               rendezvous_timeout=args.rendezvous_timeout,
+               checkpoint_root=args.ckpt_root)
+    host, port = w.start()
+    print(f"WORKER_READY {host}:{port} task={args.task} pid={os.getpid()}",
+          flush=True)
+    try:
+        while not w._stop.wait(0.5):
+            pass
+    except KeyboardInterrupt:
+        w.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

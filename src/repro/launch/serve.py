@@ -101,6 +101,51 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
     return res
 
 
+def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
+                  seed: int = 0, log_every: int = 25) -> Dict[str, Any]:
+    """DESIGN.md §11 distributed scoring loop over a TCP worker pool.
+
+    Serves the wire-shippable primitive-op MLP's logits: the forward
+    graph is partitioned across the ``--cluster`` workers once
+    (RegisterGraph), then every request re-runs the cached Executable —
+    one RunGraph fan-out with the hidden activations crossing processes
+    through the wire rendezvous.  The steady state is the paper's
+    serving shape (§3.2 "caches these graphs"), process boundaries
+    included; the Call-based LM decode stays single-process for now.
+    """
+    from ..core import Session
+    from ..distrib.wire import ClusterSpec
+    from .steps import build_wire_train_step
+
+    spec = ClusterSpec.parse(cluster)
+    tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
+    ws = build_wire_train_step(tasks, seed=seed)
+    sess = Session(ws.builder.graph, cluster=spec)
+    # fetching only the logits prunes the whole loss/grad/update subgraph
+    # (§4.2), so the shipped graph is the pure forward pass
+    run = sess.make_callable([ws.logits], [ws.feed_x])
+    rs = np.random.RandomState(seed)
+    t0 = time.time()
+    last = None
+    try:
+        for r in range(requests):
+            x = jnp.asarray(rs.randn(batch, 16).astype("f"))
+            (last,) = run(x)
+            if (r + 1) % log_every == 0:
+                rate = (r + 1) / (time.time() - t0)
+                print(f"[serve] request {r+1:4d} "
+                      f"({rate:.1f} req/s over the wire)")
+    finally:
+        stats = sess.cache_stats
+        sess.close()
+    total = time.time() - t0
+    rate = requests / total if total > 0 else float("inf")
+    print(f"[serve] cluster={','.join(spec.workers)} batch={batch} "
+          f"requests={requests} ({rate:.1f} req/s, cache {stats})")
+    return {"requests_per_s": rate, "executable_cache": stats,
+            "last_logits_shape": tuple(np.asarray(last).shape)}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -115,7 +160,15 @@ def main(argv=None) -> int:
                     help="graph-engine fused-region numerics (DESIGN.md §9): "
                          "fast (default) fuses the decode step at full XLA "
                          "optimization; strict restores bit-parity")
+    ap.add_argument("--cluster", default=None, metavar="HOST:PORT,...",
+                    help="serve the wire-shippable scoring graph across this "
+                         "worker pool (DESIGN.md §11)")
+    ap.add_argument("--requests", type=int, default=100,
+                    help="number of scoring requests in --cluster mode")
     args = ap.parse_args(argv)
+    if args.cluster:
+        serve_cluster(args.cluster, batch=args.batch, requests=args.requests)
+        return 0
     res = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, engine=args.engine,
                 numerics=args.numerics)

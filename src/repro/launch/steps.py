@@ -496,6 +496,65 @@ def build_eager_serve_step(cfg: ModelConfig,
                            graph_nodes=len(b.graph.nodes))
 
 
+@dataclasses.dataclass
+class WireStepBundle:
+    """A train/score step whose graph can ship to a §11 worker pool.
+
+    Every node is a registered primitive op (MatMul/ReLU/SoftmaxXent/
+    Assign/...), so the graph pickles onto the wire — unlike the
+    Call-based LM steps, whose Python closures cannot cross a process
+    boundary (ROADMAP: wire-shippable Call via importable factories).
+    """
+
+    builder: Any                     # GraphBuilder owning the graph
+    loss: Any                        # TensorRef: scalar mean xent
+    logits: Any                      # TensorRef: pre-softmax scores
+    train_op: Any                    # TensorRef: grouped Assign updates
+    feed_x: Any                      # TensorRef: [batch, n_features] float32
+    feed_y: Any                      # TensorRef: [batch] int labels
+    var_names: Tuple[str, ...]
+
+
+def build_wire_train_step(tasks: Sequence[str], *, n_features: int = 16,
+                          n_hidden: int = 32, n_classes: int = 8,
+                          lr: float = 0.1, seed: int = 0) -> WireStepBundle:
+    """Primitive-op MLP softmax classifier, device-tagged across ``tasks``.
+
+    The forward pass alternates devices (x@W1+ReLU on the first task, the
+    logits matmul on the last), so every step exercises cross-task
+    Send/Recv in both directions; §4.1 ``gradients()`` extends the graph
+    with the backward pass and SGD updates land in Assign nodes that the
+    §3.2.1 placer colocates with their Variables — which is what keeps
+    each worker's variable store authoritative for the state it owns.
+    """
+    import numpy as np
+
+    from ..core import GraphBuilder, gradients
+
+    rs = np.random.RandomState(seed)
+    b = GraphBuilder()
+    d0, d1 = tasks[0], tasks[-1]
+    x = b.placeholder("x")
+    y = b.placeholder("y")
+    w1 = b.variable("w1", jnp.asarray(
+        rs.randn(n_features, n_hidden).astype("f") * 0.2), device=d0)
+    w2 = b.variable("w2", jnp.asarray(
+        rs.randn(n_hidden, n_classes).astype("f") * 0.2), device=d1)
+    h = b.relu(b.matmul(x, w1, name="mm1", device=d0), name="h", device=d0)
+    logits = b.matmul(h, w2, name="logits", device=d1)
+    loss = b.softmax_xent(logits, y, name="loss")
+    g1, g2 = gradients(b.graph, [loss], [w1, w2])
+    lrc = b.constant(jnp.float32(lr), name="lr")
+    a1 = b.assign(w1, b.sub(w1, b.mul(lrc, g1, name="upd1/scaled"),
+                            name="upd1/new"))
+    a2 = b.assign(w2, b.sub(w2, b.mul(lrc, g2, name="upd2/scaled"),
+                            name="upd2/new"))
+    train_op = b.group([a1, a2], name="train_op")
+    return WireStepBundle(builder=b, loss=loss.ref, logits=logits.ref,
+                          train_op=train_op.ref, feed_x=x.ref, feed_y=y.ref,
+                          var_names=("w1", "w2"))
+
+
 def build_step(cfg: ModelConfig, shape_name: str, mesh=None, rules=None, **kw
                ) -> StepBundle:
     shape = SHAPES[shape_name]

@@ -136,6 +136,120 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
     return out
 
 
+def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
+                  lr: float = 0.1, ckpt_dir: Optional[str] = None,
+                  ckpt_every: int = 10, log_every: int = 10, seed: int = 0,
+                  max_recoveries: int = 3, retry_wait: float = 3.0,
+                  run_timeout: float = 60.0) -> Dict[str, Any]:
+    """§3.3/DESIGN.md §11 multi-process training over a TCP worker pool.
+
+    Drives the wire-shippable primitive-op classifier step
+    (``launch/steps.build_wire_train_step``) across ``--cluster
+    host:port,...`` workers: place/partition once, RegisterGraph each
+    subgraph to its owning process, then one RunGraph fan-out per step
+    with Send/Recv riding the wire rendezvous.  Worker death (heartbeat
+    timeout or transport error) aborts the step; with a checkpoint dir
+    the loop waits for the pool to come back, restores the last Save into
+    the session (re-registration ships it) and resumes — killing and
+    restarting workers mid-run loses at most ``ckpt_every`` steps.
+
+    The LM Call-based steps stay single-process for now: their loss
+    closures cannot ship (ROADMAP: wire-shippable Call factories).
+    """
+    from ..core import Session
+    from ..core.executor import ExecutorError
+    from ..distrib.wire import ClusterSpec
+    from .steps import build_wire_train_step
+
+    spec = ClusterSpec.parse(cluster)
+    tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
+    ws = build_wire_train_step(tasks, lr=lr, seed=seed)
+    sess = Session(ws.builder.graph, cluster=spec)
+    run = sess.make_callable([ws.loss, ws.train_op], [ws.feed_x, ws.feed_y])
+    print(f"[train] cluster={','.join(spec.workers)} tasks={len(tasks)} "
+          f"graph_nodes={len(ws.builder.graph.nodes)} (wire step)")
+
+    mgr = None
+    start_step = 0
+    if ckpt_dir:
+        mgr = CheckpointManager(FileCheckpointIO(ckpt_dir), prefix="wire",
+                                every_steps=ckpt_every)
+        if mgr.latest_step() is not None:
+            for name, value in mgr.restore_latest().items():
+                sess.set_variable(name, value)
+            start_step = int(mgr.latest_step())
+            print(f"[train] resumed from step {start_step} (§3.3 recovery)")
+
+    def step_batch(i: int):
+        rs = np.random.RandomState(seed * 100003 + i)  # replayable per step
+        return (jnp.asarray(rs.randn(batch, 16).astype("f")),
+                jnp.asarray(rs.randint(0, 8, (batch,)).astype("i")))
+
+    from ..distrib.protocol import WorkerError
+
+    losses = []
+    recoveries = 0
+    i = start_step
+    t0 = time.time()
+    try:
+        while i < steps:
+            x, y = step_batch(i)
+            try:
+                loss, _ = run(x, y)
+                losses.append(float(loss))
+                i += 1
+                if mgr and mgr.should_save(i):
+                    # the checkpoint pull is inside the recovery scope
+                    # too: a worker lost between the step and the save
+                    # must trigger recovery, not abort training
+                    mgr.save(i, sess.pull_cluster_variables())
+                if i % log_every == 0:
+                    rate = (i - start_step) / max(time.time() - t0, 1e-9)
+                    print(f"[train] step {i:5d} loss {losses[-1]:.4f} "
+                          f"({rate:.1f} steps/s over the wire)")
+            except (ExecutorError, WorkerError, OSError) as e:
+                if recoveries >= max_recoveries:
+                    raise
+                recoveries += 1
+                print(f"[train] §3.3 worker-pool failure: {e}\n"
+                      f"[train] recovery {recoveries}/{max_recoveries}: "
+                      f"waiting {retry_wait:.0f}s for the pool, restoring "
+                      f"last checkpoint")
+                time.sleep(retry_wait)
+                if mgr and mgr.latest_step() is not None:
+                    for name, value in mgr.restore_latest().items():
+                        sess.set_variable(name, value)
+                    i = int(mgr.latest_step())
+                else:
+                    # no checkpoint yet: try to salvage live state (the
+                    # pool may be up with the failure transient);
+                    # otherwise the rebind push would overwrite trained
+                    # worker weights with the session store's step-0
+                    # values, so training must honestly restart at step 0
+                    try:
+                        salvaged = sess.pull_cluster_variables()
+                    except Exception:  # noqa: BLE001 — workers really gone
+                        salvaged = {}
+                    if not salvaged:
+                        print("[train] no checkpoint and worker state "
+                              "lost: restarting training from step 0 "
+                              "(§3.3 — pass --ckpt-dir to bound the loss)")
+                        i = 0
+                try:
+                    sess.rebind_cluster()  # reconnect + push restored state
+                except Exception as re_err:  # noqa: BLE001 — pool still down
+                    print(f"[train] pool still unavailable: {re_err}")
+                    # a fresh pool re-seeds from the (restored) session
+                    # store at registration, so the next attempt is correct
+        if mgr:
+            mgr.save(steps, sess.pull_cluster_variables())
+    finally:
+        sess.close()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "recoveries": recoveries,
+            "executable_cache": sess.cache_stats}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -156,12 +270,22 @@ def main(argv=None) -> int:
                          "optimization under the CI-enforced tolerance "
                          "contract; strict restores fused==unfused "
                          "bit-parity")
+    ap.add_argument("--cluster", default=None, metavar="HOST:PORT,...",
+                    help="run the wire-shippable train step across this "
+                         "worker pool (one `python -m repro.distrib.worker` "
+                         "process per endpoint; DESIGN.md §11) with §3.3 "
+                         "checkpointed recovery")
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
-    res = train(args.arch, smoke=args.smoke, steps=args.steps,
-                batch=args.batch, seq=args.seq, lr=args.lr,
-                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                engine=args.engine, numerics=args.numerics)
+    if args.cluster:
+        res = train_cluster(args.cluster, steps=args.steps, batch=args.batch,
+                            lr=args.lr, ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every)
+    else:
+        res = train(args.arch, smoke=args.smoke, steps=args.steps,
+                    batch=args.batch, seq=args.seq, lr=args.lr,
+                    ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                    engine=args.engine, numerics=args.numerics)
     print(f"[train] done: final loss {res['final_loss']:.4f}")
     return 0
 

@@ -4,10 +4,11 @@ Send and Receive coordinate through a keyed rendezvous so that all
 communication is isolated inside the Send/Recv implementations.  Keys are
 ``(tensor_ref, src_device, dst_device, execution_id)`` strings; the
 canonicalisation pass guarantees one transfer per (tensor, device-pair).
-The local implementation hands arrays across a thread-safe table; a
-distributed implementation would swap TCP/RDMA underneath the same
-interface — on TPU pods this role is played by XLA collectives instead
-(DESIGN.md §2).
+The local implementation hands arrays across a thread-safe table; the
+distributed implementation that swaps TCP underneath the same interface
+is :class:`repro.distrib.wire.WireRendezvous` (DESIGN.md §11), which
+wraps one of these tables as the worker's process-wide mailbox — on TPU
+pods this role is played by XLA collectives instead (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -45,9 +46,12 @@ class Rendezvous:
         self.timeout = timeout
         self.sends = 0  # instrumentation for tests/benchmarks
         self.bytes_sent = 0
+        self._dead: Any = None  # §3.3: exception poisoning all waiters
 
     def send(self, key: str, value: Any) -> None:
         with self._cv:
+            if self._dead is not None:
+                raise self._dead
             if key in self._table:
                 raise RuntimeError(f"duplicate send for rendezvous key {key!r}")
             self._table[key] = value
@@ -74,24 +78,49 @@ class Rendezvous:
         keys = list(keys)
         with self._cv:
             ok = self._cv.wait_for(
-                lambda: any(k in self._table for k in keys),
+                lambda: self._dead is not None
+                or any(k in self._table for k in keys),
                 timeout=self.timeout if timeout is None else timeout)
             if not ok:
                 raise TimeoutError(f"recv timed out waiting for any of {keys!r}")
             for k in keys:
                 if k in self._table:
                     return k
+            if self._dead is not None:
+                raise self._dead
             raise RuntimeError("unreachable: wait_any predicate satisfied")
 
-    def recv(self, key: str) -> Any:
+    def recv(self, key: str, timeout: float = None) -> Any:
         with self._cv:
-            ok = self._cv.wait_for(lambda: key in self._table, timeout=self.timeout)
+            ok = self._cv.wait_for(
+                lambda: self._dead is not None or key in self._table,
+                timeout=self.timeout if timeout is None else timeout)
             if not ok:
                 raise TimeoutError(f"recv timed out waiting for {key!r}")
-            return self._table.pop(key)
+            if key in self._table:
+                return self._table.pop(key)
+            raise self._dead
+
+    def abort(self, exc: BaseException) -> None:
+        """§3.3: poison the table — every blocked or future send/recv
+        raises ``exc``.  Used on worker shutdown so RPC handler threads
+        blocked in ``recv`` unwind instead of holding their sockets."""
+        with self._cv:
+            self._dead = exc
+            self._cv.notify_all()
+
+    def purge_prefix(self, prefix: str) -> int:
+        """Drop every key starting with ``prefix`` (per-execution cleanup
+        of the distributed mailbox; DESIGN.md §11)."""
+        with self._cv:
+            stale = [k for k in self._table if k.startswith(prefix)]
+            for k in stale:
+                del self._table[k]
+            return len(stale)
 
     def reset(self) -> None:
         with self._cv:
             self._table.clear()
             self.sends = 0
             self.bytes_sent = 0
+            self._dead = None

@@ -1,0 +1,299 @@
+"""DESIGN.md §11 multi-process runtime: real OS processes over TCP.
+
+The acceptance contract of the distributed subsystem: a 2-process run
+over the wire rendezvous bit-matches the equivalent in-process strict
+run (straight-line pipelines, train steps with §4.1 gradients, §4.4
+loops — including zero-iteration — and cross-process conds), §5.5
+compressed edges behave identically, and killing a worker mid-training
+recovers from the last checkpoint.
+
+Worker processes are spawned once per module (jax import dominates
+startup); the kill/recovery test owns its own pools.
+"""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session, TensorRef, cond, while_loop
+from repro.core.executable import Executable
+from repro.core.executor import ExecutorError
+from repro.launch.steps import build_wire_train_step
+from repro.runtime.devices import DeviceSet
+from repro.distrib import start_worker_processes, stop_worker_processes
+
+T0, T1 = "/job:worker/task:0", "/job:worker/task:1"
+TASKS = [T0, T1]
+
+
+@pytest.fixture(scope="module")
+def pool():
+    procs, spec = start_worker_processes(2)
+    yield spec
+    stop_worker_processes(procs, spec)
+
+
+@pytest.fixture
+def sessions():
+    created = []
+    yield created
+    for s in created:
+        s.close()
+
+
+def _session(sessions, graph, **kw):
+    s = Session(graph, **kw)
+    sessions.append(s)
+    return s
+
+
+def _in_process_devices():
+    return DeviceSet.make_cluster(2, 1, kind="cpu")
+
+
+def _pipeline_graph():
+    b = GraphBuilder()
+    data = b.constant(jnp.asarray(np.random.RandomState(0).randn(64, 64),
+                                  dtype=jnp.float32), name="data", device=T0)
+    w = b.constant(jnp.asarray(np.random.RandomState(1).randn(64, 64) * 0.05,
+                               dtype=jnp.float32), name="w", device=T1)
+    h = b.relu(b.matmul(data, w, name="mm", device=T1), name="h", device=T1)
+    out = b.reduce_sum(h, name="out", device=T0)
+    return b, out
+
+
+def test_two_process_pipeline_bitmatches_in_process(pool, sessions):
+    b, out = _pipeline_graph()
+    sess = _session(sessions, b.graph, cluster=pool)
+    wire1 = sess.run(out.ref)
+    wire2 = sess.run(out.ref)
+    assert sess.cache_stats["hits"] >= 1  # §3.2 "caches these graphs"
+    b2, out2 = _pipeline_graph()
+    ref = _session(sessions, b2.graph, devices=_in_process_devices()).run(out2.ref)
+    np.testing.assert_array_equal(np.asarray(wire1), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(wire2), np.asarray(ref))
+    # genuinely two processes moving tensors over the wire
+    plan = sess.executable([out.ref], set()).wire_plan
+    assert sum(s["remote_fetches"] for s in plan.last_run_stats.values()) > 0
+    pids = {plan.master._info.get(t, {}).get("pid") for t in (0, 1)}
+    pids.discard(None)
+    assert os.getpid() not in pids and len(pids) == 2
+
+
+def _batch(i, n=32):
+    rs = np.random.RandomState(1000 + i)
+    return (jnp.asarray(rs.randn(n, 16).astype("f")),
+            jnp.asarray(rs.randint(0, 8, (n,)).astype("i")))
+
+
+def test_two_process_train_step_bitmatches_in_process_strict(pool, sessions):
+    """The acceptance criterion: N train steps (forward, §4.1 backward,
+    SGD Assigns) over the wire == the in-process strict run, bit for bit
+    — losses each step AND final Variable state."""
+    ws = build_wire_train_step(TASKS, seed=3)
+    ref_sess = _session(sessions, ws.builder.graph, devices=_in_process_devices())
+    ref_run = ref_sess.make_callable([ws.loss, ws.train_op],
+                                     [ws.feed_x, ws.feed_y])
+    ref_losses = [np.asarray(ref_run(*_batch(i))[0]) for i in range(4)]
+
+    ws2 = build_wire_train_step(TASKS, seed=3)
+    sess = _session(sessions, ws2.builder.graph, cluster=pool)
+    run = sess.make_callable([ws2.loss, ws2.train_op],
+                             [ws2.feed_x, ws2.feed_y])
+    wire_losses = [np.asarray(run(*_batch(i))[0]) for i in range(4)]
+    np.testing.assert_array_equal(np.asarray(wire_losses),
+                                  np.asarray(ref_losses))
+    pulled = sess.pull_cluster_variables()
+    for name in ws.var_names:
+        np.testing.assert_array_equal(np.asarray(pulled[name]),
+                                      np.asarray(ref_sess.variable_value(name)))
+    assert sess.cache_stats["hits"] >= 3  # one Executable, many runs
+
+
+def _loop_graph(limit):
+    b = GraphBuilder()
+    i0 = b.constant(jnp.array(0), name="i0", device=T0)
+    acc0 = b.constant(jnp.array(0.0), name="acc0", device=T0)
+    lim = b.constant(jnp.array(limit), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    outs = while_loop(
+        b, lambda i, a: b.less(i, lim),
+        lambda i, a: [b.add(i, one, name="inc", device=T1),
+                      b.add(a, b.mul(b.cast(i, "float32"),
+                                     b.cast(i, "float32"), name="sq",
+                                     device=T1),
+                            name="acc", device=T0)],
+        [i0, acc0])
+    return b, outs
+
+
+def test_cross_process_loop_bitmatches_single_device(pool, sessions):
+    """§4.4 distributed control flow across *processes*: the per-iteration
+    predicate broadcast and the DEAD_TENSOR terminating markers all cross
+    the wire inside loop-frame-tagged rendezvous keys."""
+    b, outs = _loop_graph(5)
+    multi = _session(sessions, b.graph, cluster=pool).run(outs)
+    b2, outs2 = _loop_graph(5)
+    single = _session(sessions, b2.graph).run(outs2)
+    assert int(multi[0]) == int(single[0]) == 5
+    np.testing.assert_array_equal(np.asarray(multi[1]), np.asarray(single[1]))
+
+
+def test_zero_iteration_loop_across_processes(pool, sessions):
+    """Predicate false on iteration 0: the broadcast kills the replica
+    skeleton in the other *process* immediately — every in-frame Recv sees
+    a dead iteration token and the dead marker crosses the wire."""
+    b, outs = _loop_graph(0)
+    multi = _session(sessions, b.graph, cluster=pool).run(outs)
+    assert int(multi[0]) == 0 and float(multi[1]) == 0.0
+
+
+def test_cross_process_cond_both_branches(pool, sessions):
+    """Branches on different processes: §4.4 deadness as a wire marker."""
+    b = GraphBuilder()
+    p = b.placeholder("p")
+    x = b.constant(jnp.array(3.0), name="x", device=T0)
+    res = cond(b, p,
+               lambda t: [b.mul(t, t, name="tb", device=T1)],
+               lambda f: [b.neg(f, name="fb", device=T0)], [x])
+    sess = _session(sessions, b.graph, cluster=pool)
+    assert float(sess.run(res, {TensorRef("p", 0): jnp.array(True)})[0]) == 9.0
+    assert float(sess.run(res, {TensorRef("p", 0): jnp.array(False)})[0]) == -3.0
+
+
+def test_compress16_edges_match_in_process_compressed_run(pool, sessions):
+    """§5.5 lossy compression on cross-process edges: identical bits to
+    the in-process compressed run (compression happens producer-side, the
+    uint16 wire format rides the codec untouched)."""
+    b, out = _pipeline_graph()
+    sess = _session(sessions, b.graph, cluster=pool)
+    exe = Executable(sess, [out.ref], set(),
+                     node_set=sess.pruned_nodes([out.ref], {}), compress=True)
+    wire_lossy = exe.run({})[0]
+
+    b2, out2 = _pipeline_graph()
+    s2 = _session(sessions, b2.graph, devices=_in_process_devices())
+    exe2 = Executable(s2, [out2.ref], set(),
+                      node_set=s2.pruned_nodes([out2.ref], {}), compress=True,
+                      force_partitioned=True)
+    local_lossy = exe2.run({})[0]
+    np.testing.assert_array_equal(np.asarray(wire_lossy),
+                                  np.asarray(local_lossy))
+    exact = s2.run(out2.ref)
+    # sum over 64 products of compressed factors: loose sanity bound only
+    rel = abs(float(wire_lossy) - float(exact)) / max(abs(float(exact)), 1e-6)
+    assert rel < 64 * 2 ** -7
+
+
+def test_single_worker_cluster_still_executes_in_worker_process(pool, sessions):
+    """A one-task cluster must not silently fall back to local execution."""
+    from repro.distrib.wire import ClusterSpec
+
+    solo = ClusterSpec((pool.workers[0],))
+    b = GraphBuilder()
+    x = b.constant(jnp.arange(4.0, dtype=jnp.float32), name="x", device=T0)
+    y = b.reduce_sum(b.mul(x, x, name="xx", device=T0), name="y", device=T0)
+    sess = _session(sessions, b.graph, cluster=solo)
+    assert float(sess.run(y.ref)) == float(np.sum(np.arange(4.0) ** 2))
+    exe = sess.executable([y.ref], set())
+    assert exe.wire_plan is not None
+
+
+def test_second_executable_does_not_reset_worker_variables(pool, sessions):
+    """Registering a new run signature mid-training (e.g. an eval-only
+    fetch) must SEED-only: the workers' stores hold the trained weights,
+    and the master's stale initial values must never clobber them."""
+    ws = build_wire_train_step(TASKS, seed=11)
+    ref_sess = _session(sessions, ws.builder.graph,
+                        devices=_in_process_devices())
+    ref_run = ref_sess.make_callable([ws.loss, ws.train_op],
+                                     [ws.feed_x, ws.feed_y])
+    for i in range(4):
+        ref_run(*_batch(i))
+
+    ws2 = build_wire_train_step(TASKS, seed=11)
+    sess = _session(sessions, ws2.builder.graph, cluster=pool)
+    run = sess.make_callable([ws2.loss, ws2.train_op],
+                             [ws2.feed_x, ws2.feed_y])
+    for i in range(2):
+        run(*_batch(i))
+    # a different signature -> new Executable -> new WirePlan registration
+    eval_loss = sess.run(ws2.loss, {ws2.feed_x: _batch(0)[0],
+                                    ws2.feed_y: _batch(0)[1]})
+    assert np.isfinite(float(eval_loss))
+    for i in range(2, 4):
+        run(*_batch(i))
+    final = sess.pull_cluster_variables()
+    for name in ws.var_names:
+        np.testing.assert_array_equal(np.asarray(final[name]),
+                                      np.asarray(ref_sess.variable_value(name)))
+
+
+def test_worker_kill_recovery_from_checkpoint():
+    """§3.3 end to end: kill a worker mid-training, detect it with an
+    ExecutorError naming the lost process/host, restart the pool, restore
+    the last checkpoint, and finish bit-identical to an uninterrupted
+    in-process run."""
+    ws = build_wire_train_step(TASKS, seed=7)
+    ref_sess = Session(ws.builder.graph, devices=_in_process_devices())
+    ref_run = ref_sess.make_callable([ws.loss, ws.train_op],
+                                     [ws.feed_x, ws.feed_y])
+    for i in range(6):
+        ref_run(*_batch(i))
+    ref_vars = {n: np.asarray(ref_sess.variable_value(n))
+                for n in ws.var_names}
+
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0)
+    sess = None
+    procs2 = spec2 = None
+    try:
+        ws2 = build_wire_train_step(TASKS, seed=7)
+        sess = Session(ws2.builder.graph, cluster=spec)
+        run = sess.make_callable([ws2.loss, ws2.train_op],
+                                 [ws2.feed_x, ws2.feed_y])
+        ckpts = {}
+        for i in range(3):
+            run(*_batch(i))
+            # master-side checkpoint: pull Variable state from the pool
+            ckpts[i + 1] = {k: np.asarray(v)
+                            for k, v in sess.pull_cluster_variables().items()}
+        procs[1].kill()  # hard kill: no shutdown handshake, no flush
+        time.sleep(0.2)
+        with pytest.raises(ExecutorError) as ei:
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:  # first post-kill run may race
+                run(*_batch(3))
+        msg = str(ei.value)
+        assert "task:1" in msg  # names the lost process, not just a device
+        assert spec.workers[1].rsplit(":", 1)[1] in msg  # ...and its endpoint
+
+        # restart the pool, restore the last checkpoint, resume
+        procs2, spec2 = start_worker_processes(2, rendezvous_timeout=10.0)
+        for name, value in ckpts[3].items():
+            sess.set_variable(name, value)
+        sess.rebind_cluster(spec2)
+        for i in range(3, 6):
+            run(*_batch(i))
+        final = {k: np.asarray(v)
+                 for k, v in sess.pull_cluster_variables().items()}
+        for name in ws.var_names:
+            np.testing.assert_array_equal(final[name], ref_vars[name])
+    finally:
+        if sess is not None:
+            sess.close()
+        stop_worker_processes(procs, spec)
+        if procs2 is not None:
+            stop_worker_processes(procs2, spec2)
+
+
+def test_rebinding_to_wrong_shape_pool_is_rejected():
+    from repro.distrib.wire import ClusterSpec
+    from repro.distrib.master import Master
+
+    m = Master(ClusterSpec(("127.0.0.1:1", "127.0.0.1:2")),
+               heartbeat_interval=0)  # no hb thread: topology check only
+    with pytest.raises(ValueError, match="placement is per-task"):
+        m.reset(ClusterSpec(("127.0.0.1:1",)))
+    m.stop()

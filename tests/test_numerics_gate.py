@@ -292,6 +292,62 @@ def test_fast_mode_fuses_matmul_at_full_opt():
     assert "MatMul" not in strict_fused and "ReduceSum" not in strict_fused
 
 
+def test_guard_sampling_catches_input_shift_drift():
+    """REPRO_NUMERICS_GUARD=sample:N (ROADMAP item): the first batch can
+    pass the guard while a later input distribution exposes drift — the
+    sampled re-verification catches it and demotes to strict."""
+    BENIGN = np.ones(66, np.float32)  # fp32 scan == fp64 sum exactly
+    b, y, fin, upd = _divergent_graph()
+    sess = Session(b.graph, numerics="fast", parity_guard="sample:2")
+    assert sess.parity_guard and sess.parity_guard_every == 2
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # first run verifies and passes
+        sess.run([fin.ref, upd.ref], {y.ref: jnp.asarray(BENIGN)})
+        sess.run([fin.ref, upd.ref], {y.ref: jnp.asarray(BENIGN)})  # unsampled
+    with pytest.warns(RuntimeWarning, match="parity breach"):
+        # run 3 is the sampled re-verification; the shifted input drifts
+        rv = sess.run([fin.ref, upd.ref], {y.ref: jnp.asarray(CANCEL_INPUT)})
+    exe = sess.executable([fin.ref, upd.ref], frozenset({y.ref}))
+    assert exe._strict_fallback
+    # ...and the caller received the strict reference, not the drifted value
+    strict = Session(b.graph, numerics="strict", fuse_regions=False)
+    for feed in (BENIGN, BENIGN, CANCEL_INPUT):
+        sv = strict.run([fin.ref, upd.ref], {y.ref: jnp.asarray(feed)})
+    assert float(rv[0]) == float(sv[0])
+
+
+def test_default_guard_misses_late_drift_without_sampling():
+    """The contrast case motivating sample:N — first-run-only verification
+    lets a later shifted batch return the drifted fused value silently."""
+    BENIGN = np.ones(66, np.float32)
+    b, y, fin, upd = _divergent_graph()
+    sess = Session(b.graph, numerics="fast", parity_guard=True)
+    assert sess.parity_guard_every is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sess.run([fin.ref, upd.ref], {y.ref: jnp.asarray(BENIGN)})
+        out = sess.run([fin.ref, upd.ref], {y.ref: jnp.asarray(CANCEL_INPUT)})
+    # fused fp32 scan lost the 64 ones entirely: genuine unreported drift
+    assert abs(float(out[0]) - (64.0 + 1.0)) > 1.0
+    exe = sess.executable([fin.ref, upd.ref], frozenset({y.ref}))
+    assert not exe._strict_fallback
+
+
+def test_guard_sampling_env_and_param_parsing(monkeypatch):
+    b = GraphBuilder()
+    b.constant(jnp.float32(1.0), name="c")
+    monkeypatch.setenv("REPRO_NUMERICS_GUARD", "sample:4")
+    s = Session(b.graph)
+    assert s.parity_guard and s.parity_guard_every == 4
+    monkeypatch.setenv("REPRO_NUMERICS_GUARD", "off")
+    s2 = Session(b.graph)
+    assert not s2.parity_guard
+    s3 = Session(b.graph, parity_guard="sample:1")  # re-verify every run
+    assert s3.parity_guard_every == 1
+    with pytest.raises(ValueError, match="sample period"):
+        Session(b.graph, parity_guard="sample:0")
+
+
 def test_compare_bf16_judged_in_native_ulps():
     """jax's ml_dtypes floats (the serve cache is bf16) must be drift-
     compared, not exact-compared — and the fp32-calibrated ULP bounds

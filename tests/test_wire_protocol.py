@@ -1,0 +1,202 @@
+"""DESIGN.md §11 wire serialization: the tensor codec and message framing.
+
+The distributed runtime's correctness contract starts here: every dtype
+the graph engine produces must round-trip the wire bit-faithfully,
+DEAD_TENSOR must survive as a first-class marker (§4.4 deadness crosses
+process boundaries), and the §5.5 compress16 uint16 wire format must
+decompress to exactly what the in-process path produces.  No sockets or
+subprocesses in this module — the end-to-end 2-process paths live in
+tests/test_distrib_runtime.py.
+"""
+import socket
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Graph, GraphBuilder, TensorRef
+from repro.core.compression import compress_f32_to_16, decompress_16_to_f32
+from repro.distrib.protocol import (
+    Channel, ProtocolError, decode_tensor, encode_tensor, pack_msg,
+    read_frame, recv_msg, send_msg, unpack_msg, write_frame,
+)
+from repro.runtime.rendezvous import DEAD_TENSOR
+
+# every dtype the graph engine produces somewhere: placeholders/Consts
+# (float/int/bool), Shape/Rank (int32/int64), comparisons (bool), Cast
+# targets, compress16's uint16 wire format, bf16/f16 compute dtypes
+WIRE_DTYPES = [
+    "float32", "float64", "float16", "bfloat16",
+    "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+    "bool", "complex64",
+]
+
+
+def _sample(dtype: str, shape=(3, 5)) -> np.ndarray:
+    rs = np.random.RandomState(hash(dtype) % (2**31))
+    if dtype == "bool":
+        return rs.rand(*shape) > 0.5
+    if dtype == "complex64":
+        return (rs.randn(*shape) + 1j * rs.randn(*shape)).astype(dtype)
+    if dtype.startswith(("int", "uint")):
+        return rs.randint(0, 100, shape).astype(dtype)
+    if dtype == "bfloat16":
+        import ml_dtypes
+
+        return rs.randn(*shape).astype(ml_dtypes.bfloat16)
+    return rs.randn(*shape).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+def test_every_engine_dtype_roundtrips_bitwise(dtype):
+    arr = _sample(dtype)
+    out = decode_tensor(encode_tensor(arr))
+    got = np.asarray(out)
+    assert got.dtype == arr.dtype
+    assert got.shape == arr.shape
+    # bit-level comparison, not allclose: the codec is a buffer copy
+    np.testing.assert_array_equal(got.view(np.uint8), arr.view(np.uint8))
+
+
+@pytest.mark.parametrize("shape", [(), (0,), (1,), (2, 0, 3), (4, 1, 2)])
+def test_shapes_including_scalar_and_empty(shape):
+    arr = np.asarray(np.random.RandomState(0).randn(*shape), dtype="f")
+    out = np.asarray(decode_tensor(encode_tensor(arr)))
+    assert out.shape == shape and out.dtype == arr.dtype
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_fortran_order_input_roundtrips():
+    arr = np.asfortranarray(np.random.RandomState(1).randn(4, 6).astype("f"))
+    np.testing.assert_array_equal(np.asarray(decode_tensor(encode_tensor(arr))), arr)
+
+
+def test_jax_array_roundtrips_bitwise():
+    x = jnp.linspace(-1.0, 1.0, 17, dtype=jnp.float32)
+    out = decode_tensor(encode_tensor(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_dead_tensor_is_a_first_class_wire_marker():
+    assert decode_tensor(encode_tensor(DEAD_TENSOR)) is DEAD_TENSOR
+    # ...and survives arbitrarily deep inside a message structure
+    msg = unpack_msg(pack_msg({"kind": "run", "vals": [1, DEAD_TENSOR,
+                                                       {"x": DEAD_TENSOR}]}))
+    assert msg["vals"][1] is DEAD_TENSOR
+    assert msg["vals"][2]["x"] is DEAD_TENSOR
+
+
+def test_compress16_wire_format_matches_in_process_roundtrip():
+    """A compressed edge sends uint16; the receiving process must
+    decompress to exactly the in-process result (§5.5)."""
+    x = jnp.asarray(np.random.RandomState(2).randn(8, 8).astype("f"))
+    wire_u16 = compress_f32_to_16(x)
+    arrived = decode_tensor(encode_tensor(wire_u16))
+    assert np.asarray(arrived).dtype == np.uint16
+    np.testing.assert_array_equal(
+        np.asarray(decompress_16_to_f32(arrived)),
+        np.asarray(decompress_16_to_f32(wire_u16)))
+
+
+def test_message_with_tensors_roundtrips():
+    feeds = {TensorRef("x", 0): jnp.ones((2, 3), jnp.float32),
+             TensorRef("y", 1): np.int32(7)}
+    msg = unpack_msg(pack_msg({"kind": "run_graph", "feeds": feeds, "timeout": 5.0}))
+    assert msg["kind"] == "run_graph"
+    assert set(msg["feeds"]) == set(feeds)
+    np.testing.assert_array_equal(np.asarray(msg["feeds"][TensorRef("x", 0)]),
+                                  np.ones((2, 3), np.float32))
+
+
+def test_graph_slice_ships_with_const_values_bitwise():
+    b = GraphBuilder()
+    v = np.random.RandomState(3).randn(4, 4).astype("f")
+    c = b.constant(jnp.asarray(v), name="c")
+    b.reduce_sum(c, name="s")
+    g2 = unpack_msg(pack_msg({"graph": b.graph}))["graph"]
+    assert isinstance(g2, Graph)
+    assert set(g2.nodes) == set(b.graph.nodes)
+    np.testing.assert_array_equal(np.asarray(g2.nodes["c"].attrs["value"]), v)
+
+
+def test_gradient_graphs_ship(tmp_path):
+    """§4.1 autodiff Call nodes use picklable _GradFn kernels, so a
+    primitive-op train graph (forward+backward+updates) crosses the wire."""
+    from repro.launch.steps import build_wire_train_step
+
+    ws = build_wire_train_step(["/job:worker/task:0", "/job:worker/task:1"])
+    g2 = unpack_msg(pack_msg({"graph": ws.builder.graph}))["graph"]
+    assert any(n.startswith("grad/") for n in g2.nodes)
+    fn = g2.nodes["grad/mm1"].attrs["fn"]
+    # the reconstructed kernel is callable and produces the right arity
+    a = jnp.ones((2, 3)); w = jnp.ones((3, 4))
+    outs = fn(a, w, a @ w, jnp.ones((2, 4)))
+    assert len(outs) == 2 and outs[0].shape == a.shape
+
+
+def test_closure_call_rejected_with_clear_error():
+    captured = 3.0
+    with pytest.raises(ProtocolError, match="Call closures cannot ship"):
+        pack_msg({"kind": "register_graph", "fn": lambda x: x * captured})
+
+
+def test_frame_roundtrip_over_real_socket():
+    a, b = socket.socketpair()
+    payload = {"kind": "heartbeat", "blob": np.arange(1000, dtype=np.int64)}
+
+    def server():
+        msg = recv_msg(b)
+        send_msg(b, {"ok": True, "echo": msg["blob"] * 2})
+
+    t = threading.Thread(target=server)
+    t.start()
+    send_msg(a, payload)
+    reply = recv_msg(a)
+    t.join()
+    np.testing.assert_array_equal(np.asarray(reply["echo"]),
+                                  np.arange(1000, dtype=np.int64) * 2)
+    a.close(); b.close()
+
+
+def test_clean_eof_returns_none_and_midframe_eof_raises():
+    a, b = socket.socketpair()
+    a.close()
+    assert read_frame(b) is None
+    b.close()
+    a, b = socket.socketpair()
+    a.sendall(b"\x00\x00\x01\x00partial")  # announces 256 bytes, sends 7
+    a.close()
+    with pytest.raises(ProtocolError, match="mid-frame"):
+        read_frame(b)
+    b.close()
+
+
+def test_channel_round_trip_and_worker_error():
+    from repro.distrib.protocol import WorkerError
+
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0)); srv.listen(1)
+    port = srv.getsockname()[1]
+
+    def server():
+        conn, _ = srv.accept()
+        while True:
+            msg = recv_msg(conn)
+            if msg is None:
+                return
+            if msg["kind"] == "boom":
+                send_msg(conn, {"ok": False, "error": "kaboom"})
+            else:
+                send_msg(conn, {"ok": True, "pong": msg.get("n", 0) + 1})
+
+    t = threading.Thread(target=server, daemon=True)
+    t.start()
+    ch = Channel("127.0.0.1", port)
+    assert ch.call("ping", n=41)["pong"] == 42
+    with pytest.raises(WorkerError, match="kaboom"):
+        ch.call("boom")
+    # the pooled connection survives both calls
+    assert ch.call("ping", n=1)["pong"] == 2
+    ch.close(); srv.close()
