@@ -13,7 +13,8 @@ repo's §Roofline artifacts:
   b5  input_pipeline         §4.6 prefetch-queue overlap win
   b6  cse                    §5.1 node-count reduction
   b7  recv_scheduling        §5.2 peak-memory window reduction (simulated)
-  b8  kernels_interpret      per-kernel sanity timings (interpret mode)
+  b8  kernel_registry        §12 registered-kernel dispatch: the smoke LM
+                             block with the backend registry on vs off
   b9  train_throughput       end-to-end compiled training tokens/s
   b10 roofline_table         §Roofline summary from experiments/dryrun
 
@@ -245,18 +246,66 @@ def bench_recv_scheduling():
 
 
 def bench_kernels():
-    from repro.kernels.matmul import matmul_pallas
-    from repro.kernels.flash_attention import flash_attention_pallas
+    """DESIGN.md §12: the kernel-backend registry in a real graph run.
+
+    One smoke LM block (rmsnorm -> q-proj -> attention -> out-proj ->
+    residual, x2 layers) executed through the SAME fused-fast Session
+    engine twice: registry off (backend="generic", pure XLA lowering) and
+    registry on (backend="pallas", pattern-matched regions dispatch onto
+    the hand-written kernels).  The pallas row must actually dispatch >=3
+    distinct registered kernels or the comparison is vacuous."""
+    from repro.core import GraphBuilder, Session
+    from repro.core import kernel_registry as kr
 
     rs = np.random.RandomState(0)
-    a = jnp.array(rs.randn(256, 256).astype("f"))
-    us = _timeit(lambda: jax.block_until_ready(
-        matmul_pallas(a, a, interpret=True)), n=5, warmup=1)
-    emit("b8_matmul_pallas_interpret", us, "256x256x256")
-    q = jnp.array(rs.randn(2, 256, 64).astype("f"))
-    us = _timeit(lambda: jax.block_until_ready(
-        flash_attention_pallas(q, q, q, interpret=True)), n=5, warmup=1)
-    emit("b8_flash_pallas_interpret", us, "bh2_s256_d64")
+    S, D = 128, 64
+
+    def build():
+        b = GraphBuilder()
+        x = b.placeholder("x")
+        kT = b.constant(jnp.array(rs.randn(D, S).astype("f")), name="kT")
+        v = b.constant(jnp.array(rs.randn(S, D).astype("f")), name="v")
+        cur = x
+        for i in range(2):
+            w = b.constant(jnp.array(
+                np.abs(rs.randn(D)).astype("f") + 0.5), name=f"w{i}")
+            wq = b.constant(jnp.array(
+                rs.randn(D, D).astype("f") * 0.2), name=f"wq{i}")
+            wo = b.constant(jnp.array(
+                rs.randn(D, D).astype("f") * 0.2), name=f"wo{i}")
+            xn = b.rmsnorm(cur, w, name=f"l{i}/xn")
+            q = b.matmul(xn, wq, name=f"l{i}/q")
+            att = b.attention(q, kT, v, scale=D ** -0.5, name=f"l{i}/att")
+            proj = b.matmul(att, wo, name=f"l{i}/proj")
+            cur = b.add(proj, cur, name=f"l{i}/res")
+        out = b.reduce_sum(cur, name="out")
+        return b, x, out
+
+    X = jnp.array(rs.randn(S, D).astype("f"))
+    rows = {}
+    for backend in ("generic", "pallas"):
+        b, x, out = build()
+        sess = Session(b.graph, numerics="fast", parity_guard=False,
+                       backend=backend)
+        before = kr.dispatch_counts(backend)
+        sess.run(out.ref, {x.ref: X})  # compile + (for pallas) dispatch
+        delta = {k: c - before.get(k, 0)
+                 for k, c in kr.dispatch_counts(backend).items()
+                 if c > before.get(k, 0)}
+        # min over repeats: the step is dispatch-overhead heavy, so a
+        # mean-of-one-window estimate is too noisy to compare backends
+        us = min(_timeit(lambda: jax.block_until_ready(
+            sess.run(out.ref, {x.ref: X})), n=20, warmup=2)
+            for _ in range(3))
+        rows[backend] = us
+        kstr = "+".join(sorted(delta)) if delta else "none"
+        emit(f"b8_lm_{backend}_fused", us,
+             f"s{S}_d{D}_2layer,kernels={kstr}")
+        if backend == "pallas":
+            assert len(delta) >= 3, (
+                f"registry dispatched only {sorted(delta)} — b8 is vacuous")
+    emit("b8_registry_on_vs_off", rows["pallas"],
+         f"speedup={rows['generic'] / rows['pallas']:.2f}x_vs_generic")
 
 
 def bench_train_throughput():
@@ -433,11 +482,13 @@ def write_json(path: str) -> None:
 
 # key metrics guarded against regression, with the benchmark function
 # that produces each (b1: dispatch overhead, b2: fused-fast eager engine,
-# b9: end-to-end training, b12: cached multi-device step, b13: fused
-# multi-device step)
+# b8: LM step with the kernel registry off/on, b9: end-to-end training,
+# b12: cached multi-device step, b13: fused multi-device step)
 KEY_METRICS = {
     "b1_session_run_overhead": bench_session_run_overhead,
     "b2_fused_fast_graph": bench_compiled_vs_eager,
+    "b8_lm_generic_fused": bench_kernels,
+    "b8_lm_pallas_fused": bench_kernels,
     "b9_train_tokens_per_s": bench_train_throughput,
     "b12_run_cached_executable": bench_executable_cache,
     "b13_fused_partitioned_step": bench_fused_partitioned_step,
@@ -515,7 +566,8 @@ def main(argv=None) -> None:
                          "for --only runs so a filtered subset never "
                          "clobbers the tracked artifact)")
     ap.add_argument("--check", action="store_true",
-                    help="re-run the key metrics (b1, b2-fast, b9, b12, b13) "
+                    help="re-run the key metrics (b1, b2-fast, b8, b9, b12, "
+                         "b13) "
                          "and exit non-zero if any regressed >25%% vs the "
                          "committed BENCH_latest.json")
     ap.add_argument("--check-threshold", type=float, default=0.25,

@@ -70,6 +70,11 @@ class RunSignature:
     # signature-dependent; DESIGN.md §9)
     fuse_regions: bool = True
     fuse_numerics: str = "strict"
+    # the kernel-backend registry key (DESIGN.md §12): flipping
+    # Session(backend=...) must rebuild, never reuse — a cached
+    # generic-lowered Executable serving a pallas session (or vice
+    # versa) would make which kernels run signature-dependent
+    kernel_backend: str = "generic"
 
     @staticmethod
     def for_session(session, fetch_refs: Sequence[TensorRef],
@@ -92,6 +97,7 @@ class RunSignature:
             fuse_numerics=getattr(
                 session, "numerics",
                 os.environ.get("REPRO_FUSE_NUMERICS", "strict")),
+            kernel_backend=getattr(session, "kernel_backend", "generic"),
         )
 
 
@@ -188,6 +194,10 @@ class Executable:
             numerics if numerics is not None
             else getattr(session, "numerics",
                          os.environ.get("REPRO_FUSE_NUMERICS", "strict")))
+        # kernel-backend registry key (DESIGN.md §12); cluster executions
+        # stay generic — workers re-fuse their slices without a backend
+        self.kernel_backend: str = getattr(session, "kernel_backend",
+                                           "generic")
         # DESIGN.md §7: region fusion runs once per signature, here; the
         # result (incl. each region's lazily-jitted kernel) is cached with
         # the Executable.  Fetches into fused members are remapped to the
@@ -255,7 +265,8 @@ class Executable:
                     feeds=self.feed_keys, fetch_refs=self.fetches,
                     written_vars=fusion_mod.written_variables(
                         exec_graph, exec_graph.nodes),
-                    numerics=self.numerics)
+                    numerics=self.numerics,
+                    backend=self.kernel_backend)
                 if fus is not None and (fus.regions or fus.changed):
                     self.fusion = fus
                     exec_graph = fus.graph
@@ -281,7 +292,8 @@ class Executable:
                     feeds=self.feed_keys, fetch_refs=self.fetches,
                     written_vars=fusion_mod.written_variables(
                         session.graph, self.node_set),
-                    numerics=self.numerics)
+                    numerics=self.numerics,
+                    backend=self.kernel_backend)
                 if fus is not None and (fus.regions or fus.changed):
                     self.fusion = fus
                     exec_graph, exec_names = fus.graph, fus.names
@@ -328,7 +340,13 @@ class Executable:
                                                  self.node_set)
                     & {n for n in self.node_set
                        if session.graph.nodes[n].op == "Variable"})
-                self._guard_tol = numerics_mod.tolerance_for_ops(ops)
+                kinds = ("cpu",)
+                if self.multi_device and getattr(self, "placement", None):
+                    kinds = tuple(sorted(
+                        {fusion_mod._device_kind(d, "cpu")
+                         for d in self.placement.values()})) or ("cpu",)
+                self._guard_tol = numerics_mod.tolerance_for_ops(
+                    ops, device_kinds=kinds, backend=self.kernel_backend)
                 self._guard_every = getattr(session, "parity_guard_every", None)
 
     # ------------------------------------------------------------------

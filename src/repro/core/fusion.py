@@ -70,7 +70,7 @@ FUSIBLE_STATEFUL = {"Variable", "Assign", "AssignAdd"}
 # optimization under the per-op-class tolerance contract of DESIGN.md §9
 # (repro.core.numerics), re-proven by the CI parity gate.
 STRICT_UNFUSIBLE = {"MatMul", "Call", "ReduceSum", "ReduceMean",
-                    "SoftMax", "SoftmaxXent"}
+                    "SoftMax", "SoftmaxXent", "SSDScan"}
 
 # pass-invocation counters (see placement.STATS; DESIGN.md §5/§7)
 STATS = {"fuse_calls": 0, "regions_built": 0, "nodes_fused": 0,
@@ -135,6 +135,14 @@ class RegionSpec:
     # or cross-op rewrites) — the parity contract.  "fast": full backend
     # optimization; results may differ from the interpreter by ~1 ulp.
     numerics: str = "strict"
+    # kernel-backend registry key (DESIGN.md §12): under a non-generic
+    # backend, lower_region rewrites recognized idioms among the members
+    # onto registered kernels for this region's device kind.  Dispatch is
+    # fast-numerics-only: strict's bit-parity contract (and its
+    # STRICT_UNFUSIBLE exclusions) keeps the matchable anchors out of
+    # strict regions anyway.
+    backend: str = "generic"
+    device_kind: str = "cpu"
 
     def __post_init__(self) -> None:
         self._fn: Optional[Any] = None   # lowered python callable (trace source)
@@ -151,9 +159,11 @@ class RegionSpec:
             if self._fn is None:
                 from . import lowering
 
+                backend = self.backend if self.numerics == "fast" else "generic"
                 self._fn = lowering.lower_region(
                     self.subgraph, self.members, self.input_refs,
-                    self.output_refs, self.members)
+                    self.output_refs, self.members,
+                    backend=backend, device_kind=self.device_kind)
             return self._fn
 
     def _cache(self):
@@ -398,6 +408,7 @@ def fuse(
     min_region_size: int = 2,
     run_optimizations: bool = True,
     numerics: Optional[str] = None,
+    backend: str = "generic",
 ) -> FusionResult:
     """Plan regions over ``node_names`` of ``g`` and rewrite into a new
     graph where each region is one ``FusedRegion`` super-node.
@@ -522,6 +533,8 @@ def fuse(
                                if g2.nodes[m].op in ("Assign", "AssignAdd")}),
             device=dev or None,
             numerics=numerics,
+            backend=backend,
+            device_kind=_device_kind(dev or None, device_kind),
         ))
         for m in members:
             member_to_region[m] = rname

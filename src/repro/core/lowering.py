@@ -72,11 +72,15 @@ class _LoweringState:
 
 class _Evaluator:
     def __init__(self, g: Graph, node_set: Set[str], state: _LoweringState,
-                 bindings: Dict[Tuple[str, int], Any]):
+                 bindings: Dict[Tuple[str, int], Any],
+                 overrides: Optional[Dict[str, Callable]] = None):
         self.g = g
         self.node_set = node_set
         self.state = state
         self.bindings = dict(bindings)  # (node, port) -> value
+        # anchor -> kernel-registry override (DESIGN.md §12); only region
+        # lowering populates this, sub-evaluators stay generic
+        self.overrides = overrides or {}
         self.memo: Dict[Tuple[str, int], Any] = {}
         self.executed: Set[str] = set()
         # node -> owning loop/cond spec name
@@ -132,10 +136,18 @@ class _Evaluator:
             self.executed.add(name)
             self.memo[(name, 0)] = self.state.read_variable(node)
             return
-        ins = [self.value(r) for r in node.inputs]
-        self.executed.add(name)
-        od = ops_mod.opdef(node.op)
-        outs = od.compute(self.state, node, *ins)
+        ov = self.overrides.get(name)
+        if ov is not None:
+            # registered backend kernel: consumes its pattern's leaf refs
+            # directly (interior members still trace generically; unused
+            # interior values are dead code to XLA)
+            self.executed.add(name)
+            outs = ov(self, node)
+        else:
+            ins = [self.value(r) for r in node.inputs]
+            self.executed.add(name)
+            od = ops_mod.opdef(node.op)
+            outs = od.compute(self.state, node, *ins)
         for p, v in enumerate(outs):
             self.memo[(name, p)] = v
         # Variable re-read support: invalidate variable memo after writes
@@ -239,6 +251,9 @@ def lower_region(
     input_refs: Sequence[TensorRef],
     output_refs: Sequence[TensorRef],
     member_order: Optional[Sequence[str]] = None,
+    *,
+    backend: str = "generic",
+    device_kind: str = "cpu",
 ) -> Callable:
     """Lower one fused *region* of a (partitioned) graph to a pure function.
 
@@ -264,10 +279,17 @@ def lower_region(
     out_refs = [as_ref(r) for r in output_refs]
     order = list(member_order) if member_order is not None else list(members)
 
+    overrides: Dict[str, Callable] = {}
+    if backend and backend != "generic":
+        from . import kernel_registry
+
+        overrides = kernel_registry.plan_region_overrides(
+            g, member_set, backend, device_kind)
+
     def fn(input_values: Sequence[Any], var_values: Dict[str, Any]):
         state = _LoweringState(dict(var_values))
         bindings = {(r.node, r.port): v for r, v in zip(in_refs, input_values)}
-        ev = _Evaluator(g, member_set, state, bindings)
+        ev = _Evaluator(g, member_set, state, bindings, overrides=overrides)
         outs = tuple(ev.value(r) for r in out_refs)
         for m in order:
             ev.execute(m)

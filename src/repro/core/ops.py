@@ -147,6 +147,9 @@ class GraphBuilder:
     def square(self, a, name="square", device=None):
         return self._op("Square", [a], name=name, device=device)
 
+    def rsqrt(self, a, name="rsqrt", device=None):
+        return self._op("Rsqrt", [a], name=name, device=device)
+
     def greater(self, a, b, name="greater"):
         return self._op("Greater", [a, b], name=name)
 
@@ -172,11 +175,17 @@ class GraphBuilder:
     def rank(self, x, name="rank"):
         return self._op("Rank", [x], name=name)
 
-    def reduce_sum(self, x, axis=None, name="reduce_sum", device=None):
-        return self._op("ReduceSum", [x], name=name, attrs={"axis": axis}, device=device)
+    def reduce_sum(self, x, axis=None, name="reduce_sum", device=None,
+                   keepdims=False):
+        return self._op("ReduceSum", [x], name=name,
+                        attrs={"axis": axis, "keepdims": keepdims},
+                        device=device)
 
-    def reduce_mean(self, x, axis=None, name="reduce_mean", device=None):
-        return self._op("ReduceMean", [x], name=name, attrs={"axis": axis}, device=device)
+    def reduce_mean(self, x, axis=None, name="reduce_mean", device=None,
+                    keepdims=False):
+        return self._op("ReduceMean", [x], name=name,
+                        attrs={"axis": axis, "keepdims": keepdims},
+                        device=device)
 
     def cast(self, x, dtype, name="cast"):
         return self._op("Cast", [x], name=name, attrs={"dtype": jnp.dtype(dtype).name})
@@ -194,12 +203,46 @@ class GraphBuilder:
     def tanh(self, x, name="tanh"):
         return self._op("Tanh", [x], name=name)
 
-    def softmax(self, x, name="softmax"):
-        return self._op("SoftMax", [x], name=name)
+    def softmax(self, x, name="softmax", device=None):
+        return self._op("SoftMax", [x], name=name, device=device)
 
     def softmax_xent(self, logits, labels, name="softmax_xent"):
         """Mean softmax cross-entropy with integer labels."""
         return self._op("SoftmaxXent", [logits, labels], name=name)
+
+    # --- LM-block idioms as primitive ops.  These are the shapes the
+    # kernel-backend registry pattern-matches (DESIGN.md §12): built from
+    # primitives they lower through generic XLA, and under
+    # Session(backend="pallas") fused-region lowering rewrites them onto
+    # the hand-written kernels.
+    def rmsnorm(self, x, w, eps=1e-5, name="rmsnorm", device=None):
+        """``x * rsqrt(mean(x^2, -1) + eps) * w`` over the last axis."""
+        sq = self.square(x, name=f"{name}/sq", device=device)
+        ms = self.reduce_mean(sq, axis=-1, name=f"{name}/ms", device=device,
+                              keepdims=True)
+        epsc = self.constant(jnp.float32(eps), name=f"{name}/eps",
+                             device=device)
+        veps = self.add(ms, epsc, name=f"{name}/veps", device=device)
+        rs = self.rsqrt(veps, name=f"{name}/rs", device=device)
+        norm = self.mul(x, rs, name=f"{name}/norm", device=device)
+        return self.mul(norm, w, name=name, device=device)
+
+    def attention(self, q, kT, v, scale=None, name="attn", device=None):
+        """``softmax(q @ kT * scale) @ v`` — q (S,D), kT (D,T), v (T,D)."""
+        s = self.matmul(q, kT, name=f"{name}/scores", device=device)
+        if scale is not None:
+            sc = self.constant(jnp.float32(scale), name=f"{name}/scale",
+                               device=device)
+            s = self.mul(s, sc, name=f"{name}/scaled", device=device)
+        p = self.softmax(s, name=f"{name}/probs", device=device)
+        return self.matmul(p, v, name=name, device=device)
+
+    def ssd_scan(self, x, dt, A_log, Bc, Cc, D_skip, chunk=128, name="ssd",
+                 device=None):
+        """Mamba-2 SSD scan in the models layout: x (B,S,H,P),
+        dt (B,S,H), A_log (H,), Bc/Cc (B,S,G,N), D_skip (H,)."""
+        return self._op("SSDScan", [x, dt, A_log, Bc, Cc, D_skip],
+                        name=name, attrs={"chunk": chunk}, device=device)
 
     # --- composite escape hatch: any pure jax-traceable function as one node.
     def call(self, fn: Callable, inputs: Sequence, name="call", n_out=1, attrs=None, device=None):
@@ -290,6 +333,9 @@ register("Exp", grad=lambda n, i, o, g: [g[0] * o[0]])(_unary(jnp.exp))
 register("Log", grad=lambda n, i, o, g: [g[0] / i[0]])(_unary(jnp.log))
 register("Neg", grad=lambda n, i, o, g: [-g[0]])(_unary(jnp.negative))
 register("Square", grad=lambda n, i, o, g: [2.0 * i[0] * g[0]])(_unary(jnp.square))
+# d/dx x^(-1/2) = -1/2 x^(-3/2) = -o^3 / 2
+register("Rsqrt", grad=lambda n, i, o, g: [-0.5 * o[0] ** 3 * g[0]])(
+    _unary(jax.lax.rsqrt))
 register("Greater", device_kinds=("cpu", "tpu", "gpu"))(_binary(jnp.greater))
 register("Less")(_binary(jnp.less))
 register("Equal")(_binary(jnp.equal))
@@ -355,21 +401,24 @@ def _cast(ctx, node, x):
 
 @register("ReduceSum", grad=lambda n, i, o, g: [_reduce_sum_grad(n, i[0], g[0])])
 def _reduce_sum(ctx, node, x):
-    return (jnp.sum(x, axis=node.attrs["axis"]),)
+    return (jnp.sum(x, axis=node.attrs["axis"],
+                    keepdims=bool(node.attrs.get("keepdims", False))),)
 
 
 def _reduce_sum_grad(node, x, g):
     axis = node.attrs["axis"]
     if axis is None:
         return jnp.broadcast_to(g, jnp.shape(x))
-    axes = (axis,) if isinstance(axis, int) else tuple(axis)
-    g = jnp.expand_dims(g, axes)
+    if not node.attrs.get("keepdims", False):
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        g = jnp.expand_dims(g, axes)
     return jnp.broadcast_to(g, jnp.shape(x))
 
 
 @register("ReduceMean", grad=lambda n, i, o, g: [_reduce_mean_grad(n, i[0], g[0])])
 def _reduce_mean(ctx, node, x):
-    return (jnp.mean(x, axis=node.attrs["axis"]),)
+    return (jnp.mean(x, axis=node.attrs["axis"],
+                     keepdims=bool(node.attrs.get("keepdims", False))),)
 
 
 def _reduce_mean_grad(node, x, g):
@@ -384,7 +433,8 @@ def _reduce_mean_grad(node, x, g):
     denom = 1
     for a in axes:
         denom *= shape[a]
-    g = jnp.expand_dims(g, axes)
+    if not node.attrs.get("keepdims", False):
+        g = jnp.expand_dims(g, axes)
     return jnp.broadcast_to(g / denom, shape)
 
 
@@ -425,6 +475,41 @@ def _xent_grad(logits, labels, g):
     for s in logits.shape[:-1]:
         denom *= s
     return g * (p - onehot) / denom
+
+
+@register("SSDScan")
+def _ssd_scan_op(ctx, node, x, dt, A_log, Bc, Cc, D_skip):
+    """Mamba-2 SSD scan, reference semantics (sequential lax.scan over
+    time in f32 — the order-faithful oracle the chunked Pallas kernel is
+    gated against).  Layouts match kernels.ops.ssd_scan: x (B,S,H,P),
+    dt (B,S,H), A_log (H,), Bc/Cc (B,S,G,N), D_skip (H,)."""
+    B, S, H, P = x.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    rep = H // G
+    a = -jnp.exp(A_log.astype(jnp.float32))                      # (H,)
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P).astype(jnp.float32)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S).astype(jnp.float32)
+    af = jnp.tile(a, (B,))                                       # (B*H,)
+    Bf = jnp.repeat(Bc, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(B * H, S, N).astype(jnp.float32)
+    Cf = jnp.repeat(Cc, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(B * H, S, N).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                                    # (BH,·)
+        dA = jnp.exp(dtt * af)
+        state = state * dA[:, None, None] + jnp.einsum(
+            "b,bn,bp->bnp", dtt, Bt, xt)
+        y = jnp.einsum("bn,bnp->bp", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B * H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, (
+        jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, H, S, P) \
+        .transpose(0, 2, 1, 3).astype(x.dtype)
+    return (y + D_skip.astype(y.dtype)[None, None, :, None] * x,)
 
 
 # --- composite (arbitrary pure jax function as a node) ----------------------

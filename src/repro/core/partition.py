@@ -6,7 +6,9 @@ and Recv -> y (on y's device), where Send/Recv coordinate through the
 rendezvous.  All users of a given (tensor, destination-device) pair are
 canonicalised onto a *single* Recv node so each tensor crosses each
 device pair at most once and is allocated once at the destination.
-Cross-device *control* edges become a zero-byte token transfer.
+Cross-device *control* edges become a zero-byte token transfer — frame
+aware: a same-frame edge rides a per-iteration token, an edge leaving a
+loop frame rides an Exit-gated token that fires once at termination.
 
 §4.4 distributed control flow: when a while-loop's body straddles
 devices, the loop's Enter/Merge/Switch/Exit control skeleton is
@@ -176,6 +178,45 @@ def partition(
         n_transfers += 1
         return recv.name
 
+    # §4.4 control edges out of a loop frame: an Exit-gated token.  A
+    # root-depth ctok Const with a control dep on an in-frame producer
+    # would never be satisfied (the producer fires at frame depth d+1,
+    # the executor only delivers control to consumers at the same depth)
+    # and the consumer's device would hang.  Instead: (a) the producer
+    # becomes a control input of the frame's NextIteration on its device
+    # — iteration k+1 cannot start before the producer's k-th firing, so
+    # every iteration happens-before the terminating Switch — and (b) a
+    # dedicated Exit on Switch:0 yields a token that is dead on every
+    # continuing iteration and live exactly once, at termination, at root
+    # depth, which is where the consumer waits.
+    exit_tokens: Dict[Tuple[str, str], TensorRef] = {}
+
+    def get_exit_token(lname: str, dev: str, ctrl_src: str) -> TensorRef:
+        sw_ref = frame_tokens.get((lname, dev))
+        if sw_ref is None:
+            raise GraphError(
+                f"no iteration token for frame {lname!r} on {dev!r} "
+                f"(control edge from {ctrl_src!r} leaves the loop frame)")
+        sw = sw_ref.node
+        # the frame's NextIteration pairs with its Switch by name on both
+        # the home ({lname}/next{i} vs {lname}/switch{i}) and replicated
+        # ({pfx}/next vs {pfx}/switch) skeletons
+        nxt = "next".join(sw.rsplit("switch", 1))
+        if nxt not in pg.nodes:
+            raise GraphError(
+                f"cannot find NextIteration for switch {sw!r} of frame "
+                f"{lname!r} (control edge from {ctrl_src!r})")
+        if ctrl_src not in pg.nodes[nxt].control_inputs:
+            pg.nodes[nxt].control_inputs.append(ctrl_src)
+        key = (lname, dev)
+        if key not in exit_tokens:
+            ex = pg.add_node("Exit", [TensorRef(sw, 0)],
+                             name=f"{lname}/ctl_exit{len(exit_tokens)}",
+                             device=dev)
+            place[ex.name] = dev
+            exit_tokens[key] = ex.ref
+        return exit_tokens[key]
+
     for name in list(names):
         node = pg.nodes[name]
         dst_dev = place[name]
@@ -189,12 +230,46 @@ def partition(
         new_ctrl: List[str] = []
         for c in node.control_inputs:
             if c in names and place[c] != dst_dev:
-                # zero-byte control token across devices
                 src_dev = place[c]
-                tok = pg.add_node("Const", [], name=f"ctok/{c}/{name}",
-                                  attrs={"value": 0}, control_inputs=[c], device=src_dev)
-                place[tok.name] = src_dev
-                recv_name = get_recv(tok.ref, dst_dev)
+                src_f = frames.get(c, ())
+                dst_f = frames.get(name, ())
+                if len(src_f) > 1:
+                    raise GraphError(
+                        f"control edge {c} -> {name} leaves a nested loop "
+                        f"frame {src_f!r}; nested multi-device loops are "
+                        "not supported yet")
+                if not src_f:
+                    # root-frame producer: zero-byte control token
+                    tok = pg.add_node(
+                        "Const", [], name=f"ctok/{c}/{name}",
+                        attrs={"value": 0}, control_inputs=[c],
+                        device=src_dev)
+                    place[tok.name] = src_dev
+                    recv_name = get_recv(tok.ref, dst_dev)
+                elif dst_f == src_f:
+                    # same frame, different device: a per-iteration token
+                    # gated by the source device's iteration Switch so it
+                    # fires (and dies) in the right iteration context
+                    sw_ref = frame_tokens.get((src_f[-1], src_dev))
+                    if sw_ref is None:
+                        raise GraphError(
+                            f"no iteration token for frame {src_f[-1]!r} "
+                            f"on {src_dev!r} (control edge {c} -> {name})")
+                    tok = pg.add_node(
+                        "Identity", [sw_ref], name=f"ctok/{c}/{name}",
+                        control_inputs=[c], device=src_dev)
+                    place[tok.name] = src_dev
+                    frames[tok.name] = src_f
+                    recv_name = get_recv(tok.ref, dst_dev)
+                elif not dst_f:
+                    # in-frame producer, root-frame consumer
+                    recv_name = get_recv(
+                        get_exit_token(src_f[-1], src_dev, c), dst_dev)
+                else:
+                    raise GraphError(
+                        f"control edge {c} -> {name} crosses loop frames "
+                        f"{src_f!r} -> {dst_f!r}; route it through a loop "
+                        "output instead")
                 new_ctrl.append(recv_name)
             else:
                 new_ctrl.append(c)

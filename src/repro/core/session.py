@@ -26,6 +26,7 @@ from .graph import Graph, Node, TensorRef, as_ref
 from .executor import ExecutionContext, Executor
 from .executable import Executable, ExecutableCache, RunSignature
 from . import ops as ops_mod
+from . import kernel_registry
 from ..runtime.containers import VariableStore, ContainerManager
 from ..runtime.rendezvous import Rendezvous
 
@@ -78,7 +79,8 @@ class Session:
                  max_cached_executables: int = 16,
                  fuse_regions: Optional[bool] = None,
                  numerics: Optional[str] = None,
-                 parity_guard: Any = None) -> None:
+                 parity_guard: Any = None,
+                 backend: Optional[str] = None) -> None:
         self.graph = graph or Graph()
         # §10 region fusion (DESIGN.md §7): default-on; per-Session
         # escape hatch via fuse_regions=False, process-wide via
@@ -107,6 +109,15 @@ class Session:
         if parity_guard is None:
             parity_guard = os.environ.get("REPRO_NUMERICS_GUARD", "1")
         self.parity_guard, self.parity_guard_every = _parse_guard(parity_guard)
+        # Kernel-backend registry (DESIGN.md §12): which kernel backend
+        # fused-region lowering dispatches recognized idioms onto.
+        # "generic" = plain jnp/XLA; "pallas" = the hand-written kernels.
+        # Part of the RunSignature, so flipping backends never reuses a
+        # stale Executable.
+        if backend is None:
+            backend = os.environ.get("REPRO_KERNEL_BACKEND", "generic")
+        kernel_registry.get_backend(backend)  # raises ValueError if unknown
+        self.kernel_backend = backend
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
         self.rendezvous = Rendezvous()

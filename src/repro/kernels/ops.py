@@ -27,6 +27,23 @@ def rmsnorm(x, w, *, eps: float = 1e-5, interpret: bool = False):
     return rmsnorm_pallas(x2, w, eps=eps, interpret=interpret).reshape(shape)
 
 
+def attention(q, kT, v, *, scale=None, interpret: bool = False):
+    """2-D single-head attention over the graph idiom:
+    ``softmax(q @ kT * scale) @ v`` with q (S,D), kT (D,T), v (T,D).
+
+    The flash kernel bakes 1/sqrt(D) and takes (BH, S, D) k/v — fold the
+    graph's scale into q (cancelling the baked one) and adapt layouts.
+    """
+    S, D = q.shape
+    T = kT.shape[1]
+    sc = (1.0 if scale is None else scale) * (D ** 0.5)
+    qf = (q * jnp.asarray(sc, q.dtype)).reshape(1, S, D)
+    kf = kT.T.reshape(1, T, D)
+    vf = v.reshape(1, T, v.shape[-1])
+    return flash_attention_pallas(qf, kf, vf, causal=False, window=0,
+                                  interpret=interpret)[0]
+
+
 def flash_attention_gqa(q, k, v, *, causal=True, window=0,
                         head_mask=None, interpret: bool = False):
     """q (B,S,KVp,G,Dh), k/v (B,T,KVp,Dh) — the models.layers layout."""

@@ -180,3 +180,48 @@ def test_zero_iteration_two_device_loop():
     b, outs = _split_loop(split=True, limit=0)
     multi = Session(b.graph, devices=_two_workers()).run(outs)
     assert int(multi[0]) == 0 and float(multi[1]) == 0.0
+
+
+def test_control_edge_out_of_loop_frame_to_other_device():
+    """Regression: a control edge whose producer lives inside a loop frame
+    and whose consumer sits at root depth on ANOTHER device used to hang —
+    the partitioner materialised a frame-blind ctok Const whose delivery
+    could never satisfy the consumer's exec-depth check.  The edge is now
+    routed through an Exit-gated token: the consumer fires exactly once,
+    after the final iteration of the producer."""
+    b, outs = _split_loop(split=True, limit=3)
+    after = b.constant(jnp.array(7.0), name="after", device=T0)
+    gated = b.graph.add_node("Add", [after, after], name="gated",
+                             control_inputs=["body/inc"], device=T0)
+    sess = Session(b.graph, devices=_two_workers())
+    exe = sess.executable([outs[0], outs[1], gated.ref], frozenset())
+    vals = exe.run({}, timeout=20)  # bounded: a regression hangs, not fails
+    assert int(vals[0]) == 3
+    assert float(vals[1]) == 0.0 + 1.0 + 4.0  # 0^2 + 1^2 + 2^2
+    assert float(vals[2]) == 14.0
+    # the gate is structural: an Exit-gated token exists in the partition
+    p = exe.partitioned
+    assert any(p.graph.nodes[n].op == "Exit" and "/ctl_exit" in n
+               for n in p.graph.nodes), "control edge not Exit-gated"
+
+
+def test_same_frame_cross_device_control_edge():
+    """A control edge between two body nodes on different devices must be
+    honoured per iteration (token rides the frame's iteration skeleton)."""
+    b = GraphBuilder()
+    i0 = b.constant(jnp.array(0), name="i0", device=T0)
+    acc0 = b.constant(jnp.array(0.0), name="acc0", device=T0)
+    lim = b.constant(jnp.array(4), name="lim")
+    half = b.constant(jnp.array(0.5), name="half")
+    one = b.constant(jnp.array(1), name="one")
+
+    def body(i, a):
+        ii = b.add(i, one, name="body/inc", device=T1)
+        aa = b.graph.add_node("Add", [a, half], name="body/acc",
+                              control_inputs=["body/inc"], device=T0)
+        return [ii, aa]
+
+    outs = while_loop(b, lambda i, a: b.less(i, lim), body, [i0, acc0])
+    sess = Session(b.graph, devices=_two_workers())
+    vals = sess.run(outs)
+    assert int(vals[0]) == 4 and float(vals[1]) == 2.0

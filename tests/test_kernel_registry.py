@@ -1,0 +1,269 @@
+"""Pluggable kernel-backend registry (DESIGN.md §12).
+
+Contract under test: fused-fast regions lowered under a non-generic
+backend dispatch pattern-matched subgraphs (MatMul chains, rmsnorm,
+softmax-attention, ssd_scan) onto the hand-written Pallas kernels; every
+result stays within the per-backend calibrated tolerances of both the
+generic lowering and the kernels/ref.py oracles; anything the matcher or
+the trace-time feasibility checks reject falls back to the generic
+compute path; and the backend choice joins the RunSignature so cached
+plans never leak across backends.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import GraphBuilder, Session
+from repro.core import kernel_registry as kr
+from repro.core import numerics as num
+from repro.kernels import ref as kref
+
+RNG = np.random.default_rng(7)
+
+
+def _f32(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32) * scale)
+
+
+def _pallas_tol(cls):
+    return num.tolerance_table("cpu", backend="pallas")[cls]
+
+
+def _assert_close(ref, got, cls):
+    ok, drift = num.compare([np.asarray(ref)], [np.asarray(got)],
+                            _pallas_tol(cls))
+    assert ok, f"{cls} drift {drift} exceeds pallas tolerance"
+
+
+def _run_pair(build, fetch_names, feeds=None):
+    """Run the same graph under backend=pallas and backend=generic, both
+    fused-fast, and return (pallas_vals, generic_vals, dispatched_delta)."""
+    vals = {}
+    for backend in ("pallas", "generic"):
+        b = GraphBuilder()
+        handles = build(b)
+        sess = Session(b.graph, numerics="fast", parity_guard=False,
+                       backend=backend)
+        before = kr.dispatch_counts(backend)
+        fd = {handles[k].ref: v for k, v in (feeds or {}).items()}
+        out = sess.run([handles[n].ref for n in fetch_names], fd)
+        after = kr.dispatch_counts(backend)
+        delta = {k: after.get(k, 0) - before.get(k, 0)
+                 for k in after if after.get(k, 0) > before.get(k, 0)}
+        vals[backend] = (out, delta)
+    p_out, p_delta = vals["pallas"]
+    g_out, g_delta = vals["generic"]
+    assert not g_delta, "generic backend must never dispatch kernels"
+    return p_out, g_out, p_delta
+
+
+# ---------------------------------------------------------------------------
+# backend selection plumbing
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        Session(backend="cuda")
+
+
+def test_env_var_selects_backend(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas")
+    assert Session().kernel_backend == "pallas"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "rocm")
+    with pytest.raises(ValueError, match="backend"):
+        Session()
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    assert Session().kernel_backend == "generic"
+    assert set(kr.available_backends()) >= {"generic", "pallas"}
+
+
+def test_backend_flip_misses_executable_cache():
+    """kernel_backend is part of the RunSignature: a stale pallas plan
+    silently serving generic (or vice versa) would bypass the per-backend
+    tolerance calibration."""
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    w = b.constant(_f32(32, 32, scale=0.2), name="w")
+    out = b.reduce_sum(b.matmul(x, w, name="mm"), name="out")
+    sess = Session(b.graph, numerics="fast", parity_guard=False,
+                   backend="pallas")
+    X = _f32(32, 32)
+    v1 = sess.run(out.ref, {x.ref: X})
+    exe_p = sess.executable([out.ref], frozenset({x.ref}))
+    sess.kernel_backend = "generic"
+    v2 = sess.run(out.ref, {x.ref: X})
+    exe_g = sess.executable([out.ref], frozenset({x.ref}))
+    assert exe_g is not exe_p
+    sess.kernel_backend = "pallas"
+    assert sess.executable([out.ref], frozenset({x.ref})) is exe_p
+    _assert_close(v2, v1, "matmul")
+
+
+def test_strict_numerics_never_dispatches():
+    """The registry is a fast-numerics optimisation: strict sessions lower
+    every region generically regardless of the configured backend."""
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    w = b.constant(_f32(32, 32), name="w")
+    out = b.matmul(x, w, name="mm")
+    sess = Session(b.graph, numerics="strict", backend="pallas")
+    before = kr.dispatch_total("pallas")
+    sess.run(out.ref, {x.ref: _f32(16, 32)})
+    assert kr.dispatch_total("pallas") == before
+
+
+# ---------------------------------------------------------------------------
+# per-pattern parity: pallas vs generic lowering vs kernels/ref oracles
+
+
+def test_matmul_pattern_parity():
+    A, B = _f32(64, 32), _f32(32, 48)
+
+    def build(b):
+        x = b.placeholder("x")
+        w = b.constant(B, name="w")
+        y = b.matmul(x, w, name="y")
+        z = b.add(y, y, name="z")  # keep the region >1 op so it fuses
+        return {"x": x, "z": z}
+
+    p, g, delta = _run_pair(build, ["z"], feeds={"x": A})
+    assert "matmul" in delta
+    _assert_close(g[0], p[0], "matmul")
+    _assert_close(kref.matmul_ref(A, B) * 2, p[0], "matmul")
+
+
+def test_rmsnorm_pattern_parity():
+    X = _f32(64, 128)
+    W = jnp.asarray(np.abs(RNG.standard_normal(128)).astype(np.float32) + 0.5)
+
+    def build(b):
+        x = b.placeholder("x")
+        w = b.constant(W, name="w")
+        y = b.rmsnorm(x, w, name="y")
+        return {"x": x, "y": y}
+
+    p, g, delta = _run_pair(build, ["y"], feeds={"x": X})
+    assert "rmsnorm" in delta
+    _assert_close(g[0], p[0], "reduction")
+    _assert_close(kref.rmsnorm_ref(X, W), p[0], "reduction")
+
+
+def test_attention_pattern_parity():
+    S, D = 64, 32
+    Q, KT, V = _f32(S, D), _f32(D, S), _f32(S, D)
+    scale = 1.0 / float(np.sqrt(D))
+
+    def build(b):
+        q = b.placeholder("q")
+        kT = b.constant(KT, name="kT")
+        v = b.constant(V, name="v")
+        y = b.attention(q, kT, v, scale=scale, name="y")
+        return {"q": q, "y": y}
+
+    p, g, delta = _run_pair(build, ["y"], feeds={"q": Q})
+    assert "flash_attention" in delta
+    _assert_close(g[0], p[0], "softmax")
+    oracle = kref.flash_attention_ref(
+        Q.reshape(1, S, D), KT.T.reshape(1, S, D), V.reshape(1, S, D),
+        causal=False)[0]
+    _assert_close(oracle, p[0], "softmax")
+
+
+def test_ssd_pattern_parity():
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 8
+    X = _f32(B, S, H, P)
+    DT = jnp.asarray(np.abs(RNG.standard_normal((B, S, H))).astype(
+        np.float32) * 0.1)
+    A_log = _f32(H, scale=0.1)
+    Bc, Cc = _f32(B, S, G, N), _f32(B, S, G, N)
+    D_skip = _f32(H, scale=0.1)
+
+    def build(b):
+        x = b.placeholder("x")
+        y = b.ssd_scan(x, b.constant(DT, name="dt"),
+                       b.constant(A_log, name="al"),
+                       b.constant(Bc, name="B"), b.constant(Cc, name="C"),
+                       b.constant(D_skip, name="D"), name="y")
+        tot = b.reduce_sum(y, name="tot")
+        return {"x": x, "y": y, "tot": tot}
+
+    p, g, delta = _run_pair(build, ["y", "tot"], feeds={"x": X})
+    assert "ssd_scan" in delta
+    _assert_close(g[0], p[0], "scan")
+    _assert_close(g[1], p[1], "scan")
+
+
+def test_full_lm_block_dispatches_three_kernels():
+    """The b8 shape: rmsnorm -> q-proj -> attention -> residual should hit
+    three distinct registered kernels in one fused region."""
+    S, D = 64, 32
+    X, KT, V = _f32(S, D), _f32(D, S), _f32(S, D)
+    W = jnp.asarray(np.abs(RNG.standard_normal(D)).astype(np.float32) + 0.5)
+    Wq = _f32(D, D, scale=0.2)
+
+    def build(b):
+        x = b.placeholder("x")
+        xn = b.rmsnorm(x, b.constant(W, name="w"), name="xn")
+        q = b.matmul(xn, b.constant(Wq, name="Wq"), name="q")
+        att = b.attention(q, b.constant(KT, name="kT"),
+                          b.constant(V, name="v"),
+                          scale=1.0 / float(np.sqrt(D)), name="att")
+        y = b.add(att, x, name="y")
+        return {"x": x, "y": y}
+
+    p, g, delta = _run_pair(build, ["y"], feeds={"x": X})
+    assert {"rmsnorm", "matmul", "flash_attention"} <= set(delta)
+    _assert_close(g[0], p[0], "softmax")
+
+
+# ---------------------------------------------------------------------------
+# fallback + matcher internals
+
+
+def test_infeasible_shape_falls_back_to_generic():
+    """K=192 violates the Pallas block constraint (>128 and not a
+    multiple): the emit hook declines at trace time, the fallback counter
+    moves, and the generic path still produces the right answer."""
+    A, B = _f32(64, 192), _f32(192, 64)
+
+    def build(b):
+        x = b.placeholder("x")
+        w = b.constant(B, name="w")
+        z = b.add(b.matmul(x, w, name="y"), b.constant(
+            jnp.float32(0.0), name="c"), name="z")
+        return {"x": x, "z": z}
+
+    before = kr.STATS["fallbacks"]
+    b = GraphBuilder()
+    handles = build(b)
+    sess = Session(b.graph, numerics="fast", parity_guard=False,
+                   backend="pallas")
+    out = sess.run(handles["z"].ref, {handles["x"].ref: A})
+    assert kr.STATS["fallbacks"] > before
+    _assert_close(kref.matmul_ref(A, B), out, "matmul")
+
+
+def test_feasibility_rule():
+    assert kr._feasible(64, 128, 256)
+    assert not kr._feasible(192)          # >128, not a multiple
+    assert not kr._feasible(0)
+    assert kr._feasible(200, block=256)   # fits inside one block
+
+
+def test_plan_claims_interior_of_larger_match():
+    """The q-projection MatMul inside an attention idiom anchors its own
+    rule, but attention's scores-MatMul is interior to the attention match
+    and must NOT be dispatched separately."""
+    b = GraphBuilder()
+    x = b.placeholder("x")
+    q = b.matmul(x, b.constant(_f32(32, 32), name="Wq"), name="q")
+    att = b.attention(q, b.constant(_f32(32, 64), name="kT"),
+                      b.constant(_f32(64, 32), name="v"),
+                      scale=0.125, name="att")
+    g = b.graph
+    members = [n for n in g.topo_sort() if g.nodes[n].op != "Placeholder"]
+    overrides = kr.plan_region_overrides(g, members, "pallas", "cpu")
+    assert set(overrides) == {"q", "att"}
+    assert "att/scores" not in overrides
+    assert kr.plan_region_overrides(g, members, "generic", "cpu") == {}

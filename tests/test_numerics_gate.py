@@ -85,15 +85,14 @@ def test_compare_scale_relative_absorbs_near_zero_elements():
 
 
 def test_compare_exact_for_non_float_and_structure():
-    ok, _ = num.compare([np.arange(4)], [np.arange(4)],
-                        num.TOLERANCES["elementwise"])
+    tol = num.TOLERANCES["cpu"]["elementwise"]
+    ok, _ = num.compare([np.arange(4)], [np.arange(4)], tol)
     assert ok
-    ok, drift = num.compare([np.arange(4)], [np.arange(1, 5)],
-                            num.TOLERANCES["elementwise"])
+    ok, drift = num.compare([np.arange(4)], [np.arange(1, 5)], tol)
     assert not ok and np.isinf(drift.ulp)
-    ok, _ = num.compare([None], [None], num.TOLERANCES["elementwise"])
+    ok, _ = num.compare([None], [None], tol)
     assert ok
-    ok, _ = num.compare([None, 1.0], [1.0], num.TOLERANCES["elementwise"])
+    ok, _ = num.compare([None, 1.0], [1.0], tol)
     assert not ok
 
 
@@ -102,19 +101,35 @@ def test_compare_handles_pytrees():
     got = {"a": np.float32(1.0),
            "b": [np.ones(3, np.float32)
                  + np.float32(1e-7)]}
-    ok, drift = num.compare(ref, got, num.TOLERANCES["reduction"])
+    ok, drift = num.compare(ref, got, num.TOLERANCES["cpu"]["reduction"])
     assert ok and drift.ulp > 0
 
 
 def test_tolerance_for_ops_merges_loosest_class():
+    cpu = num.TOLERANCES["cpu"]
     t_elem = num.tolerance_for_ops({"Add", "Mul", "Relu"})
-    assert t_elem == num.TOLERANCES["elementwise"]
+    assert t_elem == cpu["elementwise"]
     t_mm = num.tolerance_for_ops({"Add", "MatMul"})
-    assert t_mm.ulp == max(num.TOLERANCES["matmul"].ulp,
-                           num.TOLERANCES["elementwise"].ulp)
+    assert t_mm.ulp == max(cpu["matmul"].ulp, cpu["elementwise"].ulp)
     # softmax dominates matmul in both bounds
     t_all = num.tolerance_for_ops({"MatMul", "SoftMax", "ReduceSum"})
-    assert t_all.ulp >= num.TOLERANCES["softmax"].ulp
+    assert t_all.ulp >= cpu["softmax"].ulp
+
+
+def test_tolerance_table_device_and_backend_keying():
+    """TPU tables are looser than CPU; a backend calibration overlays
+    loosest-wins on top of the device table."""
+    cpu = num.tolerance_table("cpu")
+    tpu = num.tolerance_table("tpu")
+    assert set(cpu) == set(tpu)
+    assert tpu["matmul"].ulp >= cpu["matmul"].ulp
+    pal = num.tolerance_table("cpu", backend="pallas")
+    for cls, tol in pal.items():
+        assert tol.ulp >= cpu[cls].ulp and tol.rel >= cpu[cls].rel
+    assert pal["softmax"].ulp > cpu["softmax"].ulp
+    # merging across device kinds keeps the loosest bound
+    t = num.tolerance_for_ops({"MatMul"}, device_kinds=("cpu", "tpu"))
+    assert t.ulp == tpu["matmul"].ulp
 
 
 # ---------------------------------------------------------------------------
@@ -128,11 +143,11 @@ def test_parity_gate_passes_on_representative_suite():
     # every case fused something (never vacuous) ...
     assert all(c.regions >= 1 and c.ops_fused >= 2 for c in report.cases)
     # ... and the suite exercised every tolerance class
-    assert set(report.per_class) == set(num.TOLERANCES)
+    assert set(report.per_class) == set(num.tolerance_table())
     # the structured report round-trips
     js = report.to_json()
     assert js["passed"] and set(js["max_drift_per_class"]) == set(
-        num.TOLERANCES)
+        num.tolerance_table())
     assert "PASS" in report.to_markdown()
 
 
@@ -354,7 +369,7 @@ def test_compare_bf16_judged_in_native_ulps():
     must scale to the narrower mantissa (2048 fp32-ULPs carried over to
     bf16 verbatim would span ~16 binades and check nothing)."""
     ml_dtypes = pytest.importorskip("ml_dtypes")
-    tol = num.TOLERANCES["call"]
+    tol = num.TOLERANCES["cpu"]["call"]
     a = np.array([1.0], ml_dtypes.bfloat16)
     one_ulp = np.array([1.0078125], ml_dtypes.bfloat16)
     ok, drift = num.compare([a], [one_ulp], tol)
