@@ -83,10 +83,13 @@ class RunSignature:
         fp = devs.fingerprint() if devs is not None else ()
         cluster = getattr(session, "cluster", None)
         if cluster is not None:
-            # §3.3/DESIGN.md §11: the cluster spec is part of the device
-            # fingerprint — rebinding a session to a different pool (or a
-            # restarted one on new ports) must rebuild Executables, since
-            # their WirePlans hold per-worker registrations
+            # §3.3/DESIGN.md §13: the cluster's SHAPE (task count, devices
+            # per task, kind) is part of the device fingerprint — a
+            # different topology must rebuild Executables.  Endpoints are
+            # deliberately absent: partial re-placement and whole-pool
+            # rebinds keep cached Executables (placement depends only on
+            # virtual device names) and re-register through the master's
+            # generation counter / per-task re-registration instead
             fp = tuple(fp) + cluster.fingerprint()
         return RunSignature(
             fetches=tuple(fetch_refs),
@@ -256,6 +259,10 @@ class Executable:
                 from ..distrib.master import WirePlan
 
                 self.wire_plan = WirePlan(self, device_nodes)
+                # kept for the §13 distributed parity guard: the strict
+                # reference plan is built lazily from the same partition
+                self._wire_device_nodes = device_nodes
+                self._wire_strict: Optional[WirePlan] = None
                 self._init_parity_guard(session)
                 return
             if self.fuse_regions:
@@ -313,9 +320,13 @@ class Executable:
         # didn't).  A breach warns and permanently falls back to strict
         # (unfused) execution.  Skipped when the executed set contains
         # ops whose side effects cannot be replayed (queues, checkpoint
-        # IO) — the CI parity gate still covers those op classes — and
-        # for cluster executions (Variable state lives in the worker
-        # processes; the reference would run against stale local state).
+        # IO) — the CI parity gate still covers those op classes.
+        # Cluster Executables get the DISTRIBUTED guard (§13): Variable
+        # state lives worker-side, so the snapshot/restore rides
+        # get_variables/set_variables and the reference is a strict wire
+        # run of the same partition (strict == unfused bit-for-bit, §7);
+        # a breach demotes to the strict WirePlan, never to local
+        # execution (which would desync from worker-side state).
         self._strict_fallback = False
         self._parity_pending = False
         self._guard_lock = threading.Lock()
@@ -323,8 +334,9 @@ class Executable:
         self._guard_tol = None
         self._guard_every: Optional[int] = None
         self._guard_runs = 0
-        if (self.numerics == "fast" and self.fusion is not None
-                and self.fusion.regions and self.wire_plan is None
+        fused = self.fusion is not None and self.fusion.regions
+        if (self.numerics == "fast"
+                and (fused or self.wire_plan is not None)
                 and getattr(session, "parity_guard", False)):
             ops = {session.graph.nodes[n].op for n in self.node_set}
             if not ops & GUARD_UNSAFE:
@@ -365,6 +377,16 @@ class Executable:
                 raise ExecutorError(
                     "trace=/tracer= are not supported for cluster execution "
                     "(run without cluster= for per-kernel EEG tracing)")
+            if self._strict_fallback:
+                # §13 breach demotion: route through the strict wire plan
+                # (same partition, strict numerics worker-side) — NOT the
+                # local unfused pipeline, which would run against stale
+                # master-side Variable state
+                return self._wire_strict_plan().run(feeds, timeout=timeout)
+            if self._parity_pending:
+                return self._guarded_wire_run(feeds, timeout)
+            if self._sample_due():
+                return self._guarded_wire_run(feeds, timeout, sampled=True)
             return self.wire_plan.run(feeds, timeout=timeout)
         if tracer is not None and self.fusion is not None:
             # per-kernel tracing: run the faithful unfused interpretation
@@ -481,6 +503,72 @@ class Executable:
                 # guard unverified and race the comparison; and if either
                 # execution raised above, the Executable stays pending so
                 # the next run re-verifies
+                self._parity_pending = False
+                return ref
+            self._parity_pending = False
+            return got
+
+    # ------------------------------------------------------------------
+    def _wire_strict_plan(self):
+        """Companion strict-numerics WirePlan over the same partition —
+        the §13 distributed guard's reference pipeline and the
+        post-breach fallback.  Registered lazily, on first need."""
+        from ..distrib.master import WirePlan
+
+        with self._unfused_lock:
+            if self._wire_strict is None:
+                self._wire_strict = WirePlan(
+                    self, self._wire_device_nodes, numerics="strict")
+            return self._wire_strict
+
+    def _guarded_wire_run(self, feeds: Dict[TensorRef, Any],
+                          timeout: float, *, sampled: bool = False) -> List[Any]:
+        """The §9 parity guard, distributed (§13): Variable state lives in
+        the worker processes, so the snapshot/rewind rides
+        ``get_variables``/``set_variables`` and the strict reference is a
+        wire run of the same partition under strict numerics (workers
+        re-fuse strict, which is bit-identical to unfused; §7).  Both
+        executions therefore observe identical worker-side starting
+        state.  A breach warns, force-restores the reference's Variable
+        values, and demotes this Executable to the strict plan."""
+        with self._guard_lock:
+            if not sampled and not self._parity_pending:
+                # raced with another first run
+                if self._strict_fallback:
+                    return self._wire_strict_plan().run(feeds, timeout=timeout)
+                return self.wire_plan.run(feeds, timeout=timeout)
+            from . import numerics as numerics_mod
+
+            plan = self.wire_plan
+            strict = self._wire_strict_plan()
+            # register (and SEED Variables) before snapshotting: on the
+            # very first run nothing exists worker-side yet, and the
+            # reference run below mutates the real worker state
+            plan.ensure_registered()
+            strict.ensure_registered()
+            snap = plan.snapshot_variables(self._guard_vars)
+            ref = strict.run(feeds, timeout=timeout)
+            ref_vars = plan.snapshot_variables(self._guard_vars)
+            plan.restore_variables(snap)
+            got = plan.run(feeds, timeout=timeout)
+            got_vars = plan.snapshot_variables(self._guard_vars)
+            names = sorted(set(ref_vars) & set(got_vars))
+            ok, drift = numerics_mod.compare(
+                list(ref) + [ref_vars[n] for n in names],
+                list(got) + [got_vars[n] for n in names],
+                self._guard_tol)
+            if not ok:
+                import warnings
+
+                warnings.warn(
+                    f"fast-numerics parity breach (distributed): fused-fast "
+                    f"drifted {drift} from the strict wire reference, beyond "
+                    f"the {self._guard_tol} tolerance for this graph's op "
+                    f"classes; falling back to strict wire execution for "
+                    f"fetches {[str(r) for r in self.fetches]} "
+                    f"(DESIGN.md §9/§13)", RuntimeWarning, stacklevel=3)
+                self._strict_fallback = True
+                plan.restore_variables(ref_vars)
                 self._parity_pending = False
                 return ref
             self._parity_pending = False

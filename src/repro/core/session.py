@@ -76,6 +76,7 @@ class Session:
                  checkpoint_io: Any = None,
                  devices: Any = None,
                  cluster: Any = None,
+                 standby: Any = (),
                  max_cached_executables: int = 16,
                  fuse_regions: Optional[bool] = None,
                  numerics: Optional[str] = None,
@@ -143,6 +144,11 @@ class Session:
             # not silently share state through colliding Variable names.
             # Stable across pool restarts (recovery keeps the session).
             self.wire_namespace = uuid.uuid4().hex[:8]
+        # §13: endpoints of idle standby workers — partial re-placement
+        # consumes them before falling back to survivor hosting
+        if isinstance(standby, str):
+            standby = [s.strip() for s in standby.split(",") if s.strip()]
+        self.standby = list(standby)
         self.devices = devices  # DeviceSet for the multi-device eager path
         self.id = next(Session._ids)
         self._run_count = 0
@@ -160,7 +166,7 @@ class Session:
         if self._master is None:
             from ..distrib.master import Master
 
-            self._master = Master(self.cluster)
+            self._master = Master(self.cluster, standbys=self.standby)
             self._master.start()
         return self._master
 
@@ -186,6 +192,86 @@ class Session:
         # restore the checkpoint into the session store BEFORE calling
         for plan in self.master.live_plans():
             plan.push_variables()
+
+    def recover_dead_tasks(self, checkpoint: Optional[Dict[str, Any]] = None,
+                           *, standby: Any = None):
+        """§13 partial re-placement: recover from dead workers WITHOUT
+        restarting the pool or discarding survivors' live Variable state.
+
+        Each dead task's subgraph slice is re-placed onto a standby
+        worker (``standby=`` here, ``Session(standby=...)``, or
+        ``master.add_standby``) or, failing that, onto a survivor's
+        process; only the dead task's Variables are pushed from
+        ``checkpoint`` (``{name: value}`` — typically the last
+        checkpoint's values), survivors keep live state, and only the
+        replaced task re-registers — cached Executables stay valid.
+
+        Returns a :class:`~repro.distrib.master.RecoveryReport` saying
+        what was kept vs restored.  Raises
+        :class:`~repro.distrib.master.RecoveryError` when nothing can
+        host the dead tasks — the whole-pool path (restart workers,
+        ``set_variable`` the checkpoint, ``rebind_cluster``) remains the
+        fallback.
+        """
+        from ..distrib.master import RecoveryError, RecoveryReport
+
+        m = self.master
+        if isinstance(standby, str):
+            standby = [s.strip() for s in standby.split(",") if s.strip()]
+        for ep in (standby or ()):
+            m.add_standby(ep)
+        dead = dict(m.dead)
+        if not dead:
+            return RecoveryReport(
+                mode="noop", dead={}, replacements={},
+                survivors=tuple(range(len(m.cluster.workers))),
+                kept_live=(), restored=())
+        survivors = tuple(t for t in range(len(m.cluster.workers))
+                          if t not in dead)
+        plans = m.live_plans()
+        replacements: Dict[str, Any] = {}
+        for i, t in enumerate(sorted(dead)):
+            if m.standbys:
+                replacements[t] = m.standbys.pop(0)
+            elif survivors:
+                # round-robin over survivors: the replacement process then
+                # hosts two tasks' devices of the same plan (worker
+                # registry is keyed by (handle, task))
+                replacements[t] = m.cluster.workers[survivors[i % len(survivors)]]
+            else:
+                raise RecoveryError(
+                    f"§13: no standby or survivor can host dead task(s) "
+                    f"{sorted(dead)} ("
+                    + "; ".join(f"task:{k}: {v}" for k, v in sorted(dead.items()))
+                    + ") — fall back to whole-pool recovery: restart the "
+                    f"pool, restore the last checkpoint (set_variable) and "
+                    f"rebind_cluster")
+        # restore ONLY the dead tasks' Variables into the session store;
+        # survivors' names in the checkpoint are ignored — their live
+        # (newer) worker-side state is the whole point of this path
+        dead_owned = {name for plan in plans
+                      for name, owner in plan.var_owner.items()
+                      if owner in dead}
+        if checkpoint:
+            for name in sorted(dead_owned & set(checkpoint)):
+                self.set_variable(name, checkpoint[name])
+        for t, ep in sorted(replacements.items()):
+            m.replace_task(t, ep)
+        self.cluster = m.cluster  # same shape: fingerprint (and cache) hold
+        kept: set = set()
+        for plan in plans:
+            for t in sorted(replacements):
+                plan.reregister_task(t)
+            plan.update_survivors(set(replacements))
+            # registration only SEEDs: force-push the restored values — a
+            # survivor hosting the dead task may hold stale state for it
+            plan.push_variables(tasks=set(replacements))
+            kept |= {name for name, owner in plan.var_owner.items()
+                     if owner not in dead}
+        return RecoveryReport(
+            mode="partial", dead=dead, survivors=survivors,
+            replacements=replacements, kept_live=tuple(sorted(kept)),
+            restored=tuple(sorted(dead_owned)))
 
     def pull_cluster_variables(self) -> Dict[str, Any]:
         """Fetch Variable state back from the worker pool into the local

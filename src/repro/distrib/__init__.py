@@ -6,16 +6,22 @@ Public surface:
   Worker                      one task's server process (also a CLI:
                               ``python -m repro.distrib.worker``)
   Master / WirePlan           heartbeat monitor + per-Executable shipping
+  RecoveryError /             §13 partial re-placement: raised when nothing
+  RecoveryReport              can host a dead task / what was kept vs restored
+  FaultPlan / faults          §13 deterministic fault injection (REPRO_FAULTS)
   start_worker_processes /    local pool helpers for tests, examples and
   stop_worker_processes       the CI 2-process smoke job
 """
+from . import faults
+from .faults import FaultPlan
 from .wire import ClusterSpec, WireRendezvous
 from .worker import Worker, start_worker_processes, stop_worker_processes
-from .master import Master, WirePlan
+from .master import Master, WirePlan, RecoveryError, RecoveryReport
 from .protocol import Channel, ProtocolError, WorkerError, encode_tensor, decode_tensor
 
 __all__ = [
     "ClusterSpec", "WireRendezvous", "Worker", "Master", "WirePlan",
+    "RecoveryError", "RecoveryReport", "FaultPlan", "faults",
     "Channel", "ProtocolError", "WorkerError",
     "encode_tensor", "decode_tensor",
     "start_worker_processes", "stop_worker_processes",

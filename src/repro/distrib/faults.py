@@ -1,0 +1,273 @@
+"""Deterministic fault injection for the wire runtime (DESIGN.md §13).
+
+Recovery code that is only ever exercised by ad-hoc ``kill -9`` in tests
+is recovery code that silently rots: the failure *point* drifts with
+scheduler noise, so a red run cannot be replayed and a green run proves
+little.  A :class:`FaultPlan` makes faults first-class, seeded inputs —
+the same plan produces the same failure at the same protocol event every
+run, which is what lets the §3.3 recovery tests assert bit-exact
+recovered state.
+
+A plan is a seed plus an ordered list of rules::
+
+    REPRO_FAULTS="seed=7;kill:task=1,step=3;refuse:times=2,port=7077"
+
+Rule grammar (``action:key=val,key=val,...``):
+
+``kill``      ``step=N [task=T]`` — the matching *worker* process exits
+              hard (``os._exit``, no flush — indistinguishable from
+              ``kill -9``) upon receiving its N-th ``run_graph`` RPC,
+              before executing it.
+``drop``      ``[rpc=KIND] [key=SUBSTR] [times=N] [after=K]`` — the
+              matching client-side RPC raises :class:`InjectedFault`
+              (an ``OSError``: callers classify it as a transport
+              failure) instead of touching the socket.  ``key`` matches
+              a substring of the call's ``key`` field, so individual
+              wire tensors (a predicate broadcast, one loop iteration)
+              can be targeted.
+``delay``     ``ms=M [rpc=KIND] [key=SUBSTR] [times=N] [after=K]`` —
+              sleep M milliseconds before issuing the matching RPC.
+``stall_hb``  ``times=N [task=T]`` — the matching *worker* drops the
+              connection of its next N ``heartbeat`` RPCs without
+              replying, so the master's monitor counts misses against a
+              perfectly healthy process.
+``refuse``    ``times=N [port=P]`` — the next N client connection
+              attempts (optionally only to ``port``) fail with
+              ``ConnectionRefusedError`` before dialing, simulating a
+              standby worker that has not finished binding its port.
+
+``times`` defaults to 1; ``after`` skips the first K matches.  Counters
+live per rule per process, so a plan shipped to every process of a pool
+via the ``REPRO_FAULTS`` environment variable (``start_worker_processes``
+inherits it) fires at the same protocol events on every replay.  The
+``seed`` additionally fixes the retry-backoff jitter stream
+(:func:`jitter_rng`), so even timing-adjacent behaviour replays.
+
+Workers call :func:`set_context` with their task id at startup; rules
+carrying ``task=`` only fire in that process.  The master/client side
+has no task context (``task=None``) and only client-side rules
+(``drop``/``delay``/``refuse``) apply there.
+"""
+from __future__ import annotations
+
+import os
+import random
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+_CLIENT_ACTIONS = ("drop", "delay", "refuse")
+_SERVER_ACTIONS = ("kill", "stall_hb")
+_ACTIONS = _CLIENT_ACTIONS + _SERVER_ACTIONS
+
+_INT_PARAMS = {"task", "step", "times", "after", "port", "ms"}
+
+
+class InjectedFault(ConnectionError):
+    """A fault-plan-injected transport failure.
+
+    Subclasses ``ConnectionError`` (hence ``OSError``) deliberately: the
+    runtime must classify an injected drop exactly as it classifies a
+    real dead connection — same retry policy, same §3.3 condemnation.
+    """
+
+
+class _DropConnection(Exception):
+    """Server-side signal: close the connection without replying."""
+
+
+class FaultRule:
+    """One match-counted fault. Thread-safe: concurrent RPCs may probe."""
+
+    def __init__(self, action: str, **params: Any) -> None:
+        if action not in _ACTIONS:
+            raise ValueError(f"unknown fault action {action!r} "
+                             f"(want one of {_ACTIONS})")
+        self.action = action
+        self.params: Dict[str, Any] = params
+        self.times = int(params.get("times", 1))
+        self.after = int(params.get("after", 0))
+        self.fired = 0      # matches that actually injected
+        self.seen = 0       # matches including the skipped `after` window
+        self._lock = threading.Lock()
+        if action == "kill" and "step" not in params:
+            raise ValueError("kill rule requires step=N")
+        if action == "delay" and "ms" not in params:
+            raise ValueError("delay rule requires ms=M")
+
+    def _consume(self) -> bool:
+        """One matching event occurred: does the rule fire on it?"""
+        with self._lock:
+            self.seen += 1
+            if self.seen <= self.after:
+                return False
+            if self.fired >= self.times:
+                return False
+            self.fired += 1
+            return True
+
+    def _field_match(self, name: str, value: Any) -> bool:
+        want = self.params.get(name)
+        return want is None or want == value
+
+    def _key_match(self, fields: Dict[str, Any]) -> bool:
+        want = self.params.get("key")
+        return want is None or want in str(fields.get("key", ""))
+
+    def spec(self) -> str:
+        kv = ",".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        return f"{self.action}:{kv}" if kv else self.action
+
+    def __repr__(self) -> str:
+        return (f"<FaultRule {self.spec()} fired={self.fired}/{self.times} "
+                f"seen={self.seen}>")
+
+
+class FaultPlan:
+    """A seeded, replayable list of :class:`FaultRule`\\ s."""
+
+    def __init__(self, rules: Optional[List[FaultRule]] = None, *,
+                 seed: int = 0) -> None:
+        self.seed = int(seed)
+        self.rules: List[FaultRule] = list(rules or [])
+        self.rng = random.Random(self.seed)
+
+    @staticmethod
+    def parse(spec: "FaultPlan | str") -> "FaultPlan":
+        """``"seed=7;kill:task=1,step=3;..."`` -> FaultPlan."""
+        if isinstance(spec, FaultPlan):
+            return spec
+        seed = 0
+        rules: List[FaultRule] = []
+        for part in (p.strip() for p in spec.split(";")):
+            if not part:
+                continue
+            if part.startswith("seed="):
+                seed = int(part.split("=", 1)[1])
+                continue
+            action, _, rest = part.partition(":")
+            params: Dict[str, Any] = {}
+            for kv in (s for s in rest.split(",") if s):
+                k, _, v = kv.partition("=")
+                k = k.strip()
+                params[k] = int(v) if k in _INT_PARAMS else v.strip()
+            rules.append(FaultRule(action.strip(), **params))
+        return FaultPlan(rules, seed=seed)
+
+    def describe(self) -> str:
+        """Canonical replayable spec string (put this in failure reports:
+        exporting it as ``REPRO_FAULTS`` reproduces the run)."""
+        return ";".join([f"seed={self.seed}"] + [r.spec() for r in self.rules])
+
+    def _matching(self, action: str) -> List[FaultRule]:
+        return [r for r in self.rules if r.action == action]
+
+    def __repr__(self) -> str:
+        return f"<FaultPlan {self.describe()!r}>"
+
+
+# ---------------------------------------------------------------------------
+# process-wide installation + context
+
+_UNSET = object()
+_plan: Any = _UNSET          # _UNSET -> lazily load from env on first use
+_context: Dict[str, Any] = {"task": None}
+_install_lock = threading.Lock()
+
+
+def install(plan: "FaultPlan | str | None") -> Optional[FaultPlan]:
+    """Install (or clear, with None) the process-wide plan; returns it."""
+    global _plan
+    with _install_lock:
+        _plan = FaultPlan.parse(plan) if plan is not None else None
+    return _plan
+
+
+def set_context(task: Optional[int]) -> None:
+    """Declare this process's cluster task id (workers, at startup)."""
+    _context["task"] = task
+
+
+def active() -> Optional[FaultPlan]:
+    """The installed plan, lazily parsed from ``REPRO_FAULTS`` once."""
+    global _plan
+    if _plan is _UNSET:
+        with _install_lock:
+            if _plan is _UNSET:
+                spec = os.environ.get("REPRO_FAULTS")
+                _plan = FaultPlan.parse(spec) if spec else None
+    return _plan
+
+
+def jitter_rng() -> random.Random:
+    """RNG for retry-backoff jitter: plan-seeded when a plan is installed
+    (deterministic replay), a module default otherwise."""
+    plan = active()
+    return plan.rng if plan is not None else _default_rng
+
+
+_default_rng = random.Random()
+
+
+# ---------------------------------------------------------------------------
+# hooks — all no-ops (one None check) when no plan is installed
+
+def on_connect(host: str, port: int) -> None:
+    """Client side, before dialing. May raise ``ConnectionRefusedError``."""
+    plan = active()
+    if plan is None:
+        return
+    for rule in plan._matching("refuse"):
+        if rule._field_match("port", port) and rule._consume():
+            raise ConnectionRefusedError(
+                f"[fault-injected] connection to {host}:{port} refused "
+                f"({rule.spec()})")
+
+
+def on_call(kind: str, fields: Dict[str, Any], host: str, port: int) -> None:
+    """Client side, per attempt, before the request frame is written.
+    May sleep (delay) or raise :class:`InjectedFault` (drop)."""
+    plan = active()
+    if plan is None:
+        return
+    for rule in plan._matching("delay"):
+        if (rule._field_match("rpc", kind) and rule._key_match(fields)
+                and rule._consume()):
+            time.sleep(int(rule.params["ms"]) / 1000.0)
+    for rule in plan._matching("drop"):
+        if (rule._field_match("rpc", kind) and rule._key_match(fields)
+                and rule._consume()):
+            raise InjectedFault(
+                f"[fault-injected] {kind} RPC to {host}:{port} dropped "
+                f"({rule.spec()})")
+
+
+def on_serve(kind: str, task: Optional[int]) -> None:
+    """Worker serve loop, before dispatching a received RPC.  May raise
+    :class:`_DropConnection` (the loop closes the socket, no reply)."""
+    plan = active()
+    if plan is None:
+        return
+    if kind == "heartbeat":
+        for rule in plan._matching("stall_hb"):
+            if rule._field_match("task", task) and rule._consume():
+                raise _DropConnection(rule.spec())
+
+
+def on_run_graph(task: Optional[int]) -> None:
+    """Worker, upon receiving ``run_graph`` and before executing it.
+    A matching ``kill`` rule hard-exits the process (``kill -9`` twin)."""
+    plan = active()
+    if plan is None:
+        return
+    for rule in plan._matching("kill"):
+        if not rule._field_match("task", task):
+            continue
+        with rule._lock:
+            rule.seen += 1
+            due = rule.seen == int(rule.params["step"]) and not rule.fired
+            if due:
+                rule.fired += 1
+        if due:
+            # mirror SIGKILL: no atexit, no flushing, no socket shutdown
+            os._exit(137)

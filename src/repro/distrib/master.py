@@ -10,22 +10,28 @@ task under a fresh execution id; workers coordinate tensor transfers
 peer-to-peer through the :class:`~repro.distrib.wire.WireRendezvous`,
 and the master only collects fetch values.
 
-Fault tolerance (§3.3, §4.3 of the OSDI follow-up): a heartbeat monitor
-pings every worker; on a timeout (or a transport error mid-run) the
-worker is marked dead, in-flight executions abort with an
+Fault tolerance (§3.3 / DESIGN.md §13): a heartbeat monitor pings every
+worker; on a timeout (or a transport error mid-run) the worker is marked
+dead, in-flight executions are purged on the survivors
+(``purge_execution``) and abort with an
 :class:`~repro.core.executor.ExecutorError` naming the lost process/host
-(task, endpoint, pid), and training resumes by restarting the pool,
-rebinding the session (``Session.rebind_cluster``) and restoring the
-last checkpoint — re-registration ships the restored Variable state.
+(task, endpoint, pid).  Recovery then prefers **partial re-placement**
+(``Session.recover_dead_tasks``): only the dead task's subgraph is
+re-registered — onto a standby worker or a survivor — and only its
+Variables are pushed from the checkpoint, while survivors keep their
+live state, registrations and Executables.  When no standby or survivor
+can host (:class:`RecoveryError`), the whole-pool path remains: restart
+the pool, ``Session.rebind_cluster``, restore the last checkpoint.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
 import time
 import uuid
 import weakref
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core.executor import ExecutorError
 from ..core.graph import Graph, TensorRef
@@ -33,16 +39,56 @@ from .protocol import Channel, WorkerError
 from .wire import ClusterSpec
 
 
+class RecoveryError(ExecutorError):
+    """Partial re-placement is impossible (no standby, no survivor able to
+    host the dead task) — fall back to the §3.3 whole-pool path: restart
+    the pool, ``Session.rebind_cluster``, restore the last checkpoint."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What recovery actually did — the §13 operator-facing account.
+
+    ``mode`` is ``"partial"`` (re-placement; survivors kept live state)
+    or ``"noop"`` (nothing was dead).  The whole-pool fallback raises
+    :class:`RecoveryError` instead of returning a report, so a report in
+    hand always means live state was preserved somewhere.
+    """
+
+    mode: str
+    dead: Dict[int, str]               # task -> why it was condemned
+    survivors: Tuple[int, ...]         # tasks whose live state was kept
+    replacements: Dict[int, str]       # dead task -> host:port now serving it
+    kept_live: Tuple[str, ...]         # Variables preserved on survivors
+    restored: Tuple[str, ...]          # Variables restored from checkpoint
+
+    def describe(self) -> str:
+        lines = [f"recovery mode={self.mode}"]
+        for t, why in sorted(self.dead.items()):
+            lines.append(f"  lost   task:{t} ({why})")
+        for t, ep in sorted(self.replacements.items()):
+            lines.append(f"  placed task:{t} -> {ep}")
+        lines.append(f"  survivors: {list(self.survivors)} "
+                     f"(kept live: {list(self.kept_live) or 'none'})")
+        lines.append(f"  restored from checkpoint: "
+                     f"{list(self.restored) or 'none'}")
+        return "\n".join(lines)
+
+
 class Master:
     """Connection + liveness manager for one worker pool."""
 
     def __init__(self, cluster: "ClusterSpec | str", *,
                  heartbeat_interval: float = 0.5,
-                 heartbeat_misses: int = 3) -> None:
+                 heartbeat_misses: int = 3,
+                 standbys: Iterable[str] = ()) -> None:
         self.cluster = ClusterSpec.parse(cluster)
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_misses = heartbeat_misses
         self.generation = 0  # bumped on reset(); plans re-register lazily
+        # §13: endpoints of idle standby workers, consumed (FIFO) by
+        # partial re-placement before falling back to survivor hosting
+        self.standbys: List[str] = list(standbys)
         self.dead: Dict[int, str] = {}
         # weak refs: a plan lives exactly as long as its Executable — the
         # session's LRU eviction must actually free partitioned graphs
@@ -103,7 +149,10 @@ class Master:
                 if self._stop.is_set() or task in self.dead:
                     continue
                 try:
-                    rep = ch.call("heartbeat",
+                    # _attempts=1: this loop IS the retry — the channel's
+                    # idempotent-RPC backoff would mask individual probe
+                    # failures and make miss counting dishonest
+                    rep = ch.call("heartbeat", _attempts=1,
                                   _timeout=max(1.0, self.heartbeat_interval * 4))
                     with self._lock:
                         self._info[task] = rep
@@ -136,15 +185,42 @@ class Master:
     def mark_dead(self, task: int, reason: str) -> None:
         self.dead.setdefault(task, reason)
 
+    def add_standby(self, endpoint: str) -> None:
+        """Offer an idle worker's ``host:port`` for future re-placement."""
+        host, _, port = str(endpoint).rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad standby endpoint {endpoint!r}")
+        if endpoint not in self.standbys:
+            self.standbys.append(endpoint)
+
+    def replace_task(self, task: int, endpoint: str) -> None:
+        """§13 partial re-placement, connection half: ``task`` is now
+        served from ``endpoint`` (a standby or a survivor's process).
+
+        Deliberately does NOT bump ``generation`` — survivors' existing
+        registrations stay valid; the caller re-registers only the
+        replaced task (``WirePlan.reregister_task``) and patches
+        survivors' specs (``WirePlan.update_survivors``)."""
+        old = self.channels.pop(task, None)
+        if old is not None:
+            old.close()
+        self.cluster = self.cluster.with_replacement(task, endpoint)
+        self.channels[task] = Channel(*self.cluster.host_port(task))
+        with self._lock:
+            self.dead.pop(task, None)
+            self._misses.pop(task, None)
+            self._info.pop(task, None)
+
     def check(self) -> None:
         if self.dead:
             lost = "; ".join(f"{self.identity(t)}: {r}"
                              for t, r in sorted(self.dead.items()))
             raise ExecutorError(
-                f"§3.3: lost {lost} — in-flight executions aborted; restart "
-                f"the worker pool, rebind the session "
-                f"(Session.rebind_cluster) and resume from the last "
-                f"checkpoint")
+                f"§3.3: lost {lost} — in-flight executions aborted; recover "
+                f"via partial re-placement (Session.recover_dead_tasks: "
+                f"survivors keep live state) or restart the pool, rebind "
+                f"the session (Session.rebind_cluster) and resume from the "
+                f"last checkpoint")
 
 
 class WirePlan:
@@ -156,11 +232,16 @@ class WirePlan:
     session's current Variable values on the next run.
     """
 
-    def __init__(self, exe: Any, device_nodes: Dict[str, set]) -> None:
+    def __init__(self, exe: Any, device_nodes: Dict[str, set], *,
+                 numerics: Optional[str] = None) -> None:
         session = exe.session
         self.exe = exe
         self.session = session
         self.master: Master = session.master
+        # numerics override: the §13 distributed parity guard builds a
+        # companion plan with numerics="strict" as its reference pipeline
+        # (strict fused == unfused bit-for-bit, §7/§9)
+        self.numerics = numerics if numerics is not None else exe.numerics
         self.handle = uuid.uuid4().hex[:12]
         self._eid_prefix = uuid.uuid4().hex[:8]
         self._eid_counter = itertools.count()
@@ -247,7 +328,7 @@ class WirePlan:
                 "fetches": fetches,
                 "feed_keys": [(r.node, r.port) for r in exe.feed_keys],
                 "fuse": exe.fuse_regions,
-                "numerics": exe.numerics,
+                "numerics": self.numerics,
             }
         self.master.plans.append(weakref.ref(self))
 
@@ -265,36 +346,102 @@ class WirePlan:
             out[name] = (self._var_containers[name], value)
         return out
 
+    def _register_task(self, task: int) -> None:
+        try:
+            self.master.channels[task].call(
+                "register_graph", _timeout=60.0,
+                cluster=self.master.cluster.to_wire(),
+                variables=self._variable_payload(task),
+                **self.payloads[task])
+        except WorkerError:
+            raise
+        except Exception as e:  # noqa: BLE001 — transport = lost worker
+            self.master.mark_dead(task, f"register_graph failed: {e}")
+            self.master.check()
+            raise
+
     def ensure_registered(self) -> None:
         self.master.check()
         with self._reg_lock:
             if self._registered_gen == self.master.generation:
                 return
-            cluster_wire = self.master.cluster.to_wire()
-            for task, payload in self.payloads.items():
-                try:
-                    self.master.channels[task].call(
-                        "register_graph", _timeout=60.0, cluster=cluster_wire,
-                        variables=self._variable_payload(task), **payload)
-                except WorkerError:
-                    raise
-                except Exception as e:  # noqa: BLE001 — transport = lost worker
-                    self.master.mark_dead(task, f"register_graph failed: {e}")
-                    self.master.check()
-                    raise
+            for task in self.payloads:
+                self._register_task(task)
             self._registered_gen = self.master.generation
 
     # ------------------------------------------------------------------
-    def push_variables(self) -> None:
+    # §13 partial re-placement: patch one task, leave survivors alone
+    def reregister_task(self, task: int) -> None:
+        """Ship ONLY ``task``'s subgraph slice to its (replacement)
+        endpoint — survivors keep their registrations, executors and live
+        Variable state.  No-op for a plan that never registered: lazy
+        registration will ship everything against the patched cluster."""
+        with self._reg_lock:
+            if self._registered_gen is None:
+                return
+            self._register_task(task)
+
+    def update_survivors(self, replaced: "Set[int]") -> None:
+        """Patch survivors' registered cluster specs to the
+        post-replacement topology, so their future peer fetches dial the
+        replacement endpoint instead of the dead one."""
+        with self._reg_lock:
+            if self._registered_gen is None:
+                return
+            cluster_wire = self.master.cluster.to_wire()
+            for task in self.payloads:
+                if task in replaced or task in self.master.dead:
+                    continue
+                self.master.channels[task].call(
+                    "update_cluster", _timeout=30.0, cluster=cluster_wire,
+                    handles=[self.handle])
+
+    # ------------------------------------------------------------------
+    def push_variables(self, tasks: Optional[Set[int]] = None) -> None:
         """Force-write the session store's values for this plan's
         Variables into their owning workers (§3.3 recovery: registration
-        itself only *seeds* missing state, never clobbers live weights)."""
+        itself only *seeds* missing state, never clobbers live weights).
+        ``tasks`` limits the push — partial recovery pushes ONLY the
+        replaced task's Variables, preserving survivors' live state."""
         for task in sorted(set(self.var_owner.values())):
+            if tasks is not None and task not in tasks:
+                continue
             values = self._variable_payload(task)
             if values:
                 self.master.channels[task].call(
                     "set_variables", _timeout=30.0,
                     namespace=self.namespace, values=values)
+
+    def snapshot_variables(self, names: Optional[Iterable[str]] = None
+                           ) -> Dict[str, Any]:
+        """Read this plan's Variables from their owning workers WITHOUT
+        touching the session store — the §13 distributed parity guard's
+        snapshot (and the tests' bit-preservation probe)."""
+        self.master.check()
+        wanted = set(self.var_owner if names is None else names)
+        by_task: Dict[int, List[str]] = {}
+        for name, task in self.var_owner.items():
+            if name in wanted:
+                by_task.setdefault(task, []).append(name)
+        out: Dict[str, Any] = {}
+        for task, ns in sorted(by_task.items()):
+            rep = self.master.channels[task].call(
+                "get_variables", _timeout=30.0,
+                namespace=self.namespace, names=ns)
+            out.update(rep["values"])
+        return out
+
+    def restore_variables(self, values: Dict[str, Any]) -> None:
+        """Force-write ``values`` back to their owning workers (inverse
+        of :meth:`snapshot_variables`; bypasses the session store)."""
+        by_task: Dict[int, Dict[str, Tuple[str, Any]]] = {}
+        for name, value in values.items():
+            by_task.setdefault(self.var_owner[name], {})[name] = (
+                self._var_containers[name], value)
+        for task, vals in sorted(by_task.items()):
+            self.master.channels[task].call(
+                "set_variables", _timeout=30.0,
+                namespace=self.namespace, values=vals)
 
     def run(self, feeds: Dict[TensorRef, Any], *, timeout: float = 60.0) -> List[Any]:
         try:
@@ -324,7 +471,8 @@ class WirePlan:
                                if r in self.feed_routing.get(task, ())}
                 rep = self.master.channels[task].call(
                     "run_graph", _timeout=timeout + 15.0, handle=self.handle,
-                    execution_id=eid, feeds=local_feeds, timeout=timeout)
+                    task=task, execution_id=eid, feeds=local_feeds,
+                    timeout=timeout)
                 with lock:
                     results.update(rep.get("results", {}))
                     stats[task] = {k: rep.get(k, 0) for k in
@@ -341,9 +489,7 @@ class WirePlan:
         deadline = time.monotonic() + timeout + 20.0
         try:
             while any(t.is_alive() for t in threads.values()):
-                if self.master.dead:
-                    self.master.check()  # raises, naming the lost process/host
-                if failures:
+                if self.master.dead or failures:
                     break
                 if time.monotonic() > deadline:
                     stuck = sorted(t for t, th in threads.items() if th.is_alive())
@@ -356,11 +502,24 @@ class WirePlan:
                 task, err = sorted(failures.items())[0]
                 ident = self.master.identity(task)
                 if isinstance(err, WorkerError):
-                    # worker alive; the graph execution itself failed there
+                    # worker alive; the graph execution itself failed
+                    # there — still purge peers, whose executors may be
+                    # blocked on tensors that will now never arrive
+                    self.abort_execution(
+                        eid, f"execution {eid} failed on {ident}")
                     raise ExecutorError(
                         f"graph execution {eid} failed on {ident}: {err}") from err
                 self.master.mark_dead(task, f"{type(err).__name__}: {err}")
-                self.master.check()
+            if self.master.dead:
+                # §13 detection -> abort: scrub this execution off every
+                # SURVIVOR before condemning — their executors unwind now
+                # (not after a full recv timeout) and their mailboxes hold
+                # no orphaned tensors for the worker's lifetime
+                lost = ", ".join(self.master.identity(t)
+                                 for t in sorted(self.master.dead))
+                self.abort_execution(eid, f"execution {eid} aborted: "
+                                          f"lost {lost} (§3.3)")
+                self.master.check()  # raises, naming the lost process/host
         finally:
             threading.Thread(target=self._cleanup, args=(eid,),
                              daemon=True).start()
@@ -373,6 +532,20 @@ class WirePlan:
                 f"workers finished but fetches {missing} were never produced "
                 f"(partition/fetch routing bug; §3.3 failure reporting)")
         return [results[i] for i in range(len(self.exe.fetches))]
+
+    def abort_execution(self, eid: str, reason: str) -> None:
+        """§13 abort half of detection→abort→re-place→resume: purge one
+        in-flight execution on every surviving worker (poison its
+        rendezvous views, drop straggler fetchers, scrub the mailbox)."""
+        for task in self.payloads:
+            if task in self.master.dead:
+                continue
+            try:
+                self.master.channels[task].call(
+                    "purge_execution", _timeout=10.0, execution_id=eid,
+                    reason=reason)
+            except Exception:  # noqa: BLE001 — best-effort on a failing pool
+                pass
 
     def _cleanup(self, eid: str) -> None:
         for task in self.payloads:

@@ -30,12 +30,14 @@ import select
 import socket
 import struct
 import threading
+import time
 from collections import deque
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
 from ..runtime.rendezvous import DEAD_TENSOR, _DeadTensor
+from . import faults
 
 MAX_FRAME = 1 << 30  # 1 GiB sanity bound per message
 
@@ -207,6 +209,42 @@ def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
 # ---------------------------------------------------------------------------
 # client channel
 
+# §13 idempotency contract (DESIGN.md): RPCs whose effect is identical if
+# re-executed, so a transport failure mid-call may be retried without
+# risking a double effect.  heartbeat/get_variables/debug_state are pure
+# reads; set_variables/update_cluster force-write the values they carry;
+# register_graph SEEDs only (re-registering an already-registered handle
+# replaces it with identical content); cleanup/purge_execution purge an
+# already-purged namespace to the same empty state; recv_tensor is
+# at-most-once — a retry after the peer popped the mailbox entry but
+# before the reply landed cannot return the wrong tensor, it blocks and
+# surfaces an execution failure that §3.3 recovery handles anyway.
+# run_graph and shutdown are deliberately absent: run_graph mutates
+# Variables per execution (a blind re-run could double-apply a training
+# step) and keeps its fail-fast contract.
+IDEMPOTENT_RPCS = frozenset({
+    "heartbeat", "recv_tensor", "get_variables", "set_variables",
+    "register_graph", "cleanup", "purge_execution", "update_cluster",
+    "debug_state",
+})
+
+RETRY_ATTEMPTS = 4          # total tries for an idempotent RPC
+RETRY_BASE_S = 0.05         # first backoff; doubles per retry
+RETRY_JITTER = 0.25         # +/- fraction of the backoff
+CONNECT_ATTEMPTS = 4        # refused-connection retries while dialing
+
+
+def _backoff(attempt: int, deadline: float) -> bool:
+    """Sleep the exponential-backoff-with-jitter delay for ``attempt``
+    (0-based), bounded by ``deadline``.  False if the deadline would pass
+    before the retry could start (caller should give up instead)."""
+    delay = RETRY_BASE_S * (2 ** attempt)
+    delay *= 1.0 + RETRY_JITTER * (2.0 * faults.jitter_rng().random() - 1.0)
+    if time.monotonic() + delay >= deadline:
+        return False
+    time.sleep(delay)
+    return True
+
 
 class Channel:
     """Pooled request/reply client to one worker endpoint.
@@ -216,16 +254,50 @@ class Channel:
     new ones.  This is what makes concurrent ``recv_tensor`` fetches
     deadlock-free — a blocked fetch for a late tensor can never head-of-
     line-block the fetch whose arrival would unblock the producer.
+
+    Failure handling (§13): dialing retries refused connections with
+    exponential backoff (a standby worker still binding its port must not
+    fail a whole rebind), and idempotent RPCs (:data:`IDEMPOTENT_RPCS`)
+    additionally retry transport failures mid-call — bounded attempts,
+    jittered backoff, all under the ``_timeout`` deadline.  Non-idempotent
+    RPCs (``run_graph``) stay fail-fast once the request may have reached
+    the peer.
     """
 
-    def __init__(self, host: str, port: int, *, connect_timeout: float = 5.0) -> None:
+    def __init__(self, host: str, port: int, *, connect_timeout: float = 5.0,
+                 connect_attempts: int = CONNECT_ATTEMPTS) -> None:
         self.host, self.port = host, port
         self.connect_timeout = connect_timeout
+        self.connect_attempts = max(1, connect_attempts)
         self._idle: deque = deque()
         self._lock = threading.Lock()
         self._closed = False
 
-    def _acquire(self) -> socket.socket:
+    def _connect(self, deadline: float) -> socket.socket:
+        """Dial with bounded retry on refused/unreachable connections.
+        Always safe regardless of the RPC's idempotency: a connection
+        that never opened never delivered a request."""
+        last: Optional[Exception] = None
+        for attempt in range(self.connect_attempts):
+            budget = min(self.connect_timeout, deadline - time.monotonic())
+            if budget <= 0:
+                break
+            try:
+                faults.on_connect(self.host, self.port)
+                sock = socket.create_connection((self.host, self.port),
+                                                timeout=budget)
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                return sock
+            except OSError as e:
+                last = e
+                if attempt + 1 >= self.connect_attempts:
+                    break
+                if not _backoff(attempt, deadline):
+                    break
+        raise last if last is not None else OSError(
+            f"connect deadline passed for {self.host}:{self.port}")
+
+    def _acquire(self, deadline: float) -> socket.socket:
         while True:
             with self._lock:
                 if self._closed:
@@ -242,10 +314,7 @@ class Channel:
             if not readable:
                 return sock
             sock.close()
-        sock = socket.create_connection((self.host, self.port),
-                                        timeout=self.connect_timeout)
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        return sock
+        return self._connect(deadline)
 
     def _release(self, sock: socket.socket) -> None:
         with self._lock:
@@ -254,13 +323,12 @@ class Channel:
                 return
         sock.close()
 
-    def call(self, kind: str, *, _timeout: float = 60.0, **fields: Any) -> Dict[str, Any]:
-        """One RPC round trip.  Raises :class:`WorkerError` on application
-        errors (peer alive) and ``OSError``/:class:`ProtocolError` on
-        transport failures (peer presumed lost)."""
-        sock = self._acquire()
+    def _call_once(self, kind: str, fields: Dict[str, Any],
+                   deadline: float) -> Dict[str, Any]:
+        sock = self._acquire(deadline)
         try:
-            sock.settimeout(_timeout)
+            faults.on_call(kind, fields, self.host, self.port)
+            sock.settimeout(max(0.05, deadline - time.monotonic()))
             send_msg(sock, {"kind": kind, **fields})
             reply = recv_msg(sock)
         except Exception:
@@ -274,6 +342,32 @@ class Channel:
         if not reply.get("ok", False):
             raise WorkerError(reply.get("error", f"unknown {kind} failure"))
         return reply
+
+    def call(self, kind: str, *, _timeout: float = 60.0,
+             _attempts: Optional[int] = None, **fields: Any) -> Dict[str, Any]:
+        """One RPC.  Raises :class:`WorkerError` on application errors
+        (peer alive) and ``OSError``/:class:`ProtocolError` on transport
+        failures (peer presumed lost).
+
+        ``_timeout`` is the total deadline across every attempt.
+        ``_attempts`` overrides the retry budget — idempotent RPCs
+        (:data:`IDEMPOTENT_RPCS`) default to :data:`RETRY_ATTEMPTS`,
+        everything else to 1 (the heartbeat monitor also passes 1: its
+        own loop is the retry, and it must see raw per-probe failures to
+        count misses honestly).
+        """
+        attempts = (_attempts if _attempts is not None
+                    else (RETRY_ATTEMPTS if kind in IDEMPOTENT_RPCS else 1))
+        deadline = time.monotonic() + _timeout
+        for attempt in range(max(1, attempts)):
+            try:
+                return self._call_once(kind, fields, deadline)
+            except WorkerError:
+                raise  # application error: the peer is alive, never retry
+            except (OSError, ProtocolError):
+                if attempt + 1 >= attempts or not _backoff(attempt, deadline):
+                    raise
+        raise AssertionError("unreachable")  # pragma: no cover
 
     def close(self) -> None:
         with self._lock:

@@ -80,10 +80,30 @@ class ClusterSpec:
         return host, int(port)
 
     def fingerprint(self) -> Tuple[str, ...]:
-        """Part of the RunSignature device fingerprint: re-pointing a
-        Session at a different pool must rebuild, never reuse, cached
-        Executables (their WirePlans hold worker registrations)."""
-        return ("cluster",) + self.workers
+        """Part of the RunSignature device fingerprint — the pool's
+        *shape* only, never its endpoints.  Placement and partitioning
+        depend solely on the virtual device names (task count, devices
+        per task, kind), so an Executable stays valid when a task moves
+        to a different endpoint: §13 partial re-placement patches the
+        live WirePlan (re-registering just the moved task) and a §3.3
+        whole-pool rebind re-registers lazily via the master's
+        ``generation`` counter.  Endpoints in the fingerprint would force
+        a full re-place/partition/re-register of every cached Executable
+        on any recovery — exactly the cost partial re-placement exists to
+        avoid."""
+        return ("cluster", str(len(self.workers)),
+                str(self.devices_per_task), self.kind)
+
+    def with_replacement(self, task: int, endpoint: str) -> "ClusterSpec":
+        """The same pool shape with ``task`` served from ``endpoint``
+        (§13 partial re-placement).  The endpoint may already serve
+        another task — a survivor hosting the dead task's devices."""
+        host, _, port = endpoint.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad replacement endpoint {endpoint!r}")
+        workers = list(self.workers)
+        workers[task] = endpoint
+        return ClusterSpec(tuple(workers), self.devices_per_task, self.kind)
 
     def to_wire(self) -> Dict[str, Any]:
         return {"workers": list(self.workers),
@@ -179,7 +199,11 @@ class WireRendezvous:
     def wait_any(self, keys: Iterable[str], timeout: Optional[float] = None) -> str:
         keys = list(keys)
         for k in keys:
-            if self._is_remote(k):
+            # mailbox-first: when a survivor hosts two tasks (§13 partial
+            # re-placement onto a survivor) both views share this process's
+            # mailbox, so a "remote" key may already be deposited locally —
+            # probing before fetching avoids a loopback RPC to ourselves
+            if self._is_remote(k) and not self._mb.ready(self._ns(k)):
                 self._ensure_fetch(k)
         ns_of = {self._ns(k): k for k in keys}
         deadline = time.monotonic() + (self.timeout if timeout is None else timeout)
@@ -199,9 +223,9 @@ class WireRendezvous:
             return ns_of[got]
 
     def recv(self, key: str) -> Any:
-        if self._is_remote(key):
-            self._ensure_fetch(key)
         nk = self._ns(key)
+        if self._is_remote(key) and not self._mb.ready(nk):
+            self._ensure_fetch(key)
         deadline = time.monotonic() + self.timeout
         while True:
             if self._abort is not None:
@@ -229,17 +253,41 @@ class WireRendezvous:
                              name=f"wire-fetch:{key[:40]}")
         t.start()
 
+    _FETCH_CHUNK = 2.0  # per-RPC wait; close/abort responsiveness bound
+
     def _fetch(self, key: str) -> None:
+        # Chunked pull: short recv_tensor polls instead of one blocking
+        # RPC for the full timeout, so a closed/aborted view (§13 purge,
+        # end of execution) releases this thread within a chunk instead
+        # of pinning it — and a connection to the peer is never held
+        # hostage to a tensor that will now never be produced.  A key
+        # deposited locally between polls (a co-hosted producer view
+        # after partial re-placement onto a survivor) also ends the
+        # fetch without a loopback round-trip.
         owner = self._owner(key)
         nk = self._ns(key)
+        deadline = time.monotonic() + self.timeout
         try:
             if self._channel_of is None:
                 raise RuntimeError("no peer channels configured")
-            rep = self._channel_of(owner).call(
-                "recv_tensor", key=nk, wait=self.timeout,
-                _timeout=self.timeout + 10.0)
-            value = rep["value"]
-            self.remote_fetches += 1
+            while True:
+                if self._closed or self._abort is not None:
+                    return
+                if self._mb.ready(nk):
+                    return
+                budget = deadline - time.monotonic()
+                if budget <= 0:
+                    raise TimeoutError(
+                        f"remote fetch gave up after {self.timeout:.1f}s")
+                chunk = min(self._FETCH_CHUNK, budget)
+                rep = self._channel_of(owner).call(
+                    "recv_tensor", key=nk, wait=chunk, poll=True,
+                    _timeout=chunk + 10.0)
+                if rep.get("timeout"):
+                    continue
+                value = rep["value"]
+                self.remote_fetches += 1
+                break
         except BaseException as e:  # noqa: BLE001 — poison, never hang
             value = _FetchError(
                 f"fetching {key!r} from worker task:{owner} "

@@ -47,6 +47,7 @@ from ..core.graph import Graph, TensorRef
 from ..core import fusion as fusion_mod
 from ..runtime.containers import ContainerManager, VariableStore
 from ..runtime.rendezvous import Rendezvous
+from . import faults
 from .protocol import Channel, recv_msg, send_msg
 from .wire import ClusterSpec, WireRendezvous
 
@@ -87,9 +88,14 @@ class Worker:
             from ..core.session import _DictCheckpointIO
 
             self.checkpoint_io = _DictCheckpointIO()
-        self._graphs: "OrderedDict[str, _Registered]" = OrderedDict()
+        # keyed by (handle, cluster task): §13 partial re-placement may
+        # land a dead task's subgraph on a SURVIVOR, which then serves two
+        # tasks of the same plan — one registry slot each, never an
+        # overwrite
+        self._graphs: "OrderedDict[Tuple[str, int], _Registered]" = OrderedDict()
         self.max_graphs = 32  # LRU bound on registered graphs
-        self._active: Dict[str, WireRendezvous] = {}
+        # eid -> rendezvous views; a dual-task survivor runs two per eid
+        self._active: Dict[str, List[WireRendezvous]] = {}
         # keyed by ENDPOINT, not task id: after a partial pool restart
         # (dead task re-spawned on a new port) the re-registered cluster
         # spec must dial the new endpoint, never a stale cached channel
@@ -115,8 +121,9 @@ class Worker:
         self._stop.set()
         self.mailbox.abort(RuntimeError(
             f"worker task:{self.task} (pid {os.getpid()}) shut down"))
-        for rdv in list(self._active.values()):
-            rdv.abort(RuntimeError(f"worker task:{self.task} shutting down"))
+        for views in list(self._active.values()):
+            for rdv in views:
+                rdv.abort(RuntimeError(f"worker task:{self.task} shutting down"))
         if self._sock is not None:
             try:
                 self._sock.close()
@@ -150,6 +157,13 @@ class Worker:
                 if msg is None:
                     return
                 kind = msg.pop("kind", "?")
+                try:
+                    # §13 fault injection: a stall_hb rule drops this
+                    # connection without replying — the master's monitor
+                    # counts a miss against a perfectly healthy process
+                    faults.on_serve(kind, self.task)
+                except faults._DropConnection:
+                    return
                 handler = getattr(self, f"_rpc_{kind}", None)
                 if handler is None:
                     reply: Dict[str, Any] = {"ok": False,
@@ -236,11 +250,12 @@ class Worker:
                     device_nodes.setdefault(fus.placement[n], set()).add(n)
         executors = {dev: Executor(g, node_filter=ns, device_label=dev)
                      for dev, ns in device_nodes.items()}
-        self._graphs[p["handle"]] = _Registered(
+        key = (p["handle"], p["task"])
+        self._graphs[key] = _Registered(
             graph=g, executors=executors, fetch_specs=fetch_specs,
             fetch_remap=fetch_remap, cluster=cluster, task=p["task"],
             namespace=ns)
-        self._graphs.move_to_end(p["handle"])
+        self._graphs.move_to_end(key)
         while len(self._graphs) > self.max_graphs:
             # bounded registry: masters whose signature churn outlives
             # this cap get a "not registered" reply and transparently
@@ -248,20 +263,34 @@ class Worker:
             self._graphs.popitem(last=False)
         return {"devices": sorted(executors), "n_nodes": len(g.nodes)}
 
-    def _rpc_run_graph(self, p: Dict[str, Any]) -> Dict[str, Any]:
-        reg = self._graphs.get(p["handle"])
+    def _find_registered(self, handle: str,
+                         task: Optional[int]) -> Tuple[Any, _Registered]:
+        if task is not None:
+            key = (handle, task)
+            reg = self._graphs.get(key)
+        else:  # legacy master without task routing: any slot for the handle
+            key = next((k for k in self._graphs if k[0] == handle), None)
+            reg = self._graphs.get(key) if key is not None else None
         if reg is None:
-            raise KeyError(f"graph {p['handle']!r} is not registered here "
-                           f"(worker restarted or registry evicted? "
+            raise KeyError(f"graph {handle!r} (task {task}) is not registered "
+                           f"here (worker restarted or registry evicted? "
                            f"re-register before running)")
-        self._graphs.move_to_end(p["handle"])
+        return key, reg
+
+    def _rpc_run_graph(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        # §13 fault injection FIRST: a kill rule must fire on *receipt* of
+        # the N-th run_graph, before any execution state exists — the
+        # deterministic twin of `kill -9` mid-step
+        faults.on_run_graph(self.task)
+        key, reg = self._find_registered(p["handle"], p.get("task"))
+        self._graphs.move_to_end(key)
         eid: str = p["execution_id"]
         timeout: float = float(p.get("timeout", 60.0))
         feeds: Dict[TensorRef, Any] = p.get("feeds") or {}
         wire = WireRendezvous(
             self.mailbox, reg.cluster, reg.task, eid, timeout=timeout,
             channel_of=lambda t: self._peer_channel(reg.cluster, t))
-        self._active[eid] = wire
+        self._active.setdefault(eid, []).append(wire)
         results: Dict[int, Any] = {}
         errors: List[BaseException] = []
         lock = threading.Lock()
@@ -312,11 +341,27 @@ class Worker:
             # after the master's cleanup purge has run — a late deposit
             # would leak for the worker's lifetime
             wire.close()
-            self._active.pop(eid, None)
+            views = self._active.get(eid)
+            if views is not None:
+                try:
+                    views.remove(wire)
+                except ValueError:
+                    pass
+                if not views:
+                    self._active.pop(eid, None)
 
     def _rpc_recv_tensor(self, p: Dict[str, Any]) -> Dict[str, Any]:
         wait = float(p.get("wait", self.mailbox.timeout))
-        value = self.mailbox.recv(p["key"], timeout=wait)
+        try:
+            value = self.mailbox.recv(p["key"], timeout=wait)
+        except TimeoutError:
+            if p.get("poll"):
+                # chunked fetcher (wire.WireRendezvous._fetch): a clean
+                # not-yet marker, so the client re-polls between its
+                # closed/abort checks instead of burning one long blocking
+                # RPC it cannot interrupt
+                return {"timeout": True}
+            raise
         return {"value": value}
 
     def _rpc_heartbeat(self, p: Dict[str, Any]) -> Dict[str, Any]:
@@ -350,6 +395,62 @@ class Worker:
         purged = self.mailbox.purge_prefix(f"{p['execution_id']}|")
         return {"purged": purged}
 
+    def _rpc_purge_execution(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        """§13 abort path: poison an in-flight execution and scrub its
+        rendezvous state.  The master calls this on every SURVIVOR when a
+        peer dies mid-run, so executors blocked on tensors the dead task
+        will never produce unwind promptly (instead of burning their full
+        recv timeout) and nothing leaks into the process-wide mailbox."""
+        eid = p["execution_id"]
+        reason = p.get("reason", f"execution {eid} aborted by master (§3.3)")
+        views = self._active.get(eid, [])
+        for wire in list(views):
+            wire.abort(RuntimeError(reason))
+            wire.close()  # straggler fetcher deposits drop, not leak
+        purged = self.mailbox.purge_prefix(f"{eid}|")
+        return {"aborted": len(views), "purged": purged}
+
+    def _rpc_update_cluster(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        """§13 partial re-placement: patch registered graphs' cluster spec
+        in place — survivors keep their graphs, executors and Variable
+        state, but future peer fetches must dial the replacement endpoint,
+        never the dead one.  Idempotent: re-applying the same spec is a
+        no-op.  ``handles`` limits the patch to specific plans."""
+        new = ClusterSpec.from_wire(p["cluster"])
+        handles = p.get("handles")
+        updated = 0
+        for key, reg in self._graphs.items():
+            if handles is not None and key[0] not in handles:
+                continue
+            if len(reg.cluster.workers) == len(new.workers):
+                reg.cluster = new
+                updated += 1
+        # drop pooled channels to endpoints no longer in any updated spec:
+        # a parked connection to the dead endpoint would only resurface as
+        # a spurious transport error on the next fetch
+        keep = {reg.cluster.host_port(t)
+                for reg in self._graphs.values()
+                for t in range(len(reg.cluster.workers))}
+        with self._peers_lock:
+            for ep in list(self._peers):
+                if ep not in keep:
+                    self._peers.pop(ep).close()
+        return {"updated": updated}
+
+    def _rpc_debug_state(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        """Hygiene probe (§13 tests / operator debugging): what is still
+        live in this process — pending mailbox keys, active executions,
+        straggler fetcher threads, registered (handle, task) slots."""
+        return {
+            "task": self.task, "pid": os.getpid(),
+            "pending_keys": self.mailbox.pending_keys(),
+            "active_executions": sorted(self._active),
+            "fetch_threads": sum(
+                1 for t in threading.enumerate()
+                if t.is_alive() and t.name.startswith("wire-fetch:")),
+            "registered": sorted(f"{h}@task:{t}" for h, t in self._graphs),
+        }
+
     def _rpc_shutdown(self, p: Dict[str, Any]) -> Dict[str, Any]:
         return {"task": self.task}  # _serve_conn stops after replying
 
@@ -360,23 +461,32 @@ class Worker:
 
 def start_worker_processes(
     n: int, *, host: str = "127.0.0.1", timeout: float = 120.0,
-    rendezvous_timeout: float = 30.0,
+    rendezvous_timeout: float = 30.0, first_task: int = 0,
+    extra_env: Optional[Dict[str, str]] = None,
 ) -> Tuple[List[subprocess.Popen], ClusterSpec]:
     """Spawn ``n`` worker processes on free ports; returns (procs, spec).
 
     Blocks until every worker announced ``WORKER_READY`` (imports of
     jax dominate startup).  Callers own the processes — pair with
     :func:`stop_worker_processes`.
+
+    ``first_task`` numbers the spawned tasks from an offset — a §13
+    standby is a worker spawned with the next free task id, registered
+    into the pool only when recovery re-places a dead task onto it.
+    ``extra_env`` overlays the inherited environment (e.g. a seeded
+    ``REPRO_FAULTS`` plan shipped to every process of the pool).
     """
     src_root = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     env = dict(os.environ)
     env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
+    if extra_env:
+        env.update(extra_env)
     procs: List[subprocess.Popen] = []
     addrs: List[str] = []
     try:
-        for t in range(n):
+        for t in range(first_task, first_task + n):
             procs.append(subprocess.Popen(
                 [sys.executable, "-m", "repro.distrib.worker",
                  "--host", host, "--port", "0", "--task", str(t),
@@ -418,7 +528,10 @@ def stop_worker_processes(procs: Sequence[subprocess.Popen],
     if spec is not None:
         for t in range(len(spec.workers)):
             try:
-                ch = Channel(*spec.host_port(t), connect_timeout=1.0)
+                # connect_attempts=1: a pool being torn down is usually
+                # already gone — retrying refused dials only slows tests
+                ch = Channel(*spec.host_port(t), connect_timeout=1.0,
+                             connect_attempts=1)
                 ch.call("shutdown", _timeout=2.0)
                 ch.close()
             except Exception:  # noqa: BLE001 — already gone is fine
@@ -444,6 +557,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--ckpt-root", default=None,
                     help="directory for worker-local Save/Restore nodes")
     args = ap.parse_args(argv)
+    # §13: declare this process's task so task-scoped fault rules (kill,
+    # stall_hb) shipped via REPRO_FAULTS fire only in the right process
+    faults.set_context(args.task)
     w = Worker(args.host, args.port, args.task,
                rendezvous_timeout=args.rendezvous_timeout,
                checkpoint_root=args.ckpt_root)

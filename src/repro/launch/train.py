@@ -140,31 +140,37 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
                   lr: float = 0.1, ckpt_dir: Optional[str] = None,
                   ckpt_every: int = 10, log_every: int = 10, seed: int = 0,
                   max_recoveries: int = 3, retry_wait: float = 3.0,
-                  run_timeout: float = 60.0) -> Dict[str, Any]:
-    """§3.3/DESIGN.md §11 multi-process training over a TCP worker pool.
+                  run_timeout: float = 60.0,
+                  standby: Optional[str] = None) -> Dict[str, Any]:
+    """§3.3/DESIGN.md §11/§13 multi-process training over a TCP pool.
 
     Drives the wire-shippable primitive-op classifier step
     (``launch/steps.build_wire_train_step``) across ``--cluster
     host:port,...`` workers: place/partition once, RegisterGraph each
     subgraph to its owning process, then one RunGraph fan-out per step
-    with Send/Recv riding the wire rendezvous.  Worker death (heartbeat
-    timeout or transport error) aborts the step; with a checkpoint dir
-    the loop waits for the pool to come back, restores the last Save into
-    the session (re-registration ships it) and resumes — killing and
-    restarting workers mid-run loses at most ``ckpt_every`` steps.
+    with Send/Recv riding the wire rendezvous.
+
+    Worker death (heartbeat timeout or transport error) aborts the step.
+    Recovery prefers §13 **partial re-placement**: the dead task's
+    subgraph is re-placed onto a ``--standby`` worker or a survivor,
+    only its Variables restore from the last checkpoint (survivors keep
+    live state), and the recovery log says exactly what was kept.  When
+    nothing can host the dead task, the whole-pool fallback remains:
+    wait for the pool, restore the checkpoint, rebind, resume.
 
     The LM Call-based steps stay single-process for now: their loss
     closures cannot ship (ROADMAP: wire-shippable Call factories).
     """
     from ..core import Session
     from ..core.executor import ExecutorError
+    from ..distrib.master import RecoveryError
     from ..distrib.wire import ClusterSpec
     from .steps import build_wire_train_step
 
     spec = ClusterSpec.parse(cluster)
     tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
     ws = build_wire_train_step(tasks, lr=lr, seed=seed)
-    sess = Session(ws.builder.graph, cluster=spec)
+    sess = Session(ws.builder.graph, cluster=spec, standby=standby or ())
     run = sess.make_callable([ws.loss, ws.train_op], [ws.feed_x, ws.feed_y])
     print(f"[train] cluster={','.join(spec.workers)} tasks={len(tasks)} "
           f"graph_nodes={len(ws.builder.graph.nodes)} (wire step)")
@@ -213,8 +219,32 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
                 recoveries += 1
                 print(f"[train] §3.3 worker-pool failure: {e}\n"
                       f"[train] recovery {recoveries}/{max_recoveries}: "
-                      f"waiting {retry_wait:.0f}s for the pool, restoring "
-                      f"last checkpoint")
+                      f"trying §13 partial re-placement first")
+                # --- §13 partial path: re-place only the dead task(s),
+                # survivors keep live state; only the dead task's
+                # Variables restore from the last checkpoint.
+                try:
+                    ckpt = (mgr.restore_latest()
+                            if mgr and mgr.latest_step() is not None else None)
+                    report = sess.recover_dead_tasks(ckpt)
+                    if report.mode != "noop":
+                        print(report.describe())
+                        if ckpt is not None and report.restored:
+                            # replacement tasks restart from the checkpoint
+                            # step; survivors being ahead is tolerated by
+                            # the §4.1 parameter-server async lineage (§13)
+                            i = int(mgr.latest_step())
+                        continue
+                    print("[train] no task marked dead (transient "
+                          "transport failure) — whole-pool path")
+                except RecoveryError as pe:
+                    print(f"[train] partial re-placement unavailable: {pe}\n"
+                          f"[train] falling back to whole-pool restart: "
+                          f"waiting {retry_wait:.0f}s for the pool, restoring "
+                          f"last checkpoint")
+                except Exception as pe:  # noqa: BLE001 — replacement died too
+                    print(f"[train] partial re-placement failed: {pe}\n"
+                          f"[train] falling back to whole-pool restart")
                 time.sleep(retry_wait)
                 if mgr and mgr.latest_step() is not None:
                     for name, value in mgr.restore_latest().items():
@@ -275,12 +305,17 @@ def main(argv=None) -> int:
                          "worker pool (one `python -m repro.distrib.worker` "
                          "process per endpoint; DESIGN.md §11) with §3.3 "
                          "checkpointed recovery")
+    ap.add_argument("--standby", default=None, metavar="HOST:PORT,...",
+                    help="spare workers for §13 partial re-placement: a dead "
+                         "task's subgraph re-places onto the first free "
+                         "standby (survivors keep live state) before the "
+                         "whole-pool checkpoint restart is considered")
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
     if args.cluster:
         res = train_cluster(args.cluster, steps=args.steps, batch=args.batch,
                             lr=args.lr, ckpt_dir=args.ckpt_dir,
-                            ckpt_every=args.ckpt_every)
+                            ckpt_every=args.ckpt_every, standby=args.standby)
     else:
         res = train(args.arch, smoke=args.smoke, steps=args.steps,
                     batch=args.batch, seq=args.seq, lr=args.lr,

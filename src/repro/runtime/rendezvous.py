@@ -109,6 +109,13 @@ class Rendezvous:
             self._dead = exc
             self._cv.notify_all()
 
+    def pending_keys(self) -> list:
+        """Keys currently deposited and unconsumed — the §13 hygiene
+        probe (``debug_state`` RPC): after an aborted execution is purged
+        the mailbox must hold nothing under that execution's prefix."""
+        with self._cv:
+            return sorted(self._table)
+
     def purge_prefix(self, prefix: str) -> int:
         """Drop every key starting with ``prefix`` (per-execution cleanup
         of the distributed mailbox; DESIGN.md §11)."""

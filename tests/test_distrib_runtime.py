@@ -77,8 +77,14 @@ def test_two_process_pipeline_bitmatches_in_process(pool, sessions):
     # genuinely two processes moving tensors over the wire
     plan = sess.executable([out.ref], set()).wire_plan
     assert sum(s["remote_fetches"] for s in plan.last_run_stats.values()) > 0
-    pids = {plan.master._info.get(t, {}).get("pid") for t in (0, 1)}
-    pids.discard(None)
+    # pids arrive on the heartbeat monitor's cadence: poll, don't race it
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:
+        pids = {plan.master._info.get(t, {}).get("pid") for t in (0, 1)}
+        pids.discard(None)
+        if len(pids) == 2:
+            break
+        time.sleep(0.1)
     assert os.getpid() not in pids and len(pids) == 2
 
 

@@ -1,0 +1,181 @@
+"""§13 deterministic fault injection: FaultPlan grammar + protocol hooks.
+
+Everything here runs against an in-process Worker (no subprocess spawn):
+the client-side hooks (drop/delay/refuse) fire in the Channel and the
+server-side stall_hb fires in the serve loop regardless of process
+boundaries.  ``kill`` rules are deliberately never installed in-process —
+``os._exit`` would take the test runner with it; the multi-process kill
+paths live in test_partial_replacement.py.
+"""
+import time
+
+import pytest
+
+from repro.distrib import faults
+from repro.distrib.faults import FaultPlan, FaultRule, InjectedFault
+from repro.distrib.protocol import Channel, ProtocolError
+from repro.distrib.worker import Worker
+
+
+@pytest.fixture(scope="module")
+def worker():
+    w = Worker(task=0)
+    w.start()
+    yield w
+    w.stop()
+
+
+@pytest.fixture(autouse=True)
+def _clear_plan():
+    # plans are process-global: never leak one into the next test
+    yield
+    faults.install(None)
+
+
+@pytest.fixture
+def channel(worker):
+    ch = Channel(worker.host, worker.port)
+    yield ch
+    ch.close()
+
+
+# ---------------------------------------------------------------------------
+# grammar
+
+
+def test_parse_describe_roundtrip():
+    spec = "seed=7;kill:step=3,task=1;refuse:port=7077,times=2;delay:ms=5"
+    plan = FaultPlan.parse(spec)
+    assert plan.seed == 7
+    assert [r.action for r in plan.rules] == ["kill", "refuse", "delay"]
+    # describe() is the canonical replay spec: parsing it again is stable
+    again = FaultPlan.parse(plan.describe())
+    assert again.describe() == plan.describe()
+    assert [r.spec() for r in again.rules] == [r.spec() for r in plan.rules]
+
+
+def test_bad_rules_rejected():
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultPlan.parse("explode:times=1")
+    with pytest.raises(ValueError, match="kill rule requires"):
+        FaultPlan.parse("kill:task=1")
+    with pytest.raises(ValueError, match="delay rule requires"):
+        FaultPlan.parse("delay:rpc=heartbeat")
+
+
+def test_jitter_rng_replays_with_seed():
+    faults.install("seed=42;delay:ms=1,rpc=never")
+    a = [faults.jitter_rng().random() for _ in range(5)]
+    faults.install("seed=42;delay:ms=1,rpc=never")
+    b = [faults.jitter_rng().random() for _ in range(5)]
+    assert a == b  # retry-backoff timing replays with the plan
+
+
+def test_after_window_skips_first_matches():
+    rule = FaultRule("drop", rpc="heartbeat", times=1, after=2)
+    assert not rule._consume() and not rule._consume()  # skipped window
+    assert rule._consume()       # fires on the 3rd match
+    assert not rule._consume()   # times exhausted
+
+
+# ---------------------------------------------------------------------------
+# client-side hooks through a real Channel
+
+
+def test_drop_retried_for_idempotent_rpc(channel):
+    plan = faults.install("drop:rpc=heartbeat,times=2")
+    rep = channel.call("heartbeat", _timeout=30.0)
+    assert rep["task"] == 0
+    assert plan.rules[0].fired == 2  # both injected drops retried through
+
+
+def test_drop_with_single_attempt_surfaces(channel):
+    faults.install("drop:rpc=heartbeat")
+    with pytest.raises(InjectedFault):
+        # the heartbeat monitor's contract: its loop is the retry, so a
+        # single-attempt probe must see the raw failure
+        channel.call("heartbeat", _attempts=1)
+    assert channel.call("heartbeat")["task"] == 0  # rule exhausted
+
+
+def test_run_graph_drop_is_fail_fast(channel):
+    plan = faults.install("drop:rpc=run_graph,times=3")
+    with pytest.raises(InjectedFault):
+        channel.call("run_graph", handle="nope", execution_id="e0")
+    # non-idempotent: exactly one attempt, no retry budget consumed
+    assert plan.rules[0].fired == 1
+
+
+def test_injected_fault_is_a_transport_error():
+    # the runtime's failure classification hinges on this: an injected
+    # drop must condemn exactly like a real dead connection
+    assert issubclass(InjectedFault, ConnectionError)
+    assert issubclass(InjectedFault, OSError)
+
+
+def test_key_substring_targets_individual_tensors():
+    faults.install(FaultPlan(
+        [FaultRule("drop", rpc="recv_tensor", key="|pred")]))
+    # non-matching key: no fire
+    faults.on_call("recv_tensor", {"key": "e1|data;t0;t1;0"}, "h", 1)
+    with pytest.raises(InjectedFault):
+        faults.on_call("recv_tensor", {"key": "e1|pred;t0;t1;0"}, "h", 1)
+
+
+def test_refused_connections_retry_then_succeed(worker):
+    # satellite: Channel connect retry + backoff, covered with the
+    # injector refusing K times before letting the dial through
+    plan = faults.install(f"refuse:times=2,port={worker.port}")
+    ch = Channel(worker.host, worker.port)
+    try:
+        assert ch.call("heartbeat")["task"] == 0
+    finally:
+        ch.close()
+    assert plan.rules[0].fired == 2
+
+
+def test_refusals_beyond_attempts_surface(worker):
+    faults.install("refuse:times=99")
+    ch = Channel(worker.host, worker.port, connect_attempts=2)
+    try:
+        with pytest.raises(ConnectionRefusedError):
+            ch.call("heartbeat", _attempts=1)
+    finally:
+        ch.close()
+
+
+def test_refuse_scoped_to_other_port_never_fires(worker):
+    plan = faults.install(f"refuse:times=1,port={worker.port + 1}")
+    ch = Channel(worker.host, worker.port)
+    try:
+        assert ch.call("heartbeat")["task"] == 0
+    finally:
+        ch.close()
+    assert plan.rules[0].fired == 0
+
+
+def test_delay_injects_latency(channel):
+    faults.install("delay:ms=150,rpc=heartbeat")
+    t0 = time.monotonic()
+    channel.call("heartbeat")
+    assert time.monotonic() - t0 >= 0.15
+
+
+# ---------------------------------------------------------------------------
+# server-side stall_hb through a real serve loop
+
+
+def test_stall_hb_drops_without_reply_then_recovers(channel):
+    plan = faults.install("stall_hb:times=2,task=0")
+    with pytest.raises(ProtocolError, match="mid-call"):
+        channel.call("heartbeat", _attempts=1)
+    # second stall still pending: the default idempotent retry budget
+    # rides through it and reaches the (perfectly healthy) worker
+    assert channel.call("heartbeat")["task"] == 0
+    assert plan.rules[0].fired == 2
+
+
+def test_stall_hb_scoped_to_other_task_never_fires(channel):
+    plan = faults.install("stall_hb:times=1,task=5")
+    assert channel.call("heartbeat", _attempts=1)["task"] == 0
+    assert plan.rules[0].fired == 0

@@ -1,0 +1,389 @@
+"""§13 partial re-placement recovery + seeded fault-plan chaos tests.
+
+The acceptance contract: killing one worker (really, or via an injected
+``kill`` rule) recovers by re-placing ONLY the dead task's subgraph onto
+a standby or a survivor — survivors' live Variable state is bit-preserved
+against a pre-kill snapshot, only the dead task's Variables restore from
+the checkpoint, and post-recovery training bit-matches an uninterrupted
+run.  Same-seed FaultPlans replay identically (failure point AND
+recovered final state), and the whole-pool restart stays the fallback
+when nothing can host.
+
+Every test here is marked ``chaos``: the CI chaos job runs exactly this
+set under hard timeouts (``pytest -m chaos``); the tests also run in the
+default tier-1 selection because they are fully deterministic.  Tests
+print their plan as ``[chaos] REPRO_FAULTS=<spec>`` so a red CI run's
+job summary carries the exact replay recipe.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, Session, TensorRef, cond, while_loop
+from repro.core.executor import ExecutorError
+from repro.distrib import (RecoveryError, start_worker_processes,
+                           stop_worker_processes)
+from repro.distrib.protocol import Channel, WorkerError
+from repro.launch.steps import build_wire_train_step
+from repro.runtime.devices import DeviceSet
+
+pytestmark = pytest.mark.chaos
+
+T0, T1 = "/job:worker/task:0", "/job:worker/task:1"
+TASKS = [T0, T1]
+
+
+def _batch(i, n=32):
+    rs = np.random.RandomState(1000 + i)
+    return (jnp.asarray(rs.randn(n, 16).astype("f")),
+            jnp.asarray(rs.randint(0, 8, (n,)).astype("i")))
+
+
+def _ref_vars(seed, steps):
+    """Uninterrupted in-process reference: final Variable state."""
+    ws = build_wire_train_step(TASKS, seed=seed)
+    sess = Session(ws.builder.graph,
+                   devices=DeviceSet.make_cluster(2, 1, kind="cpu"))
+    run = sess.make_callable([ws.loss, ws.train_op], [ws.feed_x, ws.feed_y])
+    for i in range(steps):
+        run(*_batch(i))
+    out = {n: np.asarray(sess.variable_value(n)) for n in ws.var_names}
+    sess.close()
+    return out
+
+
+def _expect_dead(run, i, *, timeout=30.0):
+    """Drive the step until the lost worker surfaces as an ExecutorError
+    (the first post-kill run may race the detection)."""
+    with pytest.raises(ExecutorError) as ei:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            run(*_batch(i))
+    return ei.value
+
+
+def test_partial_replacement_onto_standby_keeps_survivor_live_state():
+    ref = _ref_vars(seed=7, steps=6)
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0)
+    sprocs, sspec = start_worker_processes(1, first_task=2,
+                                           rendezvous_timeout=10.0)
+    sess = None
+    try:
+        ws = build_wire_train_step(TASKS, seed=7)
+        sess = Session(ws.builder.graph, cluster=spec)
+        run = sess.make_callable([ws.loss, ws.train_op],
+                                 [ws.feed_x, ws.feed_y])
+        ckpts = {}
+        for i in range(3):
+            run(*_batch(i))
+            ckpts[i + 1] = {k: np.asarray(v)
+                            for k, v in sess.pull_cluster_variables().items()}
+        procs[1].kill()  # task 1 owns w2; task 0 (owns w1) survives
+        time.sleep(0.2)
+        err = _expect_dead(run, 3)
+        assert "task:1" in str(err)
+
+        # poison the session store's copy of the SURVIVOR's Variable: if
+        # recovery wrongly re-registered or pushed task 0, training below
+        # would diverge and the worker-side probe would read garbage
+        sess.set_variable("w1", np.full_like(ckpts[3]["w1"], 1e9))
+
+        report = sess.recover_dead_tasks(ckpts[3],
+                                         standby=[sspec.workers[0]])
+        print(report.describe())
+        assert report.mode == "partial"
+        assert sorted(report.dead) == [1]
+        assert report.survivors == (0,)
+        assert report.replacements == {1: sspec.workers[0]}
+        assert report.kept_live == ("w1",)
+        assert report.restored == ("w2",)
+
+        # the survivor's live state is bit-preserved vs the pre-kill
+        # snapshot — read worker-side, bypassing the poisoned store
+        rep = sess.master.channels[0].call(
+            "get_variables", namespace=sess.wire_namespace, names=["w1"])
+        np.testing.assert_array_equal(np.asarray(rep["values"]["w1"]),
+                                      ckpts[3]["w1"])
+
+        misses = sess.cache_stats["misses"]
+        for i in range(3, 6):
+            run(*_batch(i))
+        # endpoint swap kept the shape-only fingerprint: no rebuild
+        assert sess.cache_stats["misses"] == misses
+        final = {k: np.asarray(v)
+                 for k, v in sess.pull_cluster_variables().items()}
+        for name in ws.var_names:
+            np.testing.assert_array_equal(final[name], ref[name])
+    finally:
+        if sess is not None:
+            sess.close()
+        stop_worker_processes(procs, spec)
+        stop_worker_processes(sprocs, sspec)
+
+
+def test_partial_replacement_onto_survivor_hosts_two_tasks():
+    """No standby: the dead task's subgraph lands on the survivor's
+    process, which then serves BOTH tasks of the plan (registry keyed by
+    (handle, task)); peer fetches between the two co-hosted tasks resolve
+    through the shared mailbox, not loopback RPCs."""
+    ref = _ref_vars(seed=9, steps=5)
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0)
+    sess = None
+    try:
+        ws = build_wire_train_step(TASKS, seed=9)
+        sess = Session(ws.builder.graph, cluster=spec)
+        run = sess.make_callable([ws.loss, ws.train_op],
+                                 [ws.feed_x, ws.feed_y])
+        ckpts = {}
+        for i in range(2):
+            run(*_batch(i))
+            ckpts[i + 1] = {k: np.asarray(v)
+                            for k, v in sess.pull_cluster_variables().items()}
+        procs[1].kill()
+        time.sleep(0.2)
+        _expect_dead(run, 2)
+        report = sess.recover_dead_tasks(ckpts[2])
+        print(report.describe())
+        assert report.replacements == {1: spec.workers[0]}
+        for i in range(2, 5):
+            run(*_batch(i))
+        final = {k: np.asarray(v)
+                 for k, v in sess.pull_cluster_variables().items()}
+        for name in ws.var_names:
+            np.testing.assert_array_equal(final[name], ref[name])
+        # genuinely dual-task: one process, two registered slots
+        st = sess.master.channels[0].call("debug_state")
+        assert any(s.endswith("task:0") for s in st["registered"])
+        assert any(s.endswith("task:1") for s in st["registered"])
+    finally:
+        if sess is not None:
+            sess.close()
+        stop_worker_processes(procs, spec)
+
+
+def test_whole_pool_fallback_when_nothing_can_host():
+    """Both workers dead -> RecoveryError (partial path refuses) -> the
+    documented whole-pool recipe still lands bit-exact.  This is the test
+    that distinguishes the two recovery paths."""
+    ref = _ref_vars(seed=5, steps=4)
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0)
+    procs2 = spec2 = None
+    sess = None
+    try:
+        ws = build_wire_train_step(TASKS, seed=5)
+        sess = Session(ws.builder.graph, cluster=spec)
+        run = sess.make_callable([ws.loss, ws.train_op],
+                                 [ws.feed_x, ws.feed_y])
+        ckpts = {}
+        for i in range(2):
+            run(*_batch(i))
+            ckpts[i + 1] = {k: np.asarray(v)
+                            for k, v in sess.pull_cluster_variables().items()}
+        for p in procs:
+            p.kill()
+        time.sleep(0.2)
+        _expect_dead(run, 2)
+        deadline = time.monotonic() + 30  # monitor must condemn BOTH
+        while len(sess.master.dead) < 2 and time.monotonic() < deadline:
+            time.sleep(0.1)
+        assert sorted(sess.master.dead) == [0, 1]
+        with pytest.raises(RecoveryError, match="whole-pool"):
+            sess.recover_dead_tasks(ckpts[2])
+
+        procs2, spec2 = start_worker_processes(2, rendezvous_timeout=10.0)
+        for name, value in ckpts[2].items():
+            sess.set_variable(name, value)
+        sess.rebind_cluster(spec2)
+        for i in range(2, 4):
+            run(*_batch(i))
+        final = {k: np.asarray(v)
+                 for k, v in sess.pull_cluster_variables().items()}
+        for name in ws.var_names:
+            np.testing.assert_array_equal(final[name], ref[name])
+    finally:
+        if sess is not None:
+            sess.close()
+        stop_worker_processes(procs, spec)
+        if procs2 is not None:
+            stop_worker_processes(procs2, spec2)
+
+
+def test_injected_kill_replays_identically():
+    """Same-seed FaultPlan -> same failure point, same recovered state,
+    twice over — and both runs bit-match the uninterrupted reference
+    (an injected kill fires on run_graph *receipt*, before any state
+    mutates, so recovery loses nothing)."""
+    plan_spec = "seed=5;kill:task=1,step=3"
+    print(f"[chaos] REPRO_FAULTS={plan_spec}")
+    ref = _ref_vars(seed=13, steps=5)
+    outcomes = []
+    for _ in range(2):
+        procs, spec = start_worker_processes(
+            2, rendezvous_timeout=10.0,
+            extra_env={"REPRO_FAULTS": plan_spec})
+        sess = None
+        try:
+            ws = build_wire_train_step(TASKS, seed=13)
+            sess = Session(ws.builder.graph, cluster=spec)
+            run = sess.make_callable([ws.loss, ws.train_op],
+                                     [ws.feed_x, ws.feed_y])
+            ckpts = {0: {}}
+            fail_step = None
+            i = 0
+            while i < 5:
+                try:
+                    run(*_batch(i))
+                except (ExecutorError, WorkerError, OSError):
+                    assert fail_step is None, "plan must kill exactly once"
+                    fail_step = i
+                    report = sess.recover_dead_tasks(ckpts[i])
+                    print(report.describe())
+                    continue  # retry the aborted step on the replacement
+                i += 1
+                ckpts[i] = {k: np.asarray(v)
+                            for k, v in sess.pull_cluster_variables().items()}
+            outcomes.append((fail_step, ckpts[5]))
+        finally:
+            if sess is not None:
+                sess.close()
+            stop_worker_processes(procs, spec)
+    (s1, f1), (s2, f2) = outcomes
+    assert s1 == s2 == 2  # the 3rd run_graph on task 1, every replay
+    for name in ("w1", "w2"):
+        np.testing.assert_array_equal(f1[name], f2[name])
+        np.testing.assert_array_equal(f1[name], ref[name])
+
+
+# ---------------------------------------------------------------------------
+# rendezvous hygiene across control flow
+
+
+def _loop_graph(limit):
+    b = GraphBuilder()
+    i0 = b.constant(jnp.array(0), name="i0", device=T0)
+    acc0 = b.constant(jnp.array(0.0), name="acc0", device=T0)
+    lim = b.constant(jnp.array(limit), name="lim")
+    one = b.constant(jnp.array(1), name="one")
+    outs = while_loop(
+        b, lambda i, a: b.less(i, lim),
+        lambda i, a: [b.add(i, one, name="inc", device=T1),
+                      b.add(a, b.mul(b.cast(i, "float32"),
+                                     b.cast(i, "float32"), name="sq",
+                                     device=T1),
+                            name="acc", device=T0)],
+        [i0, acc0])
+    return b, outs
+
+
+def test_rendezvous_hygiene_after_injected_midrun_kill():
+    """A cross-process loop, a zero-iteration loop, then a cond whose
+    remote branch is killed mid-iteration: after abort + recovery the
+    survivor must hold NO leaked rendezvous state — empty mailbox, no
+    active executions, no straggler fetcher threads."""
+    plan_spec = "seed=3;kill:task=1,step=3"
+    print(f"[chaos] REPRO_FAULTS={plan_spec}")
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0,
+                                         extra_env={"REPRO_FAULTS": plan_spec})
+    sessions = []
+    try:
+        # run_graph receipts 1+2 on task 1: both loops complete cleanly
+        b5, outs5 = _loop_graph(5)
+        s5 = Session(b5.graph, cluster=spec)
+        sessions.append(s5)
+        r5 = s5.run(outs5)
+        assert int(r5[0]) == 5
+        b0, outs0 = _loop_graph(0)
+        s0 = Session(b0.graph, cluster=spec)
+        sessions.append(s0)
+        r0 = s0.run(outs0)
+        assert int(r0[0]) == 0 and float(r0[1]) == 0.0
+
+        # receipt 3: task 1 dies holding the cond's remote branch — the
+        # survivor blocks on the wire mid-iteration until the §13 abort
+        # purges the execution
+        b = GraphBuilder()
+        p = b.placeholder("p")
+        x = b.constant(jnp.array(3.0), name="x", device=T0)
+        res = cond(b, p,
+                   lambda t: [b.mul(t, t, name="tb", device=T1)],
+                   lambda f: [b.neg(f, name="fb", device=T0)], [x])
+        sc = Session(b.graph, cluster=spec)
+        sessions.append(sc)
+        with pytest.raises(ExecutorError):
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                sc.run(res, {TensorRef("p", 0): jnp.array(True)})
+
+        # variable-free partial recovery: survivor hosts the dead task
+        report = sc.recover_dead_tasks()
+        print(report.describe())
+        assert report.restored == () and report.kept_live == ()
+        out = sc.run(res, {TensorRef("p", 0): jnp.array(True)})
+        assert float(out[0]) == 9.0
+        out = sc.run(res, {TensorRef("p", 0): jnp.array(False)})
+        assert float(out[0]) == -3.0
+
+        # hygiene probe: poll until the async cleanups land, then demand
+        # a spotless survivor process
+        ch = Channel(*spec.host_port(0))
+        try:
+            deadline = time.monotonic() + 20
+            while True:
+                st = ch.call("debug_state")
+                if (not st["pending_keys"] and not st["active_executions"]
+                        and st["fetch_threads"] == 0):
+                    break
+                if time.monotonic() > deadline:
+                    raise AssertionError(f"leaked rendezvous state: {st}")
+                time.sleep(0.2)
+        finally:
+            ch.close()
+    finally:
+        for s in sessions:
+            s.close()
+        stop_worker_processes(procs, spec)
+
+
+# ---------------------------------------------------------------------------
+# §13 distributed parity guard (satellite of the §9 guard)
+
+
+def test_distributed_parity_guard_preserves_training_trajectory():
+    """parity_guard over a cluster session rides get/set_variables: the
+    strict wire reference runs first, worker state rewinds, then the fast
+    plan runs.  If the snapshot/restore is faithful, N guarded steps
+    (first run + every 2nd sampled) bit-match an unguarded fast session."""
+    procs, spec = start_worker_processes(2, rendezvous_timeout=10.0)
+    try:
+        ws = build_wire_train_step(TASKS, seed=21)
+        guarded = Session(ws.builder.graph, cluster=spec, numerics="fast",
+                          parity_guard="sample:2")
+        grun = guarded.make_callable([ws.loss, ws.train_op],
+                                     [ws.feed_x, ws.feed_y])
+        glosses = [np.asarray(grun(*_batch(i))[0]) for i in range(4)]
+        # the guard genuinely built its strict companion: the fresh pool
+        # now holds TWO registered handles (fast + strict) on both tasks
+        st = guarded.master.channels[0].call("debug_state")
+        assert len(st["registered"]) == 2
+        gvars = {k: np.asarray(v)
+                 for k, v in guarded.pull_cluster_variables().items()}
+        guarded.close()
+
+        ws2 = build_wire_train_step(TASKS, seed=21)
+        plain = Session(ws2.builder.graph, cluster=spec, numerics="fast",
+                        parity_guard=False)
+        prun = plain.make_callable([ws2.loss, ws2.train_op],
+                                   [ws2.feed_x, ws2.feed_y])
+        plosses = [np.asarray(prun(*_batch(i))[0]) for i in range(4)]
+        pvars = {k: np.asarray(v)
+                 for k, v in plain.pull_cluster_variables().items()}
+        plain.close()
+
+        np.testing.assert_array_equal(np.asarray(glosses),
+                                      np.asarray(plosses))
+        for name in ws.var_names:
+            np.testing.assert_array_equal(gvars[name], pvars[name])
+    finally:
+        stop_worker_processes(procs, spec)
