@@ -17,10 +17,10 @@ from repro.core import GraphBuilder, Session, gradients, compile_subgraph
 from repro.optim import attach_train_op
 
 
-def main():
+def build_graph():
+    """Figure-1 graph + §4.1 train op, as an importable factory — the
+    `python -m repro.analysis.lint` suite verifies exactly this graph."""
     rs = np.random.RandomState(0)
-
-    # --- Figure 1: build the graph with the Python front end
     b = GraphBuilder()
     W = b.variable("W", init_value=lambda: jnp.array(
         rs.uniform(-1, 1, (100, 784)).astype("float32")))
@@ -29,15 +29,26 @@ def main():
     y = b.placeholder("y")                       # (batch,) int labels in [0,100)
     h = b.relu(b.add(b.matmul(x, b.call(jnp.transpose, [W], name="WT")), bias))
     C = b.softmax_xent(h, y, name="C")
+    train_op = attach_train_op(b, C, [W, bias], optimizer="adamw", lr=1e-3)
+    return b, dict(W=W, bias=bias, x=x, y=y, C=C, train_op=train_op)
+
+
+def main():
+    rs = np.random.RandomState(0)
+
+    # --- Figure 1: build the graph with the Python front end (plus the
+    # §4.1 + optimizer nodes: "updates are just more nodes in the graph")
+    b, refs = build_graph()
+    W, bias, x, y, C, train_op = (refs[k] for k in
+                                  ("W", "bias", "x", "y", "C", "train_op"))
 
     # --- §2 Session.Run: eager execution of exactly the needed subgraph
+    # (fetching C alone prunes the optimizer nodes away)
     sess = Session(b.graph)
     X = jnp.array(rs.randn(32, 784).astype("float32"))
     Y = jnp.array(rs.randint(0, 100, (32,)), jnp.int32)
     print("initial loss:", float(sess.run(C.ref, {x.ref: X, y.ref: Y})))
 
-    # --- §4.1 + optimizer nodes: "updates are just more nodes in the graph"
-    train_op = attach_train_op(b, C, [W, bias], optimizer="adamw", lr=1e-3)
     for step in range(10):
         loss, _ = sess.run([C.ref, train_op.ref], {x.ref: X, y.ref: Y})
         print(f"eager step {step}: loss {float(loss):.4f}")

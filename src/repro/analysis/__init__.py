@@ -1,0 +1,23 @@
+"""§14 pre-execution static analysis: the graph verifier.
+
+    from repro.analysis import verify_graph
+    report = verify_graph(graph, fetches=[...])
+    for d in report.errors(): print(d.format())
+
+Wired through ``Session(verify="off"|"warn"|"error")`` / ``REPRO_VERIFY``
+(runs once per Executable build, cached with the Executable), through
+WirePlan registration (per-task slices + global pairing before shipping),
+and the ``python -m repro.analysis.lint`` CLI.
+"""
+from .diagnostics import (CODES, Diagnostic, GraphVerifyWarning,
+                          VerifyReport, apply_suppressions, make)
+from .verifier import (PASSES, STATS, VERIFY_MODES, enforce,
+                       task_slice_diagnostics, verify_executable,
+                       verify_graph, verify_wire_plan)
+
+__all__ = [
+    "CODES", "Diagnostic", "GraphVerifyWarning", "VerifyReport",
+    "apply_suppressions", "make", "PASSES", "STATS", "VERIFY_MODES",
+    "enforce", "task_slice_diagnostics", "verify_executable",
+    "verify_graph", "verify_wire_plan",
+]

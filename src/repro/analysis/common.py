@@ -1,0 +1,183 @@
+"""Shared analysis state: one :class:`AnalysisContext` per verified graph.
+
+The context owns the expensive derived structures every pass needs —
+cycle-tolerant topological order (with Send/Recv pairing edges treated as
+happens-before), ancestor bitsets for O(1) ordering queries, static frame
+paths, and the rendezvous-key pairing index — computed lazily and once.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+from ..core.graph import Graph, Node, TensorRef
+from ..core import control_flow
+
+_UNSET = object()
+
+
+class AnalysisContext:
+    def __init__(self, graph: Graph, names: Optional[Iterable[str]] = None, *,
+                 fetches: Iterable = (), feed_keys: Iterable = (),
+                 placement: Optional[Dict[str, str]] = None,
+                 where: str = "graph") -> None:
+        self.graph = graph
+        self.names: Set[str] = (set(names) if names is not None
+                                else set(graph.nodes))
+        self.fetches: Tuple[TensorRef, ...] = tuple(
+            TensorRef.parse(f) for f in fetches)
+        self.feed_keys: FrozenSet[TensorRef] = frozenset(
+            TensorRef.parse(k) for k in feed_keys)
+        self.placement = dict(placement) if placement else None
+        self.where = where
+        # (node, port) -> jax.ShapeDtypeStruct | None; filled by the
+        # shapes pass, read by sendrecv's consistency check (C205)
+        self.specs: Dict[Tuple[str, int], object] = {}
+        self._pairing = _UNSET
+        self._order = _UNSET      # (order list, cyclic frozenset)
+        self._anc = _UNSET        # name -> ancestor bitset over order index
+        self._idx: Dict[str, int] = {}
+        self._frames = _UNSET
+
+    # -- basic edges ----------------------------------------------------
+    def fwd_deps(self, node: Node) -> List[str]:
+        """Forward predecessors: data + control edges inside the analyzed
+        set, excluding the legal NextIteration back edge (as topo_sort)."""
+        out = []
+        for d in self.graph.deps(node):
+            if d not in self.names:
+                continue
+            dn = self.graph.nodes.get(d)
+            if dn is not None and dn.op == "NextIteration":
+                continue
+            out.append(d)
+        return out
+
+    def device_of(self, name: str) -> Optional[str]:
+        if self.placement and name in self.placement:
+            return self.placement[name]
+        node = self.graph.nodes.get(name)
+        return node.device if node is not None else None
+
+    # -- rendezvous pairing --------------------------------------------
+    def pairing(self) -> Dict[str, Tuple[List[str], List[str]]]:
+        """rendezvous key -> ([send node names], [recv node names])."""
+        if self._pairing is _UNSET:
+            pairs: Dict[str, Tuple[List[str], List[str]]] = {}
+            for n in self.names:
+                node = self.graph.nodes[n]
+                if node.op not in ("Send", "Recv"):
+                    continue
+                key = node.attrs.get("rendezvous_key")
+                if key is None:
+                    continue
+                sends, recvs = pairs.setdefault(str(key), ([], []))
+                (sends if node.op == "Send" else recvs).append(n)
+            self._pairing = pairs
+        return self._pairing
+
+    # -- order + ordering queries --------------------------------------
+    def order(self) -> Tuple[List[str], FrozenSet[str]]:
+        """Cycle-tolerant topo order over forward edges PLUS Send->Recv
+        pairing edges (a Recv cannot fire before its Send completes).
+
+        Returns (order, cyclic): nodes involved in a genuine cycle —
+        i.e. a deadlock through pairing edges — are absent from the
+        order and reported in ``cyclic``.
+        """
+        if self._order is _UNSET:
+            extra: Dict[str, List[str]] = {}  # recv -> [send] happens-before
+            for key, (sends, recvs) in self.pairing().items():
+                for r in recvs:
+                    extra.setdefault(r, []).extend(sends)
+            indeg: Dict[str, int] = {}
+            consumers: Dict[str, List[str]] = {n: [] for n in self.names}
+            for n in self.graph.nodes:  # insertion order: deterministic
+                if n not in self.names:
+                    continue
+                ds = self.fwd_deps(self.graph.nodes[n]) + [
+                    s for s in extra.get(n, ()) if s in self.names]
+                indeg[n] = len(ds)
+                for d in ds:
+                    consumers[d].append(n)
+            order: List[str] = []
+            ready = [n for n in self.graph.nodes
+                     if n in self.names and indeg[n] == 0]
+            seen = set(ready)
+            while ready:
+                n = ready.pop(0)
+                order.append(n)
+                for c in consumers[n]:
+                    indeg[c] -= 1
+                    if indeg[c] == 0 and c not in seen:
+                        ready.append(c)
+                        seen.add(c)
+            cyclic = frozenset(self.names - set(order))
+            self._order = (order, cyclic)
+            self._idx = {n: i for i, n in enumerate(order)}
+        return self._order
+
+    def ancestors(self) -> Dict[str, int]:
+        """Per-node ancestor set as a bitset (int) over order indices."""
+        if self._anc is _UNSET:
+            order, _cyclic = self.order()
+            idx = self._idx
+            extra: Dict[str, List[str]] = {}
+            for key, (sends, recvs) in self.pairing().items():
+                for r in recvs:
+                    extra.setdefault(r, []).extend(sends)
+            anc: Dict[str, int] = {}
+            for n in order:
+                a = 0
+                for d in self.fwd_deps(self.graph.nodes[n]) + [
+                        s for s in extra.get(n, ()) if s in self.names]:
+                    if d in idx:
+                        a |= anc.get(d, 0) | (1 << idx[d])
+                anc[n] = a
+            self._anc = anc
+        return self._anc
+
+    def ordered(self, a: str, b: str) -> bool:
+        """True iff a happens-before b or b happens-before a on every
+        schedule.  Nodes caught in a pairing-edge cycle are reported by
+        the deadlock check instead; ordering is vacuously True for them
+        so the race pass does not double-report."""
+        self.order()
+        anc = self.ancestors()
+        ia, ib = self._idx.get(a), self._idx.get(b)
+        if ia is None or ib is None:
+            return True
+        return bool((anc[b] >> ia) & 1) or bool((anc[a] >> ib) & 1)
+
+    # -- frames ---------------------------------------------------------
+    def frames(self) -> Optional[Dict[str, Tuple[str, ...]]]:
+        """Static frame path per node, or None when the skeleton is too
+        malformed to converge (the frames pass reports F301 for that)."""
+        if self._frames is _UNSET:
+            try:
+                self._frames = control_flow.static_frames(
+                    self.graph, self.names)
+            except Exception:
+                self._frames = None
+        return self._frames
+
+    def is_loop_switch(self, node: Node) -> bool:
+        """Loop-skeleton Switch (vs a cond-style Switch): its data input
+        is a Merge carrying a NextIteration back edge, or its predicate
+        comes from a LoopCond, or a loop spec claims it.  Replicated
+        per-device skeletons (partition.py) keep the Merge+back-edge
+        shape even though their predicate arrives via Recv."""
+        for spec in self.graph.loop_specs.values():
+            if node.name in spec.switch_names:
+                return True
+        if len(node.inputs) >= 2:
+            pred = self.graph.nodes.get(node.inputs[1].node)
+            if pred is not None and pred.op == "LoopCond":
+                return True
+        if node.inputs:
+            data = self.graph.nodes.get(node.inputs[0].node)
+            if data is not None and data.op == "Merge":
+                for ref in data.inputs:
+                    src = self.graph.nodes.get(ref.node)
+                    if src is not None and src.op == "NextIteration":
+                        return True
+        return False

@@ -1,0 +1,73 @@
+"""Deadness analysis (DESIGN.md §14 pass 5).
+
+The executor's §4.4 deadness semantics: a cond-style Switch delivers a
+live value on one output port and DEAD on the other, deadness propagates
+input->output, and fetching a dead tensor raises at runtime ("fetch is
+dead (untaken branch)").  This pass computes, per tensor, the set of
+branch *guards* — (switch, port) pairs that must be taken for the tensor
+to be live — and flags any fetch whose guard set is non-empty: that
+fetch works only while the predicate cooperates.
+
+Merge is the liveness join (live iff ANY input is live), modeled as the
+intersection of its inputs' guard sets — complementary branch guards of
+one Switch drop out, so properly Merged cond results are unguarded.
+Loop switches (detected structurally) are exempt: loop Exits are always
+live at termination.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Tuple
+
+from .common import AnalysisContext
+from .diagnostics import Diagnostic, make
+
+Guard = Tuple[str, int]  # (switch node, taken output port)
+
+
+def run(ctx: AnalysisContext) -> List[Diagnostic]:
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+    order, _cyclic = ctx.order()
+    gmap: Dict[Tuple[str, int], FrozenSet[Guard]] = {}
+    node_guard: Dict[str, FrozenSet[Guard]] = {}
+
+    for n in order:
+        node = g.nodes[n]
+        base: FrozenSet[Guard] = frozenset()
+        for ref in node.inputs:
+            base |= gmap.get((ref.node, ref.port),
+                             node_guard.get(ref.node, frozenset()))
+        for c in node.control_inputs:
+            base |= node_guard.get(c, frozenset())
+        if node.op == "Switch" and not ctx.is_loop_switch(node):
+            gmap[(n, 0)] = base | {(n, 0)}
+            gmap[(n, 1)] = base | {(n, 1)}
+            node_guard[n] = base
+        elif node.op == "Merge":
+            cand = [gmap.get((r.node, r.port),
+                             node_guard.get(r.node, frozenset()))
+                    for r in node.inputs]
+            joined = (frozenset.intersection(*cand)
+                      if cand else frozenset())
+            gmap[(n, 0)] = gmap[(n, 1)] = joined
+            node_guard[n] = joined
+        else:
+            node_guard[n] = base
+
+    for f in ctx.fetches:
+        guards = gmap.get((f.node, f.port),
+                          node_guard.get(f.node, frozenset()))
+        if guards:
+            gl = sorted(guards)
+            branches = ", ".join(
+                f"{s!r} port {p} ({'true' if p == 1 else 'false'} branch)"
+                for s, p in gl)
+            diags.append(make(
+                "D501",
+                f"fetch {f} is live only when {branches} is taken; "
+                f"fetching it on the other branch raises 'fetch is dead "
+                f"(untaken branch)' at runtime",
+                nodes=(f.node,) + tuple(s for s, _ in gl),
+                fix="fetch the cond's Merge output instead, or only fetch "
+                    "this tensor when the predicate is known to hold"))
+    return diags

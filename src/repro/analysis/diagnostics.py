@@ -1,0 +1,159 @@
+"""Structured diagnostics for the pre-execution graph verifier (DESIGN.md §14).
+
+Every analysis pass reports :class:`Diagnostic` records with a *stable*
+code from :data:`CODES` — codes are API: tests assert them, the
+``verify_ignore`` node annotation suppresses them, and the lint CLI and
+CI summary tables key on them.  Severity is fixed per code (the policy
+lives in the table, not in call sites) so a pass cannot accidentally
+demote an error to a warning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+
+class GraphVerifyWarning(UserWarning):
+    """Emitted by ``Session(verify="warn")`` for any diagnostic."""
+
+
+# code -> (pass name, severity, short description).  Stable: never renumber.
+CODES: Dict[str, Tuple[str, str, str]] = {
+    # races -------------------------------------------------------------
+    "V101": ("races", "error",
+             "write/write race: two unordered writes to one Variable"),
+    "V102": ("races", "error",
+             "read/write race: Variable read unordered with a write"),
+    "V103": ("races", "warning",
+             "Assign/AssignAdd target is not a Variable node"),
+    # send/recv + deadlock ---------------------------------------------
+    "C201": ("sendrecv", "error",
+             "orphan Recv: no Send produces its rendezvous key"),
+    "C202": ("sendrecv", "warning",
+             "orphan Send: no Recv consumes its rendezvous key"),
+    "C203": ("sendrecv", "error",
+             "duplicate Send: multiple Sends share one rendezvous key"),
+    "C204": ("sendrecv", "error",
+             "frame-mismatched rendezvous: Send and Recv execute in "
+             "different frames, so their §4.4 frame-tagged keys never match"),
+    "C205": ("sendrecv", "error",
+             "inconsistent rendezvous: dtype/shape/compress disagree "
+             "across one rendezvous key"),
+    "C206": ("sendrecv", "error",
+             "deadlock: cross-device cycle through Send/Recv pairing edges"),
+    # frame well-formedness --------------------------------------------
+    "F301": ("frames", "error",
+             "malformed control-flow frame skeleton"),
+    "F302": ("frames", "error",
+             "loop predicate placed off the loop's home device"),
+    "F303": ("frames", "error",
+             "nested loop straddles devices"),
+    # static shape/dtype ------------------------------------------------
+    "S401": ("shapes", "error",
+             "shape/dtype mismatch: op rejects its input signatures"),
+    "S402": ("shapes", "warning",
+             "Assign changes the Variable's shape or dtype"),
+    # deadness ----------------------------------------------------------
+    "D501": ("deadness", "warning",
+             "fetch reachable only through one Switch branch"),
+    # wire-plan slice checks -------------------------------------------
+    "P601": ("wireplan", "error",
+             "task slice not self-contained: edge crosses a task "
+             "boundary without a Send/Recv pair"),
+    # internal ----------------------------------------------------------
+    "X000": ("verifier", "warning",
+             "analysis pass failed internally (diagnostic coverage lost)"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One verifier finding: stable code, offending nodes, suggested fix."""
+
+    code: str
+    severity: str            # "error" | "warning"
+    pass_name: str
+    message: str
+    nodes: Tuple[str, ...] = ()
+    devices: Tuple[str, ...] = ()
+    fix: str = ""
+
+    def format(self) -> str:
+        loc = []
+        if self.nodes:
+            loc.append("nodes: " + ", ".join(self.nodes))
+        if self.devices:
+            loc.append("devices: " + ", ".join(self.devices))
+        head = f"{self.code} [{self.severity}] {self.message}"
+        if loc:
+            head += "  (" + "; ".join(loc) + ")"
+        if self.fix:
+            head += f"  fix: {self.fix}"
+        return head
+
+
+def make(code: str, message: str, *, nodes: Sequence[str] = (),
+         devices: Sequence[str] = (), fix: str = "") -> Diagnostic:
+    pass_name, severity, _ = CODES[code]
+    return Diagnostic(code=code, severity=severity, pass_name=pass_name,
+                      message=message, nodes=tuple(nodes),
+                      devices=tuple(devices), fix=fix)
+
+
+def internal_failure(pass_name: str, exc: BaseException) -> Diagnostic:
+    return Diagnostic(
+        code="X000", severity="warning", pass_name=pass_name,
+        message=f"pass {pass_name!r} failed internally: "
+                f"{type(exc).__name__}: {exc}",
+        fix="report this; the pass found nothing, not a clean bill")
+
+
+def apply_suppressions(graph, diags: Iterable[Diagnostic]
+                       ) -> Tuple[List[Diagnostic], int]:
+    """Drop diagnostics annotated away (DESIGN.md §14 escape hatch).
+
+    A diagnostic is suppressed when ANY offending node carries its code in
+    the node's ``verify_ignore`` attr — set at build time via
+    ``attrs={"verify_ignore": ("V101",)}``, conventionally accompanied by
+    a ``# verify: ignore[V101]`` comment explaining why, like a linter
+    pragma.  Returns (kept, suppressed_count).
+    """
+    kept: List[Diagnostic] = []
+    n_sup = 0
+    for d in diags:
+        suppressed = False
+        for n in d.nodes:
+            node = graph.nodes.get(n)
+            if node is not None and d.code in tuple(
+                    node.attrs.get("verify_ignore", ()) or ()):
+                suppressed = True
+                break
+        if suppressed:
+            n_sup += 1
+        else:
+            kept.append(d)
+    return kept, n_sup
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    """The verifier's product for one graph/plan: sorted diagnostics."""
+
+    diagnostics: List[Diagnostic]
+    suppressed: int = 0
+    where: str = "graph"
+
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "error"]
+
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "warning"]
+
+    def format(self) -> str:
+        if not self.diagnostics:
+            return f"{self.where}: clean ({self.suppressed} suppressed)"
+        lines = [f"{self.where}: {len(self.errors())} error(s), "
+                 f"{len(self.warnings())} warning(s), "
+                 f"{self.suppressed} suppressed"]
+        lines += ["  " + d.format() for d in self.diagnostics]
+        return "\n".join(lines)

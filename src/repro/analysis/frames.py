@@ -1,0 +1,148 @@
+"""Frame well-formedness (DESIGN.md §14 pass 3).
+
+Checks the §4.4 Enter/Merge/Switch/NextIteration/Exit skeleton invariants
+the executor's tagged-frame interpreter assumes, plus — when a placement
+is available — the carried ROADMAP distributed-control-flow rules
+(predicate on the loop's home device, no nested loop straddling devices)
+as structured diagnostics instead of ad-hoc GraphErrors.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .common import AnalysisContext
+from .diagnostics import Diagnostic, make
+
+
+def run(ctx: AnalysisContext) -> List[Diagnostic]:
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+
+    for n in sorted(ctx.names):
+        node = g.nodes[n]
+        if node.op == "Enter" and "frame" not in node.attrs:
+            diags.append(make(
+                "F301",
+                f"Enter {n!r} has no 'frame' attr; the executor cannot "
+                f"tag its frame",
+                nodes=(n,), fix="set attrs={'frame': <loop name>}"))
+        if node.op == "Switch" and len(node.inputs) != 2:
+            diags.append(make(
+                "F301",
+                f"Switch {n!r} has {len(node.inputs)} data inputs, "
+                f"expected (value, predicate)",
+                nodes=(n,), fix="pass exactly [value, pred]"))
+        if node.op == "Merge" and not node.inputs:
+            diags.append(make(
+                "F301", f"Merge {n!r} has no inputs", nodes=(n,),
+                fix="a Merge needs at least one live candidate input"))
+        if node.op == "Merge" and node.inputs:
+            srcs = [g.nodes.get(r.node) for r in node.inputs]
+            has_back = any(s is not None and s.op == "NextIteration"
+                           for s in srcs)
+            has_fwd = any(s is not None and s.op != "NextIteration"
+                          for s in srcs)
+            if has_back and not has_fwd:
+                diags.append(make(
+                    "F301",
+                    f"Merge {n!r} has only NextIteration back edges and "
+                    f"no Enter-side input; the first iteration can never "
+                    f"start",
+                    nodes=(n,), fix="feed the Merge an Enter of the "
+                                    "initial value"))
+
+    frames = ctx.frames()
+    if frames is None:
+        # static_frames did not converge — name the Enter/Exit nodes so
+        # the report is actionable (the old path raised a bare ValueError)
+        sus = sorted(n for n in ctx.names
+                     if g.nodes[n].op in ("Enter", "Exit"))
+        diags.append(make(
+            "F301",
+            "static frame analysis did not converge: malformed "
+            "Enter/Exit nesting",
+            nodes=tuple(sus[:12]),
+            fix="every Exit must pop a frame some Enter pushed"))
+        return diags
+
+    for n in sorted(ctx.names):
+        node = g.nodes[n]
+        if node.op in ("Exit", "NextIteration"):
+            src_frame = (frames.get(node.inputs[0].node, ())
+                         if node.inputs else ())
+            if not src_frame:
+                diags.append(make(
+                    "F301",
+                    f"{node.op} {n!r} executes at the root frame; it must "
+                    f"live inside a loop frame",
+                    nodes=(n,),
+                    fix="build loops via control_flow.while_loop so the "
+                        "skeleton nests correctly"))
+
+    if ctx.placement:
+        diags.extend(_placement_rules(ctx, frames))
+    return diags
+
+
+def _placement_rules(ctx: AnalysisContext, frames) -> List[Diagnostic]:
+    """Carried ROADMAP limits, reported with nodes + devices (§14)."""
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+    for lname, spec in g.loop_specs.items():
+        anchors = [n for n in spec.switch_names + spec.merge_names
+                   if n in ctx.names and ctx.device_of(n)]
+        if not anchors:
+            continue
+        home = ctx.device_of(anchors[0])
+        pred_nodes = [n for n in spec.cond_nodes + [f"{lname}/cond"]
+                      if n in ctx.names]
+        off_home = [(n, ctx.device_of(n)) for n in pred_nodes
+                    if ctx.device_of(n) not in (None, home)]
+        if off_home:
+            ns = [n for n, _ in off_home]
+            diags.append(make(
+                "F302",
+                f"loop {lname!r} has home device {home!r} but its "
+                f"predicate node(s) "
+                f"{', '.join(f'{n!r} on {d!r}' for n, d in off_home)} "
+                f"compute elsewhere; the per-iteration predicate "
+                f"broadcast (§4.4) requires the predicate on the home "
+                f"device",
+                nodes=tuple(ns + [anchors[0]]),
+                devices=tuple(sorted({home} | {d for _, d in off_home})),
+                fix=f"colocate the predicate with the loop skeleton "
+                    f"(drop the device constraint or pin it to {home!r})"))
+    # nested loops (frame depth >= 2) must live on one device
+    by_frame = {}
+    for n in ctx.names:
+        f = frames.get(n, ())
+        if len(f) >= 2:
+            d = ctx.device_of(n)
+            if d:
+                by_frame.setdefault(f, {}).setdefault(d, []).append(n)
+    for f, by_dev in sorted(by_frame.items()):
+        if len(by_dev) > 1:
+            sample = [ns[0] for ns in by_dev.values()]
+            diags.append(make(
+                "F303",
+                f"nested loop frame {'/'.join(f)!r} straddles devices "
+                f"{sorted(by_dev)}; the partitioner replicates only "
+                f"single-level skeletons (carried ROADMAP limit)",
+                nodes=tuple(sorted(sample)),
+                devices=tuple(sorted(by_dev)),
+                fix="constrain the inner loop's nodes to one device"))
+    return diags
+
+
+def describe_nested_straddle(frame_path, nodes, devices) -> str:
+    """Formatter partition.py routes its nested-loop GraphErrors through
+    so the §14 satellite guarantee holds: every structural error names
+    nodes and devices."""
+    d = make("F303",
+             f"nested loop frame {'/'.join(frame_path)!r} straddles "
+             f"devices {sorted(devices)}",
+             nodes=tuple(sorted(nodes)[:8]),
+             devices=tuple(sorted(devices)),
+             fix="constrain the inner loop's nodes to one device "
+                 "(carried ROADMAP limit: nested loops may not straddle)")
+    return d.format()

@@ -1,0 +1,83 @@
+"""Variable race detector (DESIGN.md §14 pass 1).
+
+The executor dispatches every ready op, so two accesses to one Variable
+container with no happens-before path between them genuinely race: the
+final store value (write/write) or the value a read observes (read/write)
+depends on dispatch order.  The paper's contract (§3.4) is that stateful
+ops are ordered by explicit control/data edges; this pass checks it.
+
+Store-level accesses in this engine:
+
+* read  — executing the ``Variable`` node itself (container read),
+* write — ``Assign``/``AssignAdd`` (target = data input 0's node) and
+  ``Restore`` (targets = its ``var_names`` attr, no data edges at all —
+  which is exactly why Restore races are so easy to build).
+
+An Assign is always ordered after its own Variable's read (the data
+edge), so V102 in practice flags Restore-vs-read and other edge-free
+write paths — the silent nondeterminism §3.4 warns about.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import AnalysisContext
+from .diagnostics import Diagnostic, make
+
+
+def run(ctx: AnalysisContext) -> List[Diagnostic]:
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+    readers: Dict[str, List[str]] = {}   # variable name -> reading nodes
+    writers: Dict[str, List[str]] = {}   # variable name -> writing nodes
+    for n in sorted(ctx.names):
+        node = g.nodes[n]
+        if node.op == "Variable":
+            readers.setdefault(n, []).append(n)
+        elif node.op in ("Assign", "AssignAdd"):
+            if not node.inputs:
+                continue
+            tgt = node.inputs[0].node
+            tgt_node = g.nodes.get(tgt)
+            if tgt_node is None or tgt_node.op != "Variable":
+                diags.append(make(
+                    "V103",
+                    f"{node.op} {n!r} writes through {tgt!r} "
+                    f"(op {getattr(tgt_node, 'op', '?')}), not a Variable — "
+                    f"the store write lands under that node's name",
+                    nodes=(n, tgt),
+                    fix="make data input 0 the Variable node being updated"))
+                continue
+            writers.setdefault(tgt, []).append(n)
+        elif node.op == "Restore":
+            for v in node.attrs.get("var_names", ()) or ():
+                writers.setdefault(str(v), []).append(n)
+
+    def dev(pair):
+        return tuple(sorted({d for d in map(ctx.device_of, pair) if d}))
+
+    for var in sorted(writers):
+        ws = writers[var]
+        for i, a in enumerate(ws):
+            for b in ws[i + 1:]:
+                if a != b and not ctx.ordered(a, b):
+                    diags.append(make(
+                        "V101",
+                        f"writes {a!r} and {b!r} to Variable {var!r} have "
+                        f"no ordering path; the final value depends on "
+                        f"dispatch order",
+                        nodes=(a, b, var), devices=dev((a, b)),
+                        fix=f"add a control edge between {a!r} and {b!r} "
+                            f"(e.g. control_inputs=[...]) or drop one write"))
+        for r in readers.get(var, ()):
+            for w in ws:
+                if r != w and not ctx.ordered(r, w):
+                    diags.append(make(
+                        "V102",
+                        f"read of Variable {var!r} (node {r!r}) and write "
+                        f"{w!r} have no ordering path; the read observes "
+                        f"either value depending on dispatch order",
+                        nodes=(r, w), devices=dev((r, w)),
+                        fix=f"add a control edge ordering {r!r} against "
+                            f"{w!r}, or fetch them in separate runs"))
+    return diags

@@ -1,0 +1,34 @@
+"""Seeded-bad graph factories for the lint CLI's self-test.
+
+``python -m repro.analysis.lint repro.analysis.selftest:bad_graph`` must
+exit non-zero (the acceptance check that the CLI can actually fail);
+``clean_graph`` is the matching must-pass fixture.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.ops import GraphBuilder
+
+
+def bad_graph() -> GraphBuilder:
+    """Two unordered writes to one Variable (V101) plus an orphan Recv
+    (C201) — one seeded specimen per severity-critical pass family."""
+    b = GraphBuilder()
+    v = b.variable("v", init_value=jnp.zeros((4,), "float32"))
+    b.assign(v, b.constant(jnp.ones((4,), "float32")), name="racy_a")
+    b.assign(v, b.constant(2 * jnp.ones((4,), "float32")), name="racy_b")
+    b.graph.add_node("Recv", [], name="orphan_recv",
+                     attrs={"rendezvous_key": "nobody;sends;this;0"})
+    return b
+
+
+def clean_graph() -> GraphBuilder:
+    """Ordered writes: same shape as bad_graph with the control edge the
+    V101 fix suggests, and no orphan Recv."""
+    b = GraphBuilder()
+    v = b.variable("v", init_value=jnp.zeros((4,), "float32"))
+    a = b.assign(v, b.constant(jnp.ones((4,), "float32")), name="first")
+    b.assign(v, b.constant(2 * jnp.ones((4,), "float32")), name="second",
+             control_inputs=[a])
+    return b

@@ -1,0 +1,109 @@
+"""Send/Recv pairing + deadlock analysis (DESIGN.md §14 pass 2).
+
+Rendezvous is a table keyed by string: a Recv whose key no Send produces
+blocks forever (§3.3 hang), a Send nobody consumes leaks its tensor,
+duplicate Sends raise at runtime, and — because the executor tags keys
+with the execution frame (§4.4) — a Send and Recv that execute in
+*different* static frames never meet even when their static key attrs
+match.  Finally, pairing edges are happens-before edges: a cross-device
+cycle through them deadlocks the whole pool.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .common import AnalysisContext
+from .diagnostics import Diagnostic, make
+
+
+def run(ctx: AnalysisContext) -> List[Diagnostic]:
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+    pairs = ctx.pairing()
+    frames = ctx.frames()
+
+    def dev(ns):
+        return tuple(sorted({d for d in map(ctx.device_of, ns) if d}))
+
+    for key in sorted(pairs):
+        sends, recvs = pairs[key]
+        if not sends:
+            diags.append(make(
+                "C201",
+                f"Recv(s) {', '.join(map(repr, sorted(recvs)))} wait on "
+                f"rendezvous key {key!r} that no Send in the plan produces "
+                f"— this run hangs (§3.3)",
+                nodes=tuple(sorted(recvs)), devices=dev(recvs),
+                fix="add the producing Send, or prune the Recv with its "
+                    "consumers"))
+            continue
+        if len(sends) > 1:
+            diags.append(make(
+                "C203",
+                f"{len(sends)} Sends share rendezvous key {key!r}; the "
+                f"runtime rejects the duplicate send",
+                nodes=tuple(sorted(sends)), devices=dev(sends),
+                fix="give each transfer a distinct key (source node, port, "
+                    "destination device)"))
+        if not recvs:
+            diags.append(make(
+                "C202",
+                f"Send(s) {', '.join(map(repr, sorted(sends)))} publish "
+                f"rendezvous key {key!r} that nothing receives — the "
+                f"tensor leaks in the rendezvous table",
+                nodes=tuple(sorted(sends)), devices=dev(sends),
+                fix="drop the Send or add the consuming Recv"))
+        if frames is not None:
+            for s in sends:
+                for r in recvs:
+                    fs, fr = frames.get(s, ()), frames.get(r, ())
+                    if fs != fr:
+                        diags.append(make(
+                            "C204",
+                            f"Send {s!r} executes in frame {fs!r} but Recv "
+                            f"{r!r} in frame {fr!r}; runtime keys are "
+                            f"frame-tagged, so they never rendezvous",
+                            nodes=(s, r), devices=dev((s, r)),
+                            fix="route the transfer through the loop "
+                                "skeleton (Enter/Exit) so both ends share "
+                                "a frame"))
+        # consistency across the key: dtype/shape (when the shapes pass
+        # resolved the Send payloads) and the §5.5 compress flag
+        specs = set()
+        for s in sends:
+            node = g.nodes[s]
+            if node.inputs:
+                sp = ctx.specs.get((node.inputs[0].node, node.inputs[0].port))
+                if sp is not None:
+                    specs.add((tuple(sp.shape), str(sp.dtype)))
+        if len(specs) > 1:
+            diags.append(make(
+                "C205",
+                f"Sends on rendezvous key {key!r} carry inconsistent "
+                f"payloads {sorted(specs)}",
+                nodes=tuple(sorted(sends)), devices=dev(sends),
+                fix="one key must carry one dtype/shape; split the keys"))
+        comp = {bool(g.nodes[n].attrs.get("compress", False))
+                for n in sends + recvs}
+        if len(comp) > 1:
+            diags.append(make(
+                "C205",
+                f"compress flag disagrees across rendezvous key {key!r}: "
+                f"the Recv would mis-decode the §5.5 compressed payload",
+                nodes=tuple(sorted(sends + recvs)), devices=dev(sends + recvs),
+                fix="set the same compress= on both ends of the pair"))
+
+    _order, cyclic = ctx.order()
+    if cyclic:
+        members = sorted(cyclic)
+        shown = members[:12]
+        diags.append(make(
+            "C206",
+            f"{len(members)} node(s) form a cycle through Send/Recv "
+            f"pairing edges ({', '.join(map(repr, shown))}"
+            f"{', ...' if len(members) > len(shown) else ''}); every "
+            f"device in the cycle waits on another — deadlock",
+            nodes=tuple(shown), devices=dev(members),
+            fix="break the mutual wait: reorder the transfers so some "
+                "device can run first"))
+    return diags

@@ -1,0 +1,147 @@
+"""Static shape/dtype propagation (DESIGN.md §14 pass 4).
+
+Seeds abstract values from Placeholder shape/dtype attrs, Const values
+and Variable initializers, then propagates through pure ops by abstract
+interpretation (``jax.eval_shape`` over the op's reference compute — no
+FLOPs, no materialization).  A node whose inputs are fully known but
+whose kernel rejects them is exactly the class of error that otherwise
+surfaces mid-run as a trace/jit failure; here it becomes S401 *before*
+anything executes.  Unknown inputs stay unknown and propagate silently —
+the pass is best-effort, never a false positive by construction.
+
+The inferred specs are left on the AnalysisContext for the sendrecv
+pass's rendezvous-consistency check (C205); Recv outputs resolve through
+the pairing index, so shapes flow across device boundaries too.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from .common import AnalysisContext
+from .diagnostics import Diagnostic, make
+from ..core import ops as ops_mod
+
+# ops handled structurally below; everything else with a registered pure
+# compute is abstractly interpreted
+_STRUCTURAL = frozenset({
+    "Placeholder", "Const", "Variable", "Assign", "AssignAdd", "NoOp",
+    "Send", "Recv", "Switch", "Merge", "Enter", "Exit", "NextIteration",
+    "LoopCond", "Save", "Restore", "QueueEnqueue", "QueueDequeue",
+    "FusedRegion",
+})
+
+# skip abstract interpretation entirely above this size (machine-built
+# graphs at scale: the structural passes stay, per-node tracing goes)
+MAX_NODES = 4000
+
+
+def _spec_of(value) -> Optional[jax.ShapeDtypeStruct]:
+    try:
+        x = jax.numpy.asarray(value)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    except Exception:
+        return None
+
+
+def _fmt(sp) -> str:
+    return f"{sp.dtype}{list(sp.shape)}" if sp is not None else "?"
+
+
+def run(ctx: AnalysisContext) -> List[Diagnostic]:
+    g = ctx.graph
+    diags: List[Diagnostic] = []
+    if len(ctx.names) > MAX_NODES:
+        return diags
+    order, _cyclic = ctx.order()
+    specs: Dict[Tuple[str, int], Optional[jax.ShapeDtypeStruct]] = ctx.specs
+    send_payload: Dict[str, Optional[jax.ShapeDtypeStruct]] = {}
+
+    def get(ref) -> Optional[jax.ShapeDtypeStruct]:
+        return specs.get((ref.node, ref.port))
+
+    for n in order:
+        node = g.nodes[n]
+        op = node.op
+        ins = [get(r) for r in node.inputs]
+        try:
+            if op == "Placeholder":
+                shape, dtype = node.attrs.get("shape"), node.attrs.get("dtype")
+                if shape is not None and dtype is not None:
+                    specs[(n, 0)] = jax.ShapeDtypeStruct(
+                        tuple(shape), jax.numpy.dtype(dtype))
+            elif op == "Const":
+                specs[(n, 0)] = _spec_of(node.attrs.get("value"))
+            elif op == "Variable":
+                init = node.attrs.get("init")
+                if callable(init):
+                    try:
+                        specs[(n, 0)] = jax.eval_shape(init)
+                    except Exception:
+                        pass
+                elif init is not None:
+                    specs[(n, 0)] = _spec_of(init)
+            elif op in ("Assign", "AssignAdd"):
+                var_sp = ins[0] if ins else None
+                val_sp = ins[1] if len(ins) > 1 else None
+                if op == "Assign":
+                    specs[(n, 0)] = val_sp
+                    if (var_sp is not None and val_sp is not None
+                            and (tuple(var_sp.shape) != tuple(val_sp.shape)
+                                 or var_sp.dtype != val_sp.dtype)):
+                        diags.append(make(
+                            "S402",
+                            f"Assign {n!r} writes {_fmt(val_sp)} into "
+                            f"Variable {node.inputs[0].node!r} initialized "
+                            f"as {_fmt(var_sp)}",
+                            nodes=(n, node.inputs[0].node),
+                            fix="cast/reshape the value, or re-initialize "
+                                "the Variable with the new signature"))
+                else:
+                    if var_sp is not None and val_sp is not None:
+                        specs[(n, 0)] = jax.eval_shape(
+                            lambda a, b: a + b, var_sp, val_sp)
+                    else:
+                        specs[(n, 0)] = var_sp
+            elif op in ("Enter", "Exit", "NextIteration", "LoopCond"):
+                specs[(n, 0)] = ins[0] if ins else None
+            elif op == "Switch":
+                specs[(n, 0)] = specs[(n, 1)] = ins[0] if ins else None
+            elif op == "Merge":
+                cands = {(_fmt(s)) for s in ins if s is not None}
+                specs[(n, 0)] = (next(s for s in ins if s is not None)
+                                 if len(cands) == 1 else None)
+                specs[(n, 1)] = jax.ShapeDtypeStruct(
+                    (), jax.numpy.dtype("int32"))
+            elif op == "Send":
+                key = node.attrs.get("rendezvous_key")
+                if key is not None and node.inputs:
+                    send_payload[str(key)] = ins[0]
+            elif op == "Recv":
+                key = node.attrs.get("rendezvous_key")
+                specs[(n, 0)] = send_payload.get(str(key))
+            elif op in _STRUCTURAL:
+                pass  # no statically known outputs
+            else:
+                od = ops_mod.REGISTRY.get(op)
+                if od is None or od.stateful:
+                    continue
+                if any(s is None for s in ins):
+                    continue
+                outs = jax.eval_shape(
+                    lambda *xs: od.compute(None, node, *xs), *ins)
+                for p, sp in enumerate(outs):
+                    specs[(n, p)] = sp
+        except Exception as e:  # an op rejecting known input signatures
+            msg = str(e).split("\n", 1)[0][:300]
+            sig = ", ".join(f"{r.node}:{r.port}={_fmt(s)}"
+                            for r, s in zip(node.inputs, ins))
+            diags.append(make(
+                "S401",
+                f"{op} {n!r} rejects its statically-known inputs "
+                f"({sig}): {msg}",
+                nodes=(n,) + tuple(r.node for r in node.inputs),
+                fix="fix the producer shapes/dtypes; this would fail at "
+                    "trace/jit time otherwise"))
+    return diags

@@ -1,0 +1,167 @@
+"""The verifier driver: run the §14 pass suite over a graph or plan.
+
+Entry points:
+
+* :func:`verify_graph` — the core: run every pass over (graph, node set,
+  fetches, feeds, optional placement), returning a
+  :class:`~repro.analysis.diagnostics.VerifyReport`.
+* :func:`verify_executable` — called once per Executable *build*
+  (core/executable.py); the report rides the Executable, so cache hits
+  re-run no analysis.  ``STATS`` counts pass invocations to make that
+  property testable.
+* :func:`verify_wire_plan` — called by WirePlan before shipping slices
+  to workers: per-task slice self-containment plus the global
+  rendezvous pairing.
+* :func:`enforce` — maps a report through the Session verify mode:
+  ``"off"`` (never called), ``"warn"`` (GraphVerifyWarning), ``"error"``
+  (GraphError listing every error diagnostic).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Dict, Iterable, List, Optional
+
+from . import deadness, frames, races, sendrecv, shapes
+from .common import AnalysisContext
+from .diagnostics import (Diagnostic, GraphVerifyWarning, VerifyReport,
+                          apply_suppressions, internal_failure, make)
+from ..core.graph import Graph, GraphError
+
+# (name, pass fn) — shapes runs before sendrecv so the rendezvous
+# consistency check (C205) sees the inferred Send payload specs
+PASSES = (
+    ("frames", frames.run),
+    ("shapes", shapes.run),
+    ("sendrecv", sendrecv.run),
+    ("races", races.run),
+    ("deadness", deadness.run),
+)
+
+# pass-invocation counters: tests assert an Executable cache hit bumps
+# nothing here (same pattern as placement/partition/scheduler STATS)
+STATS: Dict[str, int] = {"verify_calls": 0, "wire_verify_calls": 0}
+for _name, _fn in PASSES:
+    STATS[_name] = 0
+
+
+VERIFY_MODES = ("off", "warn", "error")
+
+
+def verify_graph(graph: Graph, names: Optional[Iterable[str]] = None, *,
+                 fetches: Iterable = (), feed_keys: Iterable = (),
+                 placement: Optional[Dict[str, str]] = None,
+                 where: str = "graph") -> VerifyReport:
+    STATS["verify_calls"] += 1
+    ctx = AnalysisContext(graph, names, fetches=fetches,
+                          feed_keys=feed_keys, placement=placement,
+                          where=where)
+    diags: List[Diagnostic] = []
+    for pname, fn in PASSES:
+        STATS[pname] += 1
+        try:
+            diags.extend(fn(ctx))
+        except Exception as e:  # a broken pass must not break user runs
+            diags.append(internal_failure(pname, e))
+    kept, n_sup = apply_suppressions(graph, diags)
+    kept.sort(key=lambda d: (0 if d.severity == "error" else 1,
+                             d.code, d.nodes))
+    return VerifyReport(kept, n_sup, where)
+
+
+def enforce(report: VerifyReport, mode: str) -> None:
+    if mode == "off" or not report.diagnostics:
+        return
+    errs = report.errors()
+    if errs and mode == "error":
+        raise GraphError(
+            f"graph verification failed ({report.where}): "
+            f"{len(errs)} error(s)\n"
+            + "\n".join("  " + d.format() for d in errs))
+    shown = report.diagnostics[:5]
+    more = len(report.diagnostics) - len(shown)
+    warnings.warn(
+        f"graph verification ({report.where}): "
+        + "; ".join(d.format() for d in shown)
+        + (f"; (+{more} more)" if more else ""),
+        GraphVerifyWarning, stacklevel=3)
+
+
+def verify_executable(exe) -> VerifyReport:
+    """Run the suite for one Executable build (DESIGN.md §14 wiring).
+
+    Multi-device builds verify the *partitioned* plan — the per-device
+    schedule with its canonical Send/Recv pairs is what actually runs —
+    single-device builds verify the pruned subgraph.
+    """
+    mode = getattr(exe.session, "verify", "warn")
+    if mode == "off":
+        return VerifyReport([], 0, "off")
+    parted = getattr(exe, "partitioned", None)
+    if parted is not None:
+        report = verify_graph(
+            parted.graph, None, fetches=exe.fetches,
+            feed_keys=exe.feed_keys, placement=parted.placement,
+            where="partitioned plan")
+    else:
+        report = verify_graph(
+            exe.session.graph, exe.node_set, fetches=exe.fetches,
+            feed_keys=exe.feed_keys, where="pruned graph")
+    enforce(report, mode)
+    return report
+
+
+def task_slice_diagnostics(graph: Graph, slices: Dict[str, set],
+                           feed_keys: Iterable = ()) -> List[Diagnostic]:
+    """P601: every edge inside a shipped per-task slice must resolve
+    within that slice — cross-task edges ride Send/Recv pairs, never raw
+    references (a worker cannot see another task's nodes)."""
+    diags: List[Diagnostic] = []
+    for task in sorted(slices):
+        names = slices[task]
+        for n in sorted(names):
+            node = graph.nodes.get(n)
+            if node is None:
+                continue
+            for d in graph.deps(node):
+                if d in graph.nodes and d not in names:
+                    diags.append(make(
+                        "P601",
+                        f"node {n!r} in task {task!r} references {d!r} "
+                        f"outside its slice; the worker executing the "
+                        f"slice cannot resolve it",
+                        nodes=(n, d),
+                        fix="partition must rewrite cross-task edges "
+                            "into Send/Recv pairs"))
+    return diags
+
+
+def verify_wire_plan(exe, device_nodes: Dict[str, set]) -> VerifyReport:
+    """Pre-ship verification for a WirePlan: per-task slice containment
+    plus the global Send/Recv pairing over the whole partitioned graph."""
+    mode = getattr(exe.session, "verify", "warn")
+    if mode == "off":
+        return VerifyReport([], 0, "off")
+    STATS["wire_verify_calls"] += 1
+    from ..runtime.devices import DeviceName
+
+    g = exe.partitioned.graph
+    slices: Dict[str, set] = {}
+    for dev, names in device_nodes.items():
+        dn = DeviceName.parse(dev)
+        slices.setdefault(f"{dn.job}:{dn.task}", set()).update(names)
+    diags = task_slice_diagnostics(g, slices, exe.feed_keys)
+    STATS["sendrecv"] += 1
+    ctx = AnalysisContext(g, None, fetches=exe.fetches,
+                          feed_keys=exe.feed_keys,
+                          placement=exe.partitioned.placement,
+                          where="wire plan")
+    try:
+        diags.extend(sendrecv.run(ctx))
+    except Exception as e:
+        diags.append(internal_failure("sendrecv", e))
+    kept, n_sup = apply_suppressions(g, diags)
+    kept.sort(key=lambda d: (0 if d.severity == "error" else 1,
+                             d.code, d.nodes))
+    report = VerifyReport(kept, n_sup, "wire plan")
+    enforce(report, mode)
+    return report

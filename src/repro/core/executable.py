@@ -38,6 +38,7 @@ from . import fusion as fusion_mod
 from . import placement as placement_mod
 from . import partition as partition_mod
 from . import scheduler as scheduler_mod
+from ..analysis import verifier as verifier_mod
 from ..runtime.rendezvous import Rendezvous
 
 # Ops whose side effects cannot be replayed for a reference re-execution:
@@ -75,6 +76,10 @@ class RunSignature:
     # generic-lowered Executable serving a pallas session (or vice
     # versa) would make which kernels run signature-dependent
     kernel_backend: str = "generic"
+    # §14 verify mode: a cached warn-mode Executable must not silently
+    # serve a Session that asked for verify="error" (the error-mode
+    # build is the one that raises), so the mode is part of the key
+    verify: str = "warn"
 
     @staticmethod
     def for_session(session, fetch_refs: Sequence[TensorRef],
@@ -101,6 +106,7 @@ class RunSignature:
                 session, "numerics",
                 os.environ.get("REPRO_FUSE_NUMERICS", "strict")),
             kernel_backend=getattr(session, "kernel_backend", "generic"),
+            verify=getattr(session, "verify", "warn"),
         )
 
 
@@ -241,6 +247,11 @@ class Executable:
             # like any straight-line graph.
             self.partitioned = partition_mod.partition(
                 session.graph, self.placement, self.node_set, compress=compress)
+            # §14 verifier (DESIGN.md): analyze the partitioned plan —
+            # the canonical Send/Recv pairs and per-device schedule are
+            # what actually runs — once per build; the report rides the
+            # Executable so a cache hit re-runs no analysis.
+            self.verify_report = verifier_mod.verify_executable(self)
             exec_graph = self.partitioned.graph
             exec_placement = self.partitioned.placement
             device_nodes = self.partitioned.device_nodes
@@ -292,6 +303,8 @@ class Executable:
                 exec_placement, device_nodes, remap=True)
             self.n_nodes = len(exec_graph.nodes)
         else:
+            # §14 verifier, single-device path: the pruned subgraph.
+            self.verify_report = verifier_mod.verify_executable(self)
             exec_graph, exec_names = session.graph, self.node_set
             if self.fuse_regions:
                 fus = fusion_mod.try_fuse(

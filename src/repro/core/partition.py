@@ -159,10 +159,14 @@ def partition(
         fpath = frames.get(ref.node, ())
         if fpath:
             if len(fpath) > 1:
+                # §14: route through the Diagnostic formatter so the
+                # error names nodes AND devices (satellite of ISSUE 8)
+                from ..analysis.frames import describe_nested_straddle
+
                 raise GraphError(
-                    f"cross-device edge {ref} leaves a nested loop frame "
-                    f"{fpath!r}; nested multi-device loops are not supported "
-                    "yet — constrain the inner loop to one device")
+                    f"cross-device edge {ref} leaves a nested loop frame: "
+                    + describe_nested_straddle(
+                        fpath, [ref.node], [src_dev, dst_dev]))
             tok = frame_tokens.get((fpath[-1], dst_dev))
             if tok is None:
                 raise GraphError(
@@ -234,10 +238,12 @@ def partition(
                 src_f = frames.get(c, ())
                 dst_f = frames.get(name, ())
                 if len(src_f) > 1:
+                    from ..analysis.frames import describe_nested_straddle
+
                     raise GraphError(
                         f"control edge {c} -> {name} leaves a nested loop "
-                        f"frame {src_f!r}; nested multi-device loops are "
-                        "not supported yet")
+                        f"frame: " + describe_nested_straddle(
+                            src_f, [c, name], [src_dev, dst_dev]))
                 if not src_f:
                     # root-frame producer: zero-byte control token
                     tok = pg.add_node(

@@ -133,6 +133,43 @@ def colocation_groups(g: Graph, node_names) -> Dict[str, List[str]]:
     return groups
 
 
+def _describe_infeasible_group(g: Graph, root: str, members) -> str:
+    """§14 Diagnostic-formatted colocation failure: names every
+    constrained member and its device, and — when the group is a loop
+    skeleton whose predicate carries a conflicting constraint — states
+    the carried predicate-on-home-device rule (F302) explicitly instead
+    of the old bare 'no feasible device for group of <root>'."""
+    from ..analysis.diagnostics import make
+
+    constrained = [(m, g.nodes[m].device) for m in members
+                   if g.nodes[m].device]
+    devices = sorted({d for _, d in constrained})
+    in_loop = None
+    for lname, spec in g.loop_specs.items():
+        skel = set(spec.switch_names) | set(spec.merge_names) | \
+            set(spec.cond_nodes) | {f"{lname}/cond"}
+        if skel & set(members):
+            in_loop = lname
+            break
+    if in_loop is not None and len(devices) > 1:
+        d = make(
+            "F302",
+            f"loop {in_loop!r}'s skeleton + predicate form one "
+            f"colocation group (the predicate must compute on the "
+            f"loop's home device, §4.4) but its members carry "
+            f"conflicting device constraints: "
+            + ", ".join(f"{m!r} on {dev!r}" for m, dev in constrained),
+            nodes=[m for m, _ in constrained] or [root],
+            devices=devices,
+            fix="drop the conflicting constraint or pin the whole "
+                "predicate to the loop's home device")
+        return "no feasible device for colocation group: " + d.format()
+    detail = (", ".join(f"{m!r} (device={dev!r})" for m, dev in constrained)
+              or f"members {sorted(members)[:8]}")
+    return (f"no feasible device for colocation group of {root!r}: "
+            f"constrained members: {detail}")
+
+
 def place(
     g: Graph,
     devices: DeviceSet,
@@ -154,7 +191,7 @@ def place(
             f = set(feasible_devices(g.nodes[m], devices))
             feas = f if feas is None else (feas & f)
         if not feas:
-            raise PlacementError(f"no feasible device for colocation group of {root!r}")
+            raise PlacementError(_describe_infeasible_group(g, root, members))
         group_feasible[root] = [d for d in devices.names() if d in feas]
 
     placement: Dict[str, str] = {}

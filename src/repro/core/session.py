@@ -81,8 +81,21 @@ class Session:
                  fuse_regions: Optional[bool] = None,
                  numerics: Optional[str] = None,
                  parity_guard: Any = None,
-                 backend: Optional[str] = None) -> None:
+                 backend: Optional[str] = None,
+                 verify: Optional[str] = None) -> None:
         self.graph = graph or Graph()
+        # §14 pre-execution graph verifier: "off" skips it, "warn"
+        # (default) raises GraphVerifyWarning on findings, "error" turns
+        # error-severity diagnostics into a GraphError before anything
+        # executes.  Runs once per Executable build — the report is
+        # cached on the Executable, so cache hits re-run no analysis.
+        # Part of the RunSignature: flipping warn->error must re-verify.
+        if verify is None:
+            verify = os.environ.get("REPRO_VERIFY", "warn")
+        if verify not in ("off", "warn", "error"):
+            raise ValueError(
+                f"verify must be 'off', 'warn' or 'error', got {verify!r}")
+        self.verify = verify
         # §10 region fusion (DESIGN.md §7): default-on; per-Session
         # escape hatch via fuse_regions=False, process-wide via
         # REPRO_FUSE_REGIONS=0.  Part of the RunSignature, so flipping it

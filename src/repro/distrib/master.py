@@ -270,6 +270,14 @@ class WirePlan:
                         f"graphs must use registered primitive ops or "
                         f"importable callables (DESIGN.md §11)") from e
 
+        # §14 pre-ship verification: each per-task slice must be
+        # self-contained (P601) and the global Send/Recv pairing live —
+        # shipping a slice that hangs wastes the whole pool, so the
+        # check runs before any payload leaves the master
+        from ..analysis import verifier as verifier_mod
+
+        self.verify_report = verifier_mod.verify_wire_plan(exe, device_nodes)
+
         task_devices: Dict[int, List[str]] = {}
         for dev in device_nodes:
             task_devices.setdefault(cluster.task_of_device(dev), []).append(dev)

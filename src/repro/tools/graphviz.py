@@ -45,16 +45,94 @@ def collapse_summary(g: Graph, depth: int = 1,
 
 
 def to_dot(g: Graph, depth: int = 1, high_degree: int = 8,
-           title: str = "graph") -> str:
+           title: str = "graph", diagnostics=()) -> str:
+    """Block-collapsed DOT.  With §14 verifier ``diagnostics``, blocks
+    containing offending nodes are outlined red and carry the diagnostic
+    codes in their label + tooltip — a lint failure links to a picture."""
     blocks = collapse_summary(g, depth=depth, high_degree=high_degree)
+    flagged = _codes_by_node(diagnostics)
+    block_codes: Dict[str, Set[str]] = defaultdict(set)
+    degree: Dict[str, int] = defaultdict(int)
+    for node in g.nodes.values():
+        for d in g.deps(node):
+            degree[d] += 1
+    bookkeeping = {n for n, c in degree.items() if c >= high_degree}
+    for name, codes in flagged.items():
+        if name in g.nodes:
+            blk = ("__bookkeeping__" if name in bookkeeping
+                   else _block_of(name, depth))
+            block_codes[blk] |= codes
     lines = [f'digraph "{title}" {{', "  rankdir=TB;",
              '  node [shape=box, style=rounded];']
     for blk, info in sorted(blocks.items()):
         label = f"{blk}\\n{info['n_nodes']} nodes"
         shape = ', shape=ellipse, style=dashed' if blk == "__bookkeeping__" else ""
-        lines.append(f'  "{blk}" [label="{label}"{shape}];')
+        extra = ""
+        if blk in block_codes:
+            codes = ",".join(sorted(block_codes[blk]))
+            label += f"\\n[{codes}]"
+            extra = (f', color=red, penwidth=2.0'
+                     f', tooltip="{codes}"')
+        lines.append(f'  "{blk}" [label="{label}"{shape}{extra}];')
     for blk, info in sorted(blocks.items()):
         for dst in sorted(info["edges_out"]):
             lines.append(f'  "{blk}" -> "{dst}";')
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def _codes_by_node(diagnostics) -> Dict[str, Set[str]]:
+    out: Dict[str, Set[str]] = defaultdict(set)
+    for d in diagnostics or ():
+        for n in d.nodes:
+            out[n].add(d.code)
+    return dict(out)
+
+
+def to_dot_diagnostics(g: Graph, diagnostics, title: str = "lint",
+                       context: int = 1) -> str:
+    """Node-level DOT focused on §14 verifier findings: every offending
+    node outlined red with its diagnostic codes in the label and the full
+    messages in the tooltip, plus ``context`` hops of neighborhood so the
+    picture shows where the bad edge should have been.  Falls back to the
+    whole graph when nothing is flagged (or the graph is small)."""
+    flagged = _codes_by_node(diagnostics)
+    messages: Dict[str, List[str]] = defaultdict(list)
+    for d in diagnostics or ():
+        for n in d.nodes:
+            messages[n].append(f"{d.code}: {d.message}")
+    keep: Set[str] = set(flagged) & set(g.nodes)
+    if not keep or len(g.nodes) <= 60:
+        keep = set(g.nodes)
+    else:
+        for _ in range(max(context, 0)):
+            grow = set(keep)
+            for name, node in g.nodes.items():
+                ds = set(g.deps(node))
+                if name in keep:
+                    grow |= ds
+                elif ds & keep:
+                    grow.add(name)
+            keep = grow & set(g.nodes)
+    lines = [f'digraph "{title}" {{', "  rankdir=TB;",
+             '  node [shape=box, fontsize=10];']
+    for name in sorted(keep):
+        node = g.nodes[name]
+        label = f"{name}\\n{node.op}"
+        extra = ""
+        if name in flagged:
+            codes = ",".join(sorted(flagged[name]))
+            tip = "; ".join(messages[name])[:500].replace('"', "'")
+            label += f"\\n[{codes}]"
+            extra = f', color=red, penwidth=2.0, tooltip="{tip}"'
+        lines.append(f'  "{name}" [label="{label}"{extra}];')
+    for name in sorted(keep):
+        node = g.nodes[name]
+        for ref in node.inputs:
+            if ref.node in keep:
+                lines.append(f'  "{ref.node}" -> "{name}";')
+        for c in node.control_inputs:
+            if c in keep:
+                lines.append(f'  "{c}" -> "{name}" [style=dashed];')
     lines.append("}")
     return "\n".join(lines)
