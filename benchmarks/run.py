@@ -17,6 +17,9 @@ repo's §Roofline artifacts:
                              block with the backend registry on vs off
   b9  train_throughput       end-to-end compiled training tokens/s
   b10 roofline_table         §Roofline summary from experiments/dryrun
+  b14 replicated_training    §4.3–§4.4 data-parallel replication over a
+                             4-process pool: tok/s vs replica count +
+                             sync-vs-async convergence on the smoke LM
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -92,7 +95,8 @@ def bench_compiled_vs_eager():
         h = b.matmul(cur, W, name=f"mm{i}")
         cur = b.relu(b.add(h, cur, name=f"res{i}"), name=f"r{i}")
     out = b.reduce_sum(cur)
-    sess = Session(b.graph, fuse_regions=False)
+    from repro.core.options import SessionOptions
+    sess = Session(b.graph, options=SessionOptions(fuse_regions=False))
     X = jnp.array(rs.randn(64, 256).astype("f"))
     # block on every fetch: jax dispatch is async even on CPU, and the
     # fused engine issues ONE region call — an unblocked timer would
@@ -100,8 +104,8 @@ def bench_compiled_vs_eager():
     # derived speedup divides like for like)
     eager_us = _timeit(lambda: jax.block_until_ready(
         sess.run(out.ref, {x.ref: X})))
-    fast_sess = Session(b.graph, fuse_regions=True, numerics="fast",
-                        parity_guard=False)
+    fast_sess = Session(b.graph, options=SessionOptions(
+        fuse_regions=True, numerics="fast", parity_guard=False))
     fast_us = _timeit(lambda: jax.block_until_ready(
         fast_sess.run(out.ref, {x.ref: X})))
     low = compile_subgraph(sess, [out.ref], [x.ref])
@@ -285,8 +289,9 @@ def bench_kernels():
     rows = {}
     for backend in ("generic", "pallas"):
         b, x, out = build()
-        sess = Session(b.graph, numerics="fast", parity_guard=False,
-                       backend=backend)
+        from repro.core.options import SessionOptions
+        sess = Session(b.graph, options=SessionOptions(
+            numerics="fast", parity_guard=False, backend=backend))
         before = kr.dispatch_counts(backend)
         sess.run(out.ref, {x.ref: X})  # compile + (for pallas) dispatch
         delta = {k: c - before.get(k, 0)
@@ -375,10 +380,13 @@ def bench_executable_cache():
 
     g1, out1 = _two_worker_graph()
     g2, out2 = _two_worker_graph()
-    cached = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                     fuse_regions=False)
-    uncached = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                       max_cached_executables=0, fuse_regions=False)
+    from repro.core.options import SessionOptions
+    cached = Session(g1, options=SessionOptions(
+        devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+        fuse_regions=False))
+    uncached = Session(g2, options=SessionOptions(
+        devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+        max_cached_executables=0, fuse_regions=False))
     us_uncached = _timeit(lambda: uncached.run(out2.ref), n=8, warmup=2)
     us_cached = _timeit(lambda: cached.run(out1.ref), n=8, warmup=2)
     sps_cached = 1e6 / us_cached
@@ -402,10 +410,13 @@ def bench_fused_partitioned_step():
 
     g1, out1 = _two_worker_graph()
     g2, out2 = _two_worker_graph()
-    fused = Session(g1, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                    fuse_regions=True, numerics="fast", parity_guard=False)
-    interp = Session(g2, devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
-                     fuse_regions=False)
+    from repro.core.options import SessionOptions
+    fused = Session(g1, options=SessionOptions(
+        devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+        fuse_regions=True, numerics="fast", parity_guard=False))
+    interp = Session(g2, options=SessionOptions(
+        devices=DeviceSet.make_cluster(2, 1, kind="cpu"),
+        fuse_regions=False))
     us_interp = _timeit(lambda: interp.run(out2.ref), n=8, warmup=2)
     us_fused = _timeit(lambda: fused.run(out1.ref), n=8, warmup=2)
     emit("b13_fused_partitioned_step", us_fused,
@@ -420,15 +431,95 @@ def bench_fused_partitioned_step():
     cur = x
     for i in range(n_ops):
         cur = b.add(cur, x, name=f"a{i}")
-    sf = Session(b.graph, fuse_regions=True, numerics="fast",
-                 parity_guard=False)
-    su = Session(b.graph, fuse_regions=False)
+    from repro.core.options import SessionOptions
+    sf = Session(b.graph, options=SessionOptions(
+        fuse_regions=True, numerics="fast", parity_guard=False))
+    su = Session(b.graph, options=SessionOptions(fuse_regions=False))
     X = jnp.ones((8, 8))
     us_u = _timeit(lambda: su.run(cur.ref, {x.ref: X}))
     us_f = _timeit(lambda: sf.run(cur.ref, {x.ref: X}))
     emit("b13_fused_chain_dispatch", us_f,
          f"{us_f / n_ops:.2f}us/op@{n_ops}ops,interp={us_u / n_ops:.2f}us/op,"
          f"speedup={us_u / us_f:.1f}x")
+
+
+def bench_replicated_training():
+    """§4.3–§4.4 / DESIGN.md §15: the factory-Call smoke-LM train step
+    replicated over a real 4-process worker pool.
+
+    Reports aggregate tok/s at 1 vs 4 sync replicas plus a 4-replica
+    async (parameter-server) leg, and the sync-vs-async loss after the
+    same 20-shard stream.  NOTE the scaling derived field is hardware-
+    bound: on a single-core container every replica's XLA compute and
+    every wire pickle shares one core, so aggregate tok/s is capped near
+    1x regardless of replica count (the per-process CPU accounting in
+    the wire `timings` stats shows the step is CPU-bound, not
+    latency-bound).  On an m-core pool the replica compute runs in
+    separate worker processes and the same graph scales.
+    """
+    from repro.configs import get_config
+    from repro.core.options import SessionOptions
+    from repro.distrib.replication import ReplicaPlan
+    from repro.distrib.worker import (start_worker_processes,
+                                      stop_worker_processes)
+    from repro.launch.steps import build_lm_replica_spec
+    from repro.models.api import Shape
+
+    cfg = get_config("smollm_360m", smoke=True)
+    batch, seq, conv_steps = 2, 64, 20
+    spec = build_lm_replica_spec(
+        cfg, Shape("custom", seq, batch, "train"), lr=1e-2, seed=0,
+        hparam_overrides={"compute_dtype": jnp.float32,
+                          "loss_chunk": 0, "q_chunk": 0})
+
+    def shard(i, r):
+        # a 4-shard cycle per replica: repeated data makes the loss drop
+        # visibly within the 20-step convergence window
+        rs = np.random.RandomState(1000003 * (i % 4) + 131 * r)
+        return {n: rs.randint(0, cfg.vocab_size, (batch, seq))
+                .astype(np.int32) for n in spec.feed_names}
+
+    procs, cspec = start_worker_processes(4)
+    opts = SessionOptions(numerics="fast", parity_guard=False)
+    try:
+        results = {}
+        for n_rep in (1, 4):
+            plan = ReplicaPlan(spec, n_rep, mode="sync", cluster=cspec,
+                               options=opts)
+            losses = [plan.step([shard(i, r) for r in range(n_rep)])
+                      for i in range(conv_steps)]
+            fixed = [shard(0, r) for r in range(n_rep)]
+            us = _timeit(lambda: plan.step(fixed), n=10, warmup=3)
+            results[n_rep] = (us, losses)
+            plan.close()
+        us1, _ = results[1]
+        us4, sync_losses = results[4]
+        tok1 = batch * seq / (us1 / 1e6)
+        tok4 = 4 * batch * seq / (us4 / 1e6)
+        emit("b14_replicated_sync_1x", us1, f"{tok1:.0f}tok/s")
+        emit("b14_replicated_sync_4x", us4,
+             f"{tok4:.0f}tok/s,scaling={tok4 / tok1:.2f}x,"
+             f"loss={sync_losses[0]:.3f}->{sync_losses[-1]:.3f},"
+             f"1core-serialized-compute")
+
+        plan = ReplicaPlan(spec, 4, mode="async", cluster=cspec,
+                           options=opts)
+        plan.run_async(shard, 8)  # warm: registration + per-replica compile
+        plan.set_variable_values(spec.init_values)
+        # a longer window than sync: interleaved applies see ~n_replicas
+        # of gradient staleness, so early losses churn before descending
+        async_steps = 2 * conv_steps
+        t0 = time.perf_counter()
+        applies = plan.run_async(shard, async_steps)
+        us_async = (time.perf_counter() - t0) / async_steps * 1e6
+        async_last = applies[-1][2]
+        plan.close()
+        tok_async = batch * seq / (us_async / 1e6)
+        emit("b14_replicated_async_4x", us_async,
+             f"{tok_async:.0f}tok/s,loss={applies[0][2]:.3f}->"
+             f"{async_last:.3f},sync_loss={sync_losses[-1]:.3f}")
+    finally:
+        stop_worker_processes(procs, cspec)
 
 
 BENCHES = [
@@ -444,6 +535,7 @@ BENCHES = [
     bench_roofline_table,
     bench_executable_cache,
     bench_fused_partitioned_step,
+    bench_replicated_training,
 ]
 
 
@@ -492,6 +584,8 @@ KEY_METRICS = {
     "b9_train_tokens_per_s": bench_train_throughput,
     "b12_run_cached_executable": bench_executable_cache,
     "b13_fused_partitioned_step": bench_fused_partitioned_step,
+    "b14_replicated_sync_1x": bench_replicated_training,
+    "b14_replicated_sync_4x": bench_replicated_training,
 }
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_latest.json")

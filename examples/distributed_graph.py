@@ -43,8 +43,9 @@ def main():
     out = b.reduce_sum(b.matmul(h, w2, name="mm2", device="/job:worker/task:2"),
                        name="out", device="/job:worker/task:2")
 
+    from repro.core.options import SessionOptions
     devices = DeviceSet.make_cluster(3, 1, kind="cpu")
-    sess = Session(b.graph, devices=devices)
+    sess = Session(b.graph, options=SessionOptions(devices=devices))
 
     node_set = sess.pruned_nodes([out.ref], {})
     place = placement.place(b.graph, devices, node_names=node_set)
@@ -91,7 +92,8 @@ def main_wire(expected):
             b.matmul(h, w2, name="mm2", device="/job:worker/task:0"),
             name="out", device="/job:worker/task:0")
 
-        sess = Session(b.graph, cluster=spec)
+        from repro.core.options import SessionOptions
+        sess = Session(b.graph, options=SessionOptions(cluster=spec))
         wire = sess.run(out.ref)     # RegisterGraph + RunGraph under the hood
         again = sess.run(out.ref)    # cached Executable: RunGraph only
         print(f"worker pool: {', '.join(spec.workers)}")

@@ -3,7 +3,8 @@
 Public surface:
   Graph / Node / TensorRef      §2 graph IR
   GraphBuilder                  §2 Python front-end
-  Session                       §2 Sessions (Extend/Run), §4.2 partial execution
+  Session / SessionOptions      §2 Sessions (Extend/Run), §4.2 partial execution;
+                                all config on one options object (§15)
   gradients                     §4.1 autodiff by graph extension
   while_loop / cond             §4.4 control flow builders
   compile_subgraph              §10 JIT lowering to a pure JAX function
@@ -15,6 +16,7 @@ Public surface:
 from .graph import Graph, Node, TensorRef, GraphError, as_ref
 from .ops import GraphBuilder, register, register_gradient, register_kernel, REGISTRY
 from .executable import Executable, ExecutableCache, RunSignature
+from .options import SessionOptions
 from .session import Session
 from .autodiff import gradients
 from .control_flow import while_loop, cond
@@ -25,7 +27,7 @@ __all__ = [
     "Graph", "Node", "TensorRef", "GraphError", "as_ref",
     "GraphBuilder", "register", "register_gradient", "register_kernel", "REGISTRY",
     "Executable", "ExecutableCache", "RunSignature",
-    "Session", "gradients", "while_loop", "cond",
+    "Session", "SessionOptions", "gradients", "while_loop", "cond",
     "compile_subgraph", "lower_region", "Lowered", "LoweringError",
     "FusionError", "FusionResult", "RegionSpec",
 ]

@@ -36,6 +36,12 @@ class _GradFn:
     (plain data), so §4.1 gradient graphs ship to §11 worker pools like
     any other primitive-op graph — the opdef is re-resolved from the
     registry at call time on whichever process executes the node.
+
+    For a forward Call node this only works when its attrs are themselves
+    picklable: factory-form Calls (``GraphBuilder.call_factory``, DESIGN.md
+    §15) carry a ``module:qualname`` spec instead of a closure, so both the
+    forward node embedded here and the backward kernel rebuild on the
+    worker via ``ops.resolve_call_fn``.
     """
 
     def __init__(self, node: Node, n_in: int, n_out: int) -> None:

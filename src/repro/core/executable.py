@@ -96,17 +96,29 @@ class RunSignature:
             # virtual device names) and re-register through the master's
             # generation counter / per-task re-registration instead
             fp = tuple(fp) + cluster.fingerprint()
+        # every options-dependent key component derives from the session's
+        # resolved SessionOptions in this one place (repro.core.options) —
+        # the getattr fallbacks only serve bare session-like test doubles
+        opts = getattr(session, "options", None)
+        if opts is not None:
+            fuse_regions, fuse_numerics = opts.fuse_regions, opts.numerics
+            kernel_backend, verify = opts.backend, opts.verify
+        else:
+            fuse_regions = getattr(session, "fuse_regions", True)
+            fuse_numerics = getattr(
+                session, "numerics",
+                os.environ.get("REPRO_FUSE_NUMERICS", "strict"))
+            kernel_backend = getattr(session, "kernel_backend", "generic")
+            verify = getattr(session, "verify", "warn")
         return RunSignature(
             fetches=tuple(fetch_refs),
             feed_keys=frozenset(feed_keys),
             device_fingerprint=fp,
             graph_version=session.graph.version,
-            fuse_regions=getattr(session, "fuse_regions", True),
-            fuse_numerics=getattr(
-                session, "numerics",
-                os.environ.get("REPRO_FUSE_NUMERICS", "strict")),
-            kernel_backend=getattr(session, "kernel_backend", "generic"),
-            verify=getattr(session, "verify", "warn"),
+            fuse_regions=fuse_regions,
+            fuse_numerics=fuse_numerics,
+            kernel_backend=kernel_backend,
+            verify=verify,
         )
 
 
@@ -204,7 +216,8 @@ class Executable:
             else getattr(session, "numerics",
                          os.environ.get("REPRO_FUSE_NUMERICS", "strict")))
         # kernel-backend registry key (DESIGN.md §12); cluster executions
-        # stay generic — workers re-fuse their slices without a backend
+        # ship it in the WirePlan payloads so workers re-fuse their slices
+        # under the same backend (distrib/worker.py, §15)
         self.kernel_backend: str = getattr(session, "kernel_backend",
                                            "generic")
         # DESIGN.md §7: region fusion runs once per signature, here; the
@@ -531,7 +544,8 @@ class Executable:
         with self._unfused_lock:
             if self._wire_strict is None:
                 self._wire_strict = WirePlan(
-                    self, self._wire_device_nodes, numerics="strict")
+                    self, self._wire_device_nodes, numerics="strict",
+                    backend="generic")
             return self._wire_strict
 
     def _guarded_wire_run(self, feeds: Dict[TensorRef, Any],

@@ -758,6 +758,7 @@ def run_case(case: ParityCase, backend: str = "generic") -> CaseResult:
     candidate, and the drift is gated against that backend's calibrated
     tolerance table (DESIGN.md §12)."""
     from .graph import as_ref
+    from .options import SessionOptions
     from .ops import GraphBuilder
     from .session import Session
 
@@ -765,13 +766,12 @@ def run_case(case: ParityCase, backend: str = "generic") -> CaseResult:
     for fast in (False, True):
         b = GraphBuilder()
         extras = case.build(b)
-        sess = Session(
-            b.graph,
+        sess = Session(b.graph, options=SessionOptions(
             fuse_regions=fast,
             numerics="fast" if fast else "strict",
             parity_guard=False,  # the gate itself is the comparator
             backend=backend if fast else "generic",
-            devices=case.devices() if case.devices else None)
+            devices=case.devices() if case.devices else None))
         built.append((sess, extras))
     (ref_sess, ref_ex), (cand_sess, cand_ex) = built
 

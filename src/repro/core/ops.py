@@ -10,7 +10,11 @@ type, mirroring the paper's kernel-registration mechanism.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import importlib
+import pickle
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -248,6 +252,27 @@ class GraphBuilder:
     def call(self, fn: Callable, inputs: Sequence, name="call", n_out=1, attrs=None, device=None):
         a = dict(attrs or {})
         a["fn"] = fn
+        a["n_out"] = n_out
+        return self._op("Call", list(inputs), name=name, attrs=a, device=device)
+
+    def call_factory(self, factory: str, inputs: Sequence, *, args: Sequence = (),
+                     kwargs: Optional[Dict[str, Any]] = None, name="call",
+                     n_out=1, attrs=None, device=None) -> Node:
+        """A *wire-shippable* Call (DESIGN.md §15): instead of capturing a
+        Python callable (which cannot ship over the wire when it closes over
+        locals), the node carries an importable ``"module:qualname"`` factory
+        spec plus static ``args``/``kwargs``.  Every process that executes
+        the node rebuilds the kernel as ``factory(*args, **kwargs)`` — once,
+        memoised per ``(factory, args)`` — so the same graph runs in-process
+        and on remote workers.  ``args``/``kwargs`` must be picklable."""
+        if not isinstance(factory, str) or ":" not in factory:
+            raise ValueError(
+                f"call_factory expects an importable 'module:qualname' spec, "
+                f"got {factory!r}")
+        a = dict(attrs or {})
+        a["call_factory"] = factory
+        a["factory_args"] = tuple(args)
+        a["factory_kwargs"] = dict(kwargs or {})
         a["n_out"] = n_out
         return self._op("Call", list(inputs), name=name, attrs=a, device=device)
 
@@ -513,6 +538,89 @@ def _ssd_scan_op(ctx, node, x, dt, A_log, Bc, Cc, D_skip):
 
 
 # --- composite (arbitrary pure jax function as a node) ----------------------
+#
+# Two declaration forms (DESIGN.md §15):
+#   - ``attrs["fn"]``: a direct Python callable.  Cheapest, but closures
+#     over locals cannot ship to worker processes.
+#   - ``attrs["call_factory"]``: an importable ``"module:qualname"`` spec +
+#     static ``factory_args``/``factory_kwargs``.  The kernel is rebuilt as
+#     ``factory(*args, **kwargs)`` in whichever process executes the node.
+#
+# Resolution is memoised at two levels: per node-attrs identity (the hot
+# per-dispatch lookup) and per ``(factory, pickled args)`` so N replicas of
+# the same step build the underlying model once per process.  The cache is
+# deliberately NOT stored in ``node.attrs`` — attrs ship over the wire and
+# must stay free of unpicklable closures.
+
+_CALL_NODE_CACHE: "collections.OrderedDict[int, Tuple[dict, Callable]]" = \
+    collections.OrderedDict()
+_CALL_FACTORY_CACHE: Dict[Tuple[str, bytes], Callable] = {}
+_CALL_CACHE_LOCK = threading.Lock()
+_CALL_NODE_CACHE_MAX = 1024
+
+
+def _import_factory(spec: str) -> Callable:
+    """Import ``"module:qualname"``.  Note the trust boundary: resolving a
+    factory imports and runs arbitrary code named by the graph, so workers
+    must only register graphs from a trusted master (DESIGN.md §15)."""
+    module_name, _, qualname = spec.partition(":")
+    if not module_name or not qualname:
+        raise ValueError(f"malformed Call factory spec {spec!r} "
+                         f"(expected 'module:qualname')")
+    try:
+        obj: Any = importlib.import_module(module_name)
+    except ImportError as e:
+        raise ImportError(f"Call factory module {module_name!r} is not "
+                          f"importable in this process: {e}") from e
+    for part in qualname.split("."):
+        try:
+            obj = getattr(obj, part)
+        except AttributeError as e:
+            raise AttributeError(
+                f"Call factory {spec!r}: {module_name!r} has no attribute "
+                f"path {qualname!r}") from e
+    if not callable(obj):
+        raise TypeError(f"Call factory {spec!r} resolved to non-callable "
+                        f"{obj!r}")
+    return obj
+
+
+def resolve_call_fn(node: Node) -> Callable:
+    """Resolve a Call node's kernel: ``attrs["fn"]`` if present, else build
+    (and memoise) it from the node's ``call_factory`` spec."""
+    attrs = node.attrs
+    fn = attrs.get("fn")
+    if fn is not None:
+        return fn
+    key = id(attrs)
+    with _CALL_CACHE_LOCK:
+        ent = _CALL_NODE_CACHE.get(key)
+        if ent is not None and ent[0] is attrs:
+            _CALL_NODE_CACHE.move_to_end(key)
+            return ent[1]
+    spec = attrs.get("call_factory")
+    if spec is None:
+        raise KeyError(
+            f"Call node {node.name!r} has neither an 'fn' nor a "
+            f"'call_factory' attr")
+    args = tuple(attrs.get("factory_args", ()))
+    kwargs = dict(attrs.get("factory_kwargs") or {})
+    try:
+        fkey: Optional[Tuple[str, bytes]] = (
+            spec, pickle.dumps((args, sorted(kwargs.items())), protocol=4))
+    except Exception:
+        fkey = None  # unpicklable static args: still works, just unshared
+    with _CALL_CACHE_LOCK:
+        fn = _CALL_FACTORY_CACHE.get(fkey) if fkey is not None else None
+    if fn is None:
+        fn = _import_factory(spec)(*args, **kwargs)
+    with _CALL_CACHE_LOCK:
+        if fkey is not None:
+            fn = _CALL_FACTORY_CACHE.setdefault(fkey, fn)
+        _CALL_NODE_CACHE[key] = (attrs, fn)
+        while len(_CALL_NODE_CACHE) > _CALL_NODE_CACHE_MAX:
+            _CALL_NODE_CACHE.popitem(last=False)
+    return fn
 
 
 def _call_num_outputs(node: Node) -> int:
@@ -520,7 +628,7 @@ def _call_num_outputs(node: Node) -> int:
 
 
 def _call_grad(node, ins, outs, gouts):
-    fn = node.attrs["fn"]
+    fn = resolve_call_fn(node)
 
     def scalar_fn(*args):
         res = fn(*args)
@@ -535,7 +643,7 @@ def _call_grad(node, ins, outs, gouts):
 
 @register("Call", num_outputs=_call_num_outputs, grad=_call_grad)
 def _call(ctx, node, *ins):
-    res = node.attrs["fn"](*ins)
+    res = resolve_call_fn(node)(*ins)
     return res if isinstance(res, tuple) else (res,)
 
 

@@ -1,0 +1,137 @@
+"""Session configuration as one object: :class:`SessionOptions`.
+
+Historically each knob was its own ``Session(...)`` kwarg resolving its own
+``REPRO_*`` environment variable inline in ``Session.__init__``.  This
+module consolidates them (DESIGN.md §15) with ONE documented resolution
+order, applied field-by-field when :meth:`SessionOptions.resolve` runs:
+
+  1. an explicit value on the ``SessionOptions`` (legacy ``Session``
+     kwargs fold into the options object via a deprecation shim first),
+  2. the field's ``REPRO_*`` environment variable,
+  3. the built-in default.
+
+Env-backed fields and their variables:
+
+  ===============  =====================  ============
+  field            env var                default
+  ===============  =====================  ============
+  ``verify``       ``REPRO_VERIFY``       ``"warn"``
+  ``fuse_regions`` ``REPRO_FUSE_REGIONS`` ``True``
+  ``numerics``     ``REPRO_FUSE_NUMERICS``  ``"strict"``
+  ``parity_guard`` ``REPRO_NUMERICS_GUARD`` ``"1"``
+  ``backend``      ``REPRO_KERNEL_BACKEND`` ``"generic"``
+  ===============  =====================  ============
+
+The sixth ``REPRO_*`` variable pair stays *process*-scoped by design and
+is therefore not a Session option: ``REPRO_REGION_CACHE`` (fusion's
+on-disk region cache, repro.core.fusion) and ``REPRO_FAULTS`` (worker
+fault injection, repro.distrib.faults) configure a process, not a
+session.
+
+``RunSignature.for_session`` derives every options-dependent component of
+the Executable cache key from the resolved options object in one place —
+flipping any field above can never reuse a stale Executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional, Tuple
+
+_TRUTHY_OFF = ("0", "false", "off")
+
+
+def parse_guard(value) -> Tuple[bool, Optional[int]]:
+    """Parity-guard policy -> (enabled, sample_every).
+
+    ``True``/``"1"`` verify the first run only; ``"sample:N"`` (or an int
+    N > 1) additionally re-verifies every Nth run — the opt-in sampling
+    mode for long-lived serving processes where input distribution shift
+    could expose drift the first batch didn't (DESIGN.md §9)."""
+    if isinstance(value, bool):
+        return value, None
+    if isinstance(value, int):
+        # 0 disables (falsy, like the old bool-only signature); N > 1
+        # samples every Nth run
+        return value > 0, (value if value > 1 else None)
+    s = str(value).strip().lower()
+    if s in _TRUTHY_OFF:
+        return False, None
+    if s.startswith("sample:"):
+        n = int(s.split(":", 1)[1])
+        if n < 1:
+            raise ValueError(f"parity guard sample period must be >= 1, got {n}")
+        return True, n  # sample:1 re-verifies every run
+    return True, None
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionOptions:
+    """All Session configuration, one object.  ``None`` on an env-backed
+    field means "resolve from the environment, else the default".
+
+    Non-env fields: ``cluster`` (a ClusterSpec / spec string turns the
+    session multi-process, DESIGN.md §11), ``standby`` (idle standby
+    endpoints for §13 partial re-placement), ``devices`` (a DeviceSet for
+    the in-process multi-device path), ``max_cached_executables`` (the
+    Executable LRU size; 0 disables caching)."""
+
+    verify: Optional[str] = None
+    fuse_regions: Optional[bool] = None
+    numerics: Optional[str] = None
+    parity_guard: Any = None
+    backend: Optional[str] = None
+    cluster: Any = None
+    standby: Any = ()
+    devices: Any = None
+    max_cached_executables: int = 16
+
+    def resolve(self) -> "SessionOptions":
+        """Apply the documented resolution order and validate; returns a
+        new ``SessionOptions`` with every env-backed field concrete."""
+        verify = self.verify
+        if verify is None:
+            verify = os.environ.get("REPRO_VERIFY", "warn")
+        if verify not in ("off", "warn", "error"):
+            raise ValueError(
+                f"verify must be 'off', 'warn' or 'error', got {verify!r}")
+
+        fuse_regions = self.fuse_regions
+        if fuse_regions is None:
+            fuse_regions = os.environ.get(
+                "REPRO_FUSE_REGIONS", "1").lower() not in _TRUTHY_OFF
+        fuse_regions = bool(fuse_regions)
+
+        numerics = self.numerics
+        if numerics is None:
+            numerics = os.environ.get("REPRO_FUSE_NUMERICS", "strict")
+        if numerics not in ("strict", "fast"):
+            raise ValueError(
+                f"numerics must be 'strict' or 'fast', got {numerics!r}")
+
+        parity_guard = self.parity_guard
+        if parity_guard is None:
+            parity_guard = os.environ.get("REPRO_NUMERICS_GUARD", "1")
+        parse_guard(parity_guard)  # validate eagerly
+
+        backend = self.backend
+        if backend is None:
+            backend = os.environ.get("REPRO_KERNEL_BACKEND", "generic")
+        from . import kernel_registry
+
+        kernel_registry.get_backend(backend)  # raises ValueError if unknown
+
+        standby = self.standby
+        if isinstance(standby, str):
+            standby = tuple(s.strip() for s in standby.split(",") if s.strip())
+        else:
+            standby = tuple(standby)
+
+        return dataclasses.replace(
+            self, verify=verify, fuse_regions=fuse_regions, numerics=numerics,
+            parity_guard=parity_guard, backend=backend, standby=standby)
+
+    @property
+    def parity_guard_policy(self) -> Tuple[bool, Optional[int]]:
+        return parse_guard(self.parity_guard if self.parity_guard is not None
+                           else os.environ.get("REPRO_NUMERICS_GUARD", "1"))

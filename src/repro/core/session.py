@@ -18,13 +18,15 @@ function.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
-import os
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Node, TensorRef, as_ref
 from .executor import ExecutionContext, Executor
 from .executable import Executable, ExecutableCache, RunSignature
+from .options import SessionOptions, parse_guard
 from . import ops as ops_mod
 from . import kernel_registry
 from ..runtime.containers import VariableStore, ContainerManager
@@ -44,94 +46,79 @@ class _DictCheckpointIO:
         return self.table[path]
 
 
-def _parse_guard(value) -> Tuple[bool, Optional[int]]:
-    """Parity-guard policy -> (enabled, sample_every).
+# Legacy config kwargs (pre-SessionOptions): sentinel distinguishes
+# "not passed" from an explicit None/()/16.
+_UNSET = object()
+_LEGACY_OPTION_KWARGS = ("devices", "cluster", "standby",
+                         "max_cached_executables", "fuse_regions",
+                         "numerics", "parity_guard", "backend", "verify")
+_warned_legacy_kwargs = False
 
-    ``True``/``"1"`` verify the first run only; ``"sample:N"`` (or an int
-    N > 1) additionally re-verifies every Nth run — the opt-in sampling
-    mode for long-lived serving processes where input distribution shift
-    could expose drift the first batch didn't (DESIGN.md §9)."""
-    if isinstance(value, bool):
-        return value, None
-    if isinstance(value, int):
-        # 0 disables (falsy, like the old bool-only signature); N > 1
-        # samples every Nth run
-        return value > 0, (value if value > 1 else None)
-    s = str(value).strip().lower()
-    if s in ("0", "false", "off"):
-        return False, None
-    if s.startswith("sample:"):
-        n = int(s.split(":", 1)[1])
-        if n < 1:
-            raise ValueError(f"parity guard sample period must be >= 1, got {n}")
-        return True, n  # sample:1 re-verifies every run
-    return True, None
+
+def _parse_guard(value) -> Tuple[bool, Optional[int]]:
+    # retained alias; the implementation moved to repro.core.options
+    return parse_guard(value)
 
 
 class Session:
     _ids = itertools.count()
 
     def __init__(self, graph: Optional[Graph] = None, *,
+                 options: Optional[SessionOptions] = None,
                  containers: Optional[ContainerManager] = None,
                  checkpoint_io: Any = None,
-                 devices: Any = None,
-                 cluster: Any = None,
-                 standby: Any = (),
-                 max_cached_executables: int = 16,
-                 fuse_regions: Optional[bool] = None,
-                 numerics: Optional[str] = None,
-                 parity_guard: Any = None,
-                 backend: Optional[str] = None,
-                 verify: Optional[str] = None) -> None:
+                 devices: Any = _UNSET,
+                 cluster: Any = _UNSET,
+                 standby: Any = _UNSET,
+                 max_cached_executables: Any = _UNSET,
+                 fuse_regions: Any = _UNSET,
+                 numerics: Any = _UNSET,
+                 parity_guard: Any = _UNSET,
+                 backend: Any = _UNSET,
+                 verify: Any = _UNSET) -> None:
         self.graph = graph or Graph()
-        # §14 pre-execution graph verifier: "off" skips it, "warn"
-        # (default) raises GraphVerifyWarning on findings, "error" turns
-        # error-severity diagnostics into a GraphError before anything
-        # executes.  Runs once per Executable build — the report is
-        # cached on the Executable, so cache hits re-run no analysis.
-        # Part of the RunSignature: flipping warn->error must re-verify.
-        if verify is None:
-            verify = os.environ.get("REPRO_VERIFY", "warn")
-        if verify not in ("off", "warn", "error"):
-            raise ValueError(
-                f"verify must be 'off', 'warn' or 'error', got {verify!r}")
-        self.verify = verify
-        # §10 region fusion (DESIGN.md §7): default-on; per-Session
-        # escape hatch via fuse_regions=False, process-wide via
-        # REPRO_FUSE_REGIONS=0.  Part of the RunSignature, so flipping it
-        # rebuilds Executables instead of reusing a stale plan.
-        if fuse_regions is None:
-            fuse_regions = os.environ.get(
-                "REPRO_FUSE_REGIONS", "1").lower() not in ("0", "false", "off")
-        self.fuse_regions = bool(fuse_regions)
-        # Numerics policy (DESIGN.md §9): "strict" keeps fused == unfused
-        # bit-for-bit (regions compile at XLA backend-opt-0, MatMul/
-        # reductions/Call dispatch eagerly); "fast" fuses everything at
-        # full XLA optimization, accepting tolerance-bounded drift.  Part
-        # of the RunSignature, so strict and fast executables never share
-        # a cache entry.
-        if numerics is None:
-            numerics = os.environ.get("REPRO_FUSE_NUMERICS", "strict")
-        if numerics not in ("strict", "fast"):
-            raise ValueError(
-                f"numerics must be 'strict' or 'fast', got {numerics!r}")
-        self.numerics = numerics
-        # Fast-mode safety net (DESIGN.md §9): verify each Executable's
-        # first run — and with REPRO_NUMERICS_GUARD=sample:N every Nth
-        # run — against the unfused-strict reference; on a tolerance
-        # breach, warn and permanently fall back to strict execution.
-        if parity_guard is None:
-            parity_guard = os.environ.get("REPRO_NUMERICS_GUARD", "1")
-        self.parity_guard, self.parity_guard_every = _parse_guard(parity_guard)
-        # Kernel-backend registry (DESIGN.md §12): which kernel backend
-        # fused-region lowering dispatches recognized idioms onto.
-        # "generic" = plain jnp/XLA; "pallas" = the hand-written kernels.
-        # Part of the RunSignature, so flipping backends never reuses a
-        # stale Executable.
-        if backend is None:
-            backend = os.environ.get("REPRO_KERNEL_BACKEND", "generic")
-        kernel_registry.get_backend(backend)  # raises ValueError if unknown
-        self.kernel_backend = backend
+        # All configuration lives on one SessionOptions (repro.core.options;
+        # DESIGN.md §15) with a single documented resolution order:
+        # explicit value > REPRO_* env var > default.  The per-field kwargs
+        # are a deprecation shim — they fold into the options object, with
+        # an explicit kwarg overriding the corresponding options= field.
+        #
+        # Field notes (details in repro.core.options):
+        #   verify        §14 pre-execution verifier: off|warn|error; part
+        #                 of the RunSignature (flipping warn->error
+        #                 re-verifies, never reuses a stale Executable).
+        #   fuse_regions  §10 region fusion (DESIGN.md §7), default-on;
+        #                 in the RunSignature.
+        #   numerics      DESIGN.md §9 strict|fast policy; in the
+        #                 RunSignature so the modes never share a cache
+        #                 entry.
+        #   parity_guard  fast-mode safety net: first-run (and sample:N)
+        #                 verification against unfused-strict, with
+        #                 permanent strict fallback on a breach.
+        #   backend       DESIGN.md §12 kernel-backend registry choice;
+        #                 in the RunSignature.
+        legacy = {k: v for k, v in (
+            ("devices", devices), ("cluster", cluster), ("standby", standby),
+            ("max_cached_executables", max_cached_executables),
+            ("fuse_regions", fuse_regions), ("numerics", numerics),
+            ("parity_guard", parity_guard), ("backend", backend),
+            ("verify", verify)) if v is not _UNSET}
+        if legacy:
+            global _warned_legacy_kwargs
+            if not _warned_legacy_kwargs:
+                warnings.warn(
+                    "per-field Session(...) config kwargs are deprecated; "
+                    "pass Session(options=SessionOptions(...)) instead "
+                    "(repro.core.options)", DeprecationWarning, stacklevel=2)
+                _warned_legacy_kwargs = True
+        opts = dataclasses.replace(options or SessionOptions(), **legacy)
+        self.options = opts = opts.resolve()
+        # verify/fuse_regions/numerics/kernel_backend are write-through
+        # properties over self.options (below): mid-session flips like
+        # ``sess.numerics = "strict"`` fold back into the options object,
+        # so RunSignature.for_session — which derives every key component
+        # from the resolved options — re-keys and rebuilds, never reuses.
+        self.parity_guard, self.parity_guard_every = parse_guard(opts.parity_guard)
         self.containers = containers or ContainerManager()
         self.variables = VariableStore(self.containers)
         self.rendezvous = Rendezvous()
@@ -143,12 +130,13 @@ class Session:
         # processes and Send/Recv riding the wire rendezvous.
         self.cluster = None
         self._master: Any = None
-        if cluster is not None:
+        devices = opts.devices
+        if opts.cluster is not None:
             import uuid
 
             from ..distrib.wire import ClusterSpec
 
-            self.cluster = ClusterSpec.parse(cluster)
+            self.cluster = ClusterSpec.parse(opts.cluster)
             if devices is None:
                 devices = self.cluster.device_set()
             # worker-side Variable containers are namespaced per session,
@@ -159,17 +147,54 @@ class Session:
             self.wire_namespace = uuid.uuid4().hex[:8]
         # §13: endpoints of idle standby workers — partial re-placement
         # consumes them before falling back to survivor hosting
-        if isinstance(standby, str):
-            standby = [s.strip() for s in standby.split(",") if s.strip()]
-        self.standby = list(standby)
+        self.standby = list(opts.standby)
         self.devices = devices  # DeviceSet for the multi-device eager path
         self.id = next(Session._ids)
         self._run_count = 0
         # compile-once/run-many: RunSignature -> Executable (DESIGN.md §5);
         # max_cached_executables=0 disables caching (benchmark baseline).
-        self._executables = ExecutableCache(maxsize=max_cached_executables)
+        self._executables = ExecutableCache(maxsize=opts.max_cached_executables)
 
     # ------------------------------------------------------------------
+    # -- mirrored option attrs --------------------------------------------
+    # One source of truth: reads come from self.options, writes fold back
+    # into it (validated through resolve()), so a mid-session flip reaches
+    # RunSignature.for_session through the same options-derived path as a
+    # constructor value.
+
+    @property
+    def verify(self) -> str:
+        return self.options.verify
+
+    @verify.setter
+    def verify(self, v: str) -> None:
+        self.options = dataclasses.replace(self.options, verify=v).resolve()
+
+    @property
+    def fuse_regions(self) -> bool:
+        return self.options.fuse_regions
+
+    @fuse_regions.setter
+    def fuse_regions(self, v: bool) -> None:
+        self.options = dataclasses.replace(
+            self.options, fuse_regions=v).resolve()
+
+    @property
+    def numerics(self) -> str:
+        return self.options.numerics
+
+    @numerics.setter
+    def numerics(self, v: str) -> None:
+        self.options = dataclasses.replace(self.options, numerics=v).resolve()
+
+    @property
+    def kernel_backend(self) -> str:
+        return self.options.backend
+
+    @kernel_backend.setter
+    def kernel_backend(self, v: str) -> None:
+        self.options = dataclasses.replace(self.options, backend=v).resolve()
+
     @property
     def master(self):
         """Lazily-started :class:`repro.distrib.master.Master` for cluster

@@ -233,15 +233,19 @@ class WirePlan:
     """
 
     def __init__(self, exe: Any, device_nodes: Dict[str, set], *,
-                 numerics: Optional[str] = None) -> None:
+                 numerics: Optional[str] = None,
+                 backend: Optional[str] = None) -> None:
         session = exe.session
         self.exe = exe
         self.session = session
         self.master: Master = session.master
-        # numerics override: the §13 distributed parity guard builds a
-        # companion plan with numerics="strict" as its reference pipeline
-        # (strict fused == unfused bit-for-bit, §7/§9)
+        # numerics/backend overrides: the §13 distributed parity guard
+        # builds a companion plan with numerics="strict", backend="generic"
+        # as its reference pipeline (strict fused == unfused bit-for-bit,
+        # §7/§9; the generic backend is the kernel oracle, §12)
         self.numerics = numerics if numerics is not None else exe.numerics
+        self.backend = (backend if backend is not None
+                        else getattr(exe, "kernel_backend", "generic"))
         self.handle = uuid.uuid4().hex[:12]
         self._eid_prefix = uuid.uuid4().hex[:8]
         self._eid_counter = itertools.count()
@@ -254,21 +258,25 @@ class WirePlan:
         n_tasks = len(cluster.workers)
 
         # unshippable-graph check up front, with a better error than a
-        # deep pickle traceback: Call kernels must pickle by reference
-        # (module-level functions, autodiff's _GradFn) — closures cannot
-        # cross a process boundary
+        # deep pickle traceback: a Call kernel must either pickle by
+        # reference (module-level functions, autodiff's _GradFn) or be a
+        # factory-form Call whose attrs carry an importable
+        # ``module:qualname`` + picklable static args (DESIGN.md §15) —
+        # closures cannot cross a process boundary
         from .protocol import pack_msg
 
         for name, node in graph.nodes.items():
             if node.op == "Call":
                 try:
-                    pack_msg({"fn": node.attrs.get("fn")})
+                    pack_msg({"attrs": node.attrs})
                 except Exception as e:  # noqa: BLE001 — rewrap with the node name
                     raise ExecutorError(
-                        f"Call node {name!r} holds a Python closure that "
-                        f"cannot ship to a worker process ({e}); distributed "
-                        f"graphs must use registered primitive ops or "
-                        f"importable callables (DESIGN.md §11)") from e
+                        f"Call node {name!r} holds a Python closure (or "
+                        f"unpicklable static args) that cannot ship to a "
+                        f"worker process ({e}); distributed graphs must use "
+                        f"registered primitive ops, importable callables, or "
+                        f"wire-shippable Call factories "
+                        f"(GraphBuilder.call_factory, DESIGN.md §15)") from e
 
         # §14 pre-ship verification: each per-task slice must be
         # self-contained (P601) and the global Send/Recv pairing live —
@@ -337,6 +345,10 @@ class WirePlan:
                 "feed_keys": [(r.node, r.port) for r in exe.feed_keys],
                 "fuse": exe.fuse_regions,
                 "numerics": self.numerics,
+                # §12/§15: the session's kernel-backend choice rides the
+                # payload so the worker's re-fuse dispatches the same
+                # kernels the master would have in-process
+                "backend": self.backend,
             }
         self.master.plans.append(weakref.ref(self))
 
@@ -472,6 +484,8 @@ class WirePlan:
         failures: Dict[int, BaseException] = {}
         stats: Dict[int, Dict[str, int]] = {}
         lock = threading.Lock()
+        done = threading.Event()  # set when all tasks replied (or one failed)
+        pending = [len(self.payloads)]
 
         def call_one(task: int) -> None:
             try:
@@ -485,9 +499,16 @@ class WirePlan:
                     results.update(rep.get("results", {}))
                     stats[task] = {k: rep.get(k, 0) for k in
                                    ("sends", "bytes_sent", "remote_fetches")}
+                    stats[task]["timings"] = rep.get("timings", {})
             except BaseException as e:  # noqa: BLE001 — classified below
                 with lock:
                     failures[task] = e
+                done.set()  # fail fast: wake the waiter before the tick
+            finally:
+                with lock:
+                    pending[0] -= 1
+                    if pending[0] == 0:
+                        done.set()
 
         threads = {t: threading.Thread(target=call_one, args=(t,), daemon=True,
                                        name=f"master-run:{t}")
@@ -496,8 +517,13 @@ class WirePlan:
             t.start()
         deadline = time.monotonic() + timeout + 20.0
         try:
-            while any(t.is_alive() for t in threads.values()):
-                if self.master.dead or failures:
+            while True:
+                # event-driven completion (a polling sleep here puts a
+                # floor under every step's latency); the 50ms timeout is
+                # only the re-check cadence for dead workers
+                with lock:
+                    n_pending = pending[0]
+                if n_pending == 0 or self.master.dead or failures:
                     break
                 if time.monotonic() > deadline:
                     stuck = sorted(t for t, th in threads.items() if th.is_alive())
@@ -505,7 +531,7 @@ class WirePlan:
                         f"graph execution {eid} timed out after {timeout:.1f}s:"
                         f" {', '.join(self.master.identity(t) for t in stuck)} "
                         f"never replied (§3.3 failure reporting)")
-                time.sleep(0.05)
+                done.wait(0.05)
             if failures:
                 task, err = sorted(failures.items())[0]
                 ident = self.master.identity(task)

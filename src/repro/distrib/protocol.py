@@ -18,9 +18,11 @@ propagates through untaken cond branches and terminating loop iterations
 exactly as it does between threads.
 
 Graphs ship as pickled :class:`~repro.core.graph.Graph` slices; any
-``Call`` node closure is rejected with a clear :class:`ProtocolError`
-(distributed graphs must be built from registered primitive ops —
-ROADMAP: wire-shippable Call via importable factories).
+``Call`` node closure is rejected with a clear :class:`ProtocolError`.
+Distributed graphs are built from registered primitive ops, module-level
+callables, or wire-shippable Call *factories* — attrs carrying an
+importable ``module:qualname`` plus static args, rebuilt worker-side at
+registration (``GraphBuilder.call_factory``, DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -153,7 +155,9 @@ def pack_msg(msg: Dict[str, Any]) -> bytes:
         raise ProtocolError(
             f"message {msg.get('kind')!r} contains a non-wire-serializable "
             f"object ({e}); distributed graphs must be built from registered "
-            f"primitive ops — Call closures cannot ship (DESIGN.md §11)"
+            f"primitive ops, importable callables, or Call factories "
+            f"(GraphBuilder.call_factory — closures cannot ship; "
+            f"DESIGN.md §15)"
         ) from e
     return buf.getvalue()
 

@@ -45,6 +45,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..core.executor import ExecutionContext, Executor
 from ..core.graph import Graph, TensorRef
 from ..core import fusion as fusion_mod
+from ..core import kernel_registry
+from ..core import ops as ops_mod
 from ..runtime.containers import ContainerManager, VariableStore
 from ..runtime.rendezvous import Rendezvous
 from . import faults
@@ -230,18 +232,37 @@ class Worker:
                 cont.write(vname, value)
             self._var_containers[ns][vname] = container
 
+        # §15 factory-form Calls rebuild *at registration*, not first run:
+        # an unimportable factory (missing module, bad qualname) surfaces
+        # as a register_graph error naming the node, and the built kernel
+        # is memoised per (factory, args) so N replicas of one step share
+        # a single model build in this process
+        for name in sorted(names):
+            node = g.nodes[name]
+            if node.op == "Call" and "call_factory" in node.attrs:
+                try:
+                    ops_mod.resolve_call_fn(node)
+                except Exception as e:  # noqa: BLE001 — rewrap with the node
+                    raise RuntimeError(
+                        f"Call node {name!r}: factory "
+                        f"{node.attrs['call_factory']!r} failed to build on "
+                        f"worker task:{self.task}: {e}") from e
+
         fetch_remap: Dict[TensorRef, TensorRef] = {}
         if p.get("fuse", True) and names:
             # §7 region fusion on the local slice: placement keeps regions
             # per-device, Send/Recv nodes are runtime ops and never join a
             # region, so the fused graph is safe to interleave with wire
-            # transfers.  Strict numerics stays bit-identical (§9).
+            # transfers.  Strict numerics stays bit-identical (§9); the
+            # master's kernel-backend choice rides the payload (§12/§15)
+            # so wire runs dispatch e.g. Pallas kernels too.
             all_fetch_refs = [r for lst in fetch_specs.values() for _, r in lst]
             fus = fusion_mod.try_fuse(
                 g, set(names), placement=placement, feeds=feed_keys,
                 fetch_refs=all_fetch_refs,
                 written_vars=fusion_mod.written_variables(g, names),
-                numerics=p.get("numerics", "strict"))
+                numerics=p.get("numerics", "strict"),
+                backend=p.get("backend", "generic"))
             if fus is not None and (fus.regions or fus.changed):
                 g = fus.graph
                 fetch_remap = fus.fetch_map
@@ -297,6 +318,8 @@ class Worker:
 
         store = self.store(reg.namespace)
 
+        timings: Dict[str, Dict[str, float]] = {}
+
         def run_device(dev: str, ex: Executor) -> None:
             ctx = ExecutionContext(
                 variables=store, rendezvous=wire, queues=self.queues,
@@ -304,6 +327,7 @@ class Worker:
                 device_kind=dev.split("device:")[-1].split(":")[0])
             specs = reg.fetch_specs.get(dev, [])
             local = [reg.fetch_remap.get(r, r) for _, r in specs]
+            t_wall, t_cpu = time.monotonic(), time.thread_time()
             try:
                 vals = ex.run(local, feeds, ctx=ctx)
                 with lock:
@@ -312,6 +336,14 @@ class Worker:
             except BaseException as e:  # noqa: BLE001 — §3.3 surface any failure
                 with lock:
                     errors.append(e)
+            finally:
+                # wall vs thread-CPU split: the gap is time this device
+                # spent blocked (Recv waits, scheduler) — §3.3 diagnostics
+                # surfaced through run_graph replies into last_run_stats
+                with lock:
+                    timings[dev] = {
+                        "wall_s": time.monotonic() - t_wall,
+                        "cpu_s": time.thread_time() - t_cpu}
 
         threads = {dev: threading.Thread(target=run_device, args=(dev, ex),
                                          daemon=True,
@@ -332,9 +364,10 @@ class Worker:
                     f"worker task:{reg.task} (pid {os.getpid()}): device(s) "
                     f"{stuck} never finished within {timeout:.1f}s (stuck "
                     f"Send/Recv or hung kernel; §3.3 failure reporting)")
-            return {"results": results, "sends": wire.sends,
-                    "bytes_sent": wire.bytes_sent,
-                    "remote_fetches": wire.remote_fetches}
+            return {"results": results,
+                    "sends": wire.sends, "bytes_sent": wire.bytes_sent,
+                    "remote_fetches": wire.remote_fetches,
+                    "timings": timings}
         finally:
             # stop straggler fetcher threads (blocked in recv_tensor RPCs
             # for up to their timeout) from depositing into the mailbox
@@ -449,6 +482,11 @@ class Worker:
                 1 for t in threading.enumerate()
                 if t.is_alive() and t.name.startswith("wire-fetch:")),
             "registered": sorted(f"{h}@task:{t}" for h, t in self._graphs),
+            # §12/§15: per-backend kernel dispatch counts in THIS process —
+            # the proof that a wire run routed fused idioms through the
+            # registry (trace-time counts, once per compiled signature)
+            "kernel_dispatch": {f"{b}:{k}": v for (b, k), v
+                                in sorted(kernel_registry.DISPATCH.items())},
         }
 
     def _rpc_shutdown(self, p: Dict[str, Any]) -> Dict[str, Any]:

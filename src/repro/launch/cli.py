@@ -1,0 +1,77 @@
+"""Shared CLI surface for the launch tools (DESIGN.md §15).
+
+``train`` and ``serve`` expose the same engine/numerics/cluster flags;
+this module defines them once so the two parsers cannot drift, and turns
+parsed args into a :class:`~repro.core.options.SessionOptions` in one
+place — the options object then applies the documented resolution order
+(explicit > ``REPRO_*`` env > default) itself.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from ..core.options import SessionOptions
+
+
+def add_engine_options(ap: argparse.ArgumentParser,
+                       *, numerics_default: str = "fast"
+                       ) -> argparse.ArgumentParser:
+    """--engine / --numerics / --backend: how a step executes locally."""
+    ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
+                    help="jit: lowered+jitted step; graph: eager Session.run "
+                         "through the cached Executable (DESIGN.md §5)")
+    ap.add_argument("--numerics", choices=("fast", "strict"),
+                    default=numerics_default,
+                    help="graph-engine fused-region numerics (DESIGN.md §9): "
+                         "fast compiles regions at full XLA optimization "
+                         "under the CI-enforced tolerance contract; strict "
+                         "restores fused==unfused bit-parity")
+    ap.add_argument("--backend", default=None, metavar="NAME",
+                    help="kernel backend for fused regions (e.g. pallas; "
+                         "DESIGN.md §12) — default resolves "
+                         "REPRO_KERNEL_BACKEND, then 'generic'")
+    return ap
+
+
+def add_cluster_options(ap: argparse.ArgumentParser,
+                        *, replication: bool = False,
+                        standby: bool = False) -> argparse.ArgumentParser:
+    """--cluster (and friends): where a step executes (DESIGN.md §11)."""
+    ap.add_argument("--cluster", default=None, metavar="HOST:PORT,...",
+                    help="run over this worker pool (one `python -m "
+                         "repro.distrib.worker` process per endpoint; "
+                         "DESIGN.md §11)")
+    if standby:
+        ap.add_argument("--standby", default=None, metavar="HOST:PORT,...",
+                        help="spare workers for §13 partial re-placement: a "
+                             "dead task's subgraph re-places onto the first "
+                             "free standby (survivors keep live state) before "
+                             "the whole-pool checkpoint restart is considered")
+    if replication:
+        ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                        help="data-parallel replicas of the train step over "
+                             "the --cluster pool (DESIGN.md §15)")
+        ap.add_argument("--mode", choices=("sync", "async"), default="sync",
+                        help="gradient aggregation across replicas: sync = "
+                             "barrier step with tree-reduced mean gradients; "
+                             "async = parameter-server applies with no "
+                             "barrier (DESIGN.md §15)")
+    return ap
+
+
+def session_options_from_args(args: argparse.Namespace,
+                              **overrides) -> SessionOptions:
+    """A SessionOptions carrying every session-relevant flag the parser
+    saw.  Only explicitly-present args are forwarded, so flags a tool did
+    not register (or that stayed None) fall through to the env/default
+    tiers of the options resolution order."""
+    kw = {}
+    for field in ("numerics", "backend", "standby"):
+        v = getattr(args, field, None)
+        if v is not None:
+            kw[field] = v
+    if getattr(args, "cluster", None):
+        kw["cluster"] = args.cluster
+    kw.update(overrides)
+    return SessionOptions(**kw)

@@ -15,15 +15,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
+from ..core.options import SessionOptions
 from ..models.api import Model, Shape
 from ..models.params import init_params
+from .cli import add_cluster_options, add_engine_options
 from .steps import build_serve_step, build_eager_serve_step
 
 
 def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 16, gen: int = 32, max_seq: int = 128,
           seed: int = 0, temperature: float = 0.0,
-          engine: str = "jit", numerics: str = "fast") -> Dict[str, Any]:
+          engine: str = "jit", numerics: str = "fast",
+          backend: Optional[str] = None) -> Dict[str, Any]:
     """``engine="jit"`` jits one decode step; ``engine="graph"`` drives the
     decode loop through ``Session.run`` with the KV cache as a Variable —
     every token re-runs one cached Executable (DESIGN.md §5).  The graph
@@ -52,7 +55,8 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
 
     eb = None
     if engine == "graph":
-        eb = build_eager_serve_step(cfg, numerics=numerics)
+        eb = build_eager_serve_step(cfg, numerics=numerics,
+                                    options=SessionOptions(backend=backend))
         eb.session.set_variable("params", params)
         eb.session.set_variable("cache", cache)
 
@@ -111,7 +115,8 @@ def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
     one RunGraph fan-out with the hidden activations crossing processes
     through the wire rendezvous.  The steady state is the paper's
     serving shape (§3.2 "caches these graphs"), process boundaries
-    included; the Call-based LM decode stays single-process for now.
+    included.  (The LM decode graph is §15 factory-form and would ship
+    too; the MLP keeps this loop fast and dependency-free.)
     """
     from ..core import Session
     from ..distrib.wire import ClusterSpec
@@ -120,7 +125,7 @@ def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
     spec = ClusterSpec.parse(cluster)
     tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
     ws = build_wire_train_step(tasks, seed=seed)
-    sess = Session(ws.builder.graph, cluster=spec)
+    sess = Session(ws.builder.graph, options=SessionOptions(cluster=spec))
     # fetching only the logits prunes the whole loss/grad/update subgraph
     # (§4.2), so the shipped graph is the pure forward pass
     run = sess.make_callable([ws.logits], [ws.feed_x])
@@ -153,16 +158,8 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
-                    help="jit: jitted decode step; graph: eager Session.run "
-                         "through the cached Executable (DESIGN.md §5)")
-    ap.add_argument("--numerics", choices=("fast", "strict"), default="fast",
-                    help="graph-engine fused-region numerics (DESIGN.md §9): "
-                         "fast (default) fuses the decode step at full XLA "
-                         "optimization; strict restores bit-parity")
-    ap.add_argument("--cluster", default=None, metavar="HOST:PORT,...",
-                    help="serve the wire-shippable scoring graph across this "
-                         "worker pool (DESIGN.md §11)")
+    add_engine_options(ap)
+    add_cluster_options(ap)
     ap.add_argument("--requests", type=int, default=100,
                     help="number of scoring requests in --cluster mode")
     args = ap.parse_args(argv)
@@ -171,7 +168,7 @@ def main(argv=None) -> int:
         return 0
     res = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, engine=args.engine,
-                numerics=args.numerics)
+                numerics=args.numerics, backend=args.backend)
     print("[serve] sample token ids:", res["generated"][0][:16].tolist())
     return 0
 

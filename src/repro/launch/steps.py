@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import GraphBuilder, Session, compile_subgraph, gradients
+from ..core import (GraphBuilder, Session, SessionOptions, compile_subgraph,
+                    gradients)
 from ..models.api import Model, Shape, SHAPES
 from ..models.config import ModelConfig
 from ..models.params import abstract_params, param_axes, init_params
@@ -100,36 +101,114 @@ def step_hparams(cfg: ModelConfig, shape: Shape, n_groups: int) -> Dict[str, Any
 
 
 # ---------------------------------------------------------------------------
+# Wire-shippable Call factories (DESIGN.md §15): the LM step kernels as
+# importable ``module:qualname`` constructors over picklable statics, so
+# the graphs built below register on a §11 worker pool unchanged.  A
+# worker resolves them at registration time via ``ops.resolve_call_fn``
+# (one model build per process, shared across replicas).
+
+LM_LOSS_FACTORY = "repro.launch.steps:lm_loss_factory"
+LM_LOSS_GRAD_FACTORY = "repro.launch.steps:lm_loss_and_grad_factory"
+LM_UPDATE_FACTORY = "repro.launch.steps:lm_update_factory"
+LM_SERVE_FACTORY = "repro.launch.steps:lm_serve_factory"
 
 
-def _train_graph(feed_names, loss_of, update_of, loss_and_grad_of, n_micro):
+def lm_loss_factory(cfg: ModelConfig, shard: int, feed_names, loss_kw):
+    """Rebuild the LM loss kernel: ``(params, *feeds) -> scalar loss``."""
+    model = Model.for_config(cfg, shard)
+    feed_names, loss_kw = tuple(feed_names), dict(loss_kw)
+
+    def graph_loss(params, *feeds):
+        return model.loss_fn(params, dict(zip(feed_names, feeds)), **loss_kw)
+
+    return graph_loss
+
+
+def lm_loss_and_grad_factory(cfg: ModelConfig, shard: int, feed_names,
+                             loss_kw, n_micro: int):
+    """Rebuild the fused loss+grad kernel with gradient accumulation over
+    ``n_micro`` microbatches (memory lever: stored activations scale with
+    B/n_micro, grads accumulate fp32)."""
+    feed_names = tuple(feed_names)
+    loss_feeds = lm_loss_factory(cfg, shard, feed_names, loss_kw)
+
+    def loss_of(params, batch):
+        return loss_feeds(params, *[batch[n] for n in feed_names])
+
+    def graph_loss_grad(params, *feeds):
+        batch = dict(zip(feed_names, feeds))
+        if n_micro <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = {k: v.reshape((n_micro, B // n_micro) + v.shape[1:])
+              for k, v in batch.items()}
+
+        def body(carry, mbatch):
+            tot_loss, acc = carry
+            l, g = jax.value_and_grad(loss_of)(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, gi: a + gi.astype(jnp.float32) / n_micro, acc, g)
+            return (tot_loss + l / n_micro, acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_val, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mb)
+        return loss_val, grads
+
+    return graph_loss_grad
+
+
+def lm_update_factory(lr: float):
+    """Rebuild the AdamW apply: ``(params, grads, opt) -> (params, opt)``."""
+
+    def update(params, grads, opt):
+        return adamw_update(params, grads, opt, lr=lr)
+
+    return update
+
+
+def lm_serve_factory(cfg: ModelConfig, shard: int, serve_kw):
+    """Rebuild one-token decode: ``(params, cache, tokens, pos) ->
+    (logits, cache)``."""
+    model = Model.for_config(cfg, shard)
+    serve_kw = dict(serve_kw)
+
+    def serve(params, cache, tokens, pos):
+        return model.serve_step(params, cache, tokens, pos, **serve_kw)
+
+    return serve
+
+
+def _train_graph(feed_names, cfg: ModelConfig, shard: int, loss_kw,
+                 lr: float, n_micro: int):
     """The training step AS A repro.core GRAPH: loss Call node, §4.1
     ``gradients()`` backward extension, AdamW update + Assign nodes —
-    shared by the lowered (JIT) and eager (Session.run) paths."""
+    shared by the lowered (JIT) and eager (Session.run) paths.  Every
+    Call is declared through a wire-shippable factory (§15), so the same
+    graph also registers on a worker pool."""
     b = GraphBuilder()
     v_params = b.variable("params")
     v_opt = b.variable("opt")
+    feed_names = tuple(feed_names)
     feed_nodes = {n: b.placeholder(n) for n in feed_names}
+    ins = [v_params] + [feed_nodes[n] for n in feed_names]
 
     if n_micro <= 1:
         # faithful path: §4.1 gradients() extends the graph
-        def graph_loss(params, *feeds):
-            return loss_of(params, dict(zip(feed_names, feeds)))
-
-        loss_node = b.call(graph_loss,
-                           [v_params] + [feed_nodes[n] for n in feed_names],
-                           name="loss")
+        loss_node = b.call_factory(LM_LOSS_FACTORY, ins,
+                                   args=(cfg, shard, feed_names, loss_kw),
+                                   name="loss")
         (gref,) = gradients(b.graph, [loss_node], [v_params])
     else:
         # accumulated grads are one fused node (still "just nodes")
-        def graph_loss_grad(params, *feeds):
-            return loss_and_grad_of(params, dict(zip(feed_names, feeds)))
-
-        lg = b.call(graph_loss_grad,
-                    [v_params] + [feed_nodes[n] for n in feed_names],
-                    name="loss_and_grad", n_out=2)
+        lg = b.call_factory(LM_LOSS_GRAD_FACTORY, ins,
+                            args=(cfg, shard, feed_names, loss_kw, n_micro),
+                            name="loss_and_grad", n_out=2)
         loss_node, gref = lg, lg.output(1)
-    upd = b.call(update_of, [v_params, gref, v_opt], name="adamw", n_out=2)
+    upd = b.call_factory(LM_UPDATE_FACTORY, [v_params, gref, v_opt],
+                         args=(lr,), name="adamw", n_out=2)
     a1 = b.assign(v_params, upd.output(0))
     a2 = b.assign(v_opt, upd.output(1))
     return b, loss_node, a1, a2, feed_nodes
@@ -191,7 +270,7 @@ def build_train_step(
 
     if via_graph:
         b, loss_node, a1, a2, feed_nodes = _train_graph(
-            feed_names, loss_of, update_of, loss_and_grad_of, n_micro)
+            feed_names, cfg, shard, loss_kw, lr, n_micro)
         sess = Session(b.graph)
         lowered = compile_subgraph(
             sess, [loss_node.ref], [feed_nodes[n].ref for n in feed_names],
@@ -348,8 +427,9 @@ def build_serve_step(
         v_cache = b.variable("cache")
         t_ph = b.placeholder("tokens")
         p_ph = b.placeholder("pos")
-        out = b.call(serve_of, [v_params, v_cache, t_ph, p_ph],
-                     name="serve", n_out=2)
+        out = b.call_factory(LM_SERVE_FACTORY, [v_params, v_cache, t_ph, p_ph],
+                             args=(cfg, shard, serve_kw), name="serve",
+                             n_out=2)
         a_cache = b.assign(v_cache, out.output(1))
         sess = Session(b.graph)
         lowered = compile_subgraph(sess, [out.output(0)],
@@ -424,13 +504,16 @@ def build_eager_train_step(
     lr: float = 3e-4,
     hparam_overrides: Optional[Dict[str, Any]] = None,
     numerics: Optional[str] = None,
+    options: Optional[SessionOptions] = None,
 ) -> EagerStepBundle:
     """Train step for the eager multi-run path: the same graph as
     ``build_train_step(via_graph=True)`` but *run*, not lowered — each call
     re-enters ``Session.run`` and hits the cached Executable for the
     (loss, train_op) signature (compile once, run many; DESIGN.md §5).
     ``numerics`` selects the fused-region policy (DESIGN.md §9): the
-    train tool defaults the graph engine to "fast"."""
+    train tool defaults the graph engine to "fast".  The graph is built
+    from §15 Call factories, so with ``options.cluster`` set the same
+    step registers and runs on a worker pool."""
     model = Model.for_config(cfg)
     hp = step_hparams(cfg, shape, 1)
     hp.update(hparam_overrides or {})
@@ -440,17 +523,14 @@ def build_eager_train_step(
     if not model.is_encdec:
         loss_kw["n_token_groups"] = hp["n_token_groups"]
 
-    def loss_of(params, batch):
-        return model.loss_fn(params, batch, **loss_kw)
-
-    def update_of(params, grads, opt):
-        return adamw_update(params, grads, opt, lr=lr)
-
     feed_names = list(model.batch_desc(shape))
     b, loss_node, a1, a2, feed_nodes = _train_graph(
-        feed_names, loss_of, update_of, None, 1)
+        feed_names, cfg, 1, loss_kw, lr, 1)
     train_op = b.group([a1, a2], name="train_op")
-    sess = Session(b.graph, numerics=numerics)
+    opts = options or SessionOptions()
+    if numerics is not None:
+        opts = dataclasses.replace(opts, numerics=numerics)
+    sess = Session(b.graph, options=opts)
     run = sess.make_callable([loss_node.ref, train_op.ref],
                              [feed_nodes[n].ref for n in feed_names])
 
@@ -464,26 +544,29 @@ def build_eager_train_step(
 
 
 def build_eager_serve_step(cfg: ModelConfig,
-                           numerics: Optional[str] = None) -> EagerStepBundle:
+                           numerics: Optional[str] = None,
+                           options: Optional[SessionOptions] = None
+                           ) -> EagerStepBundle:
     """One-token decode as a Session graph: the KV cache is a Variable
     updated by an Assign node, so the decode loop is exactly the paper's
     steady-state serving shape — one cached Executable re-run per token.
     Under ``numerics="fast"`` (the serve tool's graph-engine default) the
-    ``Call`` + cache Assign fuse into one jitted region (DESIGN.md §9)."""
+    ``Call`` + cache Assign fuse into one jitted region (DESIGN.md §9).
+    The serve Call is factory-form (§15), so the graph is wire-shippable."""
     model = Model.for_config(cfg)
-
-    def serve_of(params, cache, tokens, pos):
-        return model.serve_step(params, cache, tokens, pos)
 
     b = GraphBuilder()
     v_params = b.variable("params")
     v_cache = b.variable("cache")
     t_ph = b.placeholder("tokens")
     p_ph = b.placeholder("pos")
-    out = b.call(serve_of, [v_params, v_cache, t_ph, p_ph],
-                 name="serve", n_out=2)
+    out = b.call_factory(LM_SERVE_FACTORY, [v_params, v_cache, t_ph, p_ph],
+                         args=(cfg, 1, {}), name="serve", n_out=2)
     a_cache = b.assign(v_cache, out.output(1))
-    sess = Session(b.graph, numerics=numerics)
+    opts = options or SessionOptions()
+    if numerics is not None:
+        opts = dataclasses.replace(opts, numerics=numerics)
+    sess = Session(b.graph, options=opts)
     run = sess.make_callable([out.output(0), a_cache.ref],
                              [t_ph.ref, p_ph.ref])
 
@@ -501,9 +584,10 @@ class WireStepBundle:
     """A train/score step whose graph can ship to a §11 worker pool.
 
     Every node is a registered primitive op (MatMul/ReLU/SoftmaxXent/
-    Assign/...), so the graph pickles onto the wire — unlike the
-    Call-based LM steps, whose Python closures cannot cross a process
-    boundary (ROADMAP: wire-shippable Call via importable factories).
+    Assign/...), so the graph pickles onto the wire with no Call
+    machinery at all — the minimal exemplar.  The Call-based LM steps
+    ship too, now that they are declared through §15 factories
+    (``GraphBuilder.call_factory``); see ``build_lm_replica_spec``.
     """
 
     builder: Any                     # GraphBuilder owning the graph
@@ -553,6 +637,113 @@ def build_wire_train_step(tasks: Sequence[str], *, n_features: int = 16,
     return WireStepBundle(builder=b, loss=loss.ref, logits=logits.ref,
                           train_op=train_op.ref, feed_x=x.ref, feed_y=y.ref,
                           var_names=("w1", "w2"))
+
+
+# ---------------------------------------------------------------------------
+# §15 replica specs: train-step shapes for distrib.replication.ReplicaPlan
+
+
+def _sgd_apply(lr, values, grads):
+    """Master-side parameter-server SGD (async mode)."""
+    return {k: values[k] - lr * g for k, g in grads.items()}
+
+
+def _lm_apply(lr, values, grads):
+    """Master-side parameter-server AdamW (async mode)."""
+    new_params, new_opt = adamw_update(values["params"], grads["params"],
+                                       values["opt"], lr=lr)
+    return {"params": new_params, "opt": new_opt}
+
+
+def build_mlp_replica_spec(*, n_features: int = 16, n_hidden: int = 32,
+                           n_classes: int = 8, lr: float = 0.1,
+                           seed: int = 0):
+    """The primitive-op MLP of ``build_wire_train_step`` reshaped as a
+    ReplicaSpec: N data-parallel copies sharing (w1, w2)."""
+    import numpy as np
+
+    from ..distrib.replication import ReplicaSpec, ReplicaStep
+
+    rs = np.random.RandomState(seed)
+    init = {
+        "w1": jnp.asarray(rs.randn(n_features, n_hidden).astype("f") * 0.2),
+        "w2": jnp.asarray(rs.randn(n_hidden, n_classes).astype("f") * 0.2),
+    }
+
+    def build_replica(b, r, dev, var_inputs):
+        x = b.placeholder(f"rep{r}/x")
+        y = b.placeholder(f"rep{r}/y")
+        w1, w2 = var_inputs["w1"], var_inputs["w2"]
+        h = b.relu(b.matmul(x, w1, name=f"rep{r}/mm1", device=dev),
+                   name=f"rep{r}/h", device=dev)
+        logits = b.matmul(h, w2, name=f"rep{r}/logits", device=dev)
+        loss = b.softmax_xent(logits, y, name=f"rep{r}/loss")
+        g1, g2 = gradients(b.graph, [loss], [w1, w2])
+        return ReplicaStep(loss=loss.ref, grads={"w1": g1, "w2": g2},
+                           feeds={"x": x.ref, "y": y.ref})
+
+    def build_apply(b, var_nodes, mean_grads, dev):
+        lrc = b.constant(jnp.float32(lr), name="lr", device=dev)
+        a1 = b.assign(var_nodes["w1"], b.sub(
+            var_nodes["w1"], b.mul(lrc, mean_grads["w1"], name="upd1/scaled"),
+            name="upd1/new"))
+        a2 = b.assign(var_nodes["w2"], b.sub(
+            var_nodes["w2"], b.mul(lrc, mean_grads["w2"], name="upd2/scaled"),
+            name="upd2/new"))
+        return b.group([a1, a2], name="train_op")
+
+    return ReplicaSpec(var_names=("w1", "w2"), read_vars=("w1", "w2"),
+                       grad_vars=("w1", "w2"), feed_names=("x", "y"),
+                       init_values=init, build_replica=build_replica,
+                       build_apply=build_apply,
+                       apply_fn=functools.partial(_sgd_apply, lr))
+
+
+def build_lm_replica_spec(cfg: ModelConfig, shape: Shape, *, lr: float = 1e-2,
+                          hparam_overrides: Optional[Dict[str, Any]] = None,
+                          seed: int = 0):
+    """The factory-Call LM train step as a ReplicaSpec: each replica is
+    one ``lm_loss_factory`` Call plus its §4.1 backward extension, with
+    parameters shared (sync) or parameter-served (async)."""
+    from ..distrib.replication import ReplicaSpec, ReplicaStep
+
+    model = Model.for_config(cfg)
+    hp = step_hparams(cfg, shape, 1)
+    hp.update(hparam_overrides or {})
+    loss_kw = dict(q_chunk=hp["q_chunk"], loss_chunk=hp["loss_chunk"],
+                   compute_dtype=hp["compute_dtype"],
+                   scan_unroll=hp["scan_unroll"])
+    if not model.is_encdec:
+        loss_kw["n_token_groups"] = hp["n_token_groups"]
+    feed_names = tuple(model.batch_desc(shape))
+    params = init_params(model.describe_params(), jax.random.PRNGKey(seed))
+    init = {"params": params, "opt": adamw_init(params)}
+
+    def build_replica(b, r, dev, var_inputs):
+        feeds = {n: b.placeholder(f"rep{r}/{n}") for n in feed_names}
+        loss = b.call_factory(
+            LM_LOSS_FACTORY,
+            [var_inputs["params"]] + [feeds[n] for n in feed_names],
+            args=(cfg, 1, feed_names, loss_kw), name=f"rep{r}/loss",
+            device=dev)
+        (g,) = gradients(b.graph, [loss], [var_inputs["params"]])
+        return ReplicaStep(loss=loss.ref, grads={"params": g},
+                           feeds={n: feeds[n].ref for n in feed_names})
+
+    def build_apply(b, var_nodes, mean_grads, dev):
+        upd = b.call_factory(
+            LM_UPDATE_FACTORY,
+            [var_nodes["params"], mean_grads["params"], var_nodes["opt"]],
+            args=(lr,), name="adamw", n_out=2, device=dev)
+        a1 = b.assign(var_nodes["params"], upd.output(0))
+        a2 = b.assign(var_nodes["opt"], upd.output(1))
+        return b.group([a1, a2], name="train_op")
+
+    return ReplicaSpec(var_names=("params", "opt"), read_vars=("params",),
+                       grad_vars=("params",), feed_names=feed_names,
+                       init_values=init, build_replica=build_replica,
+                       build_apply=build_apply,
+                       apply_fn=functools.partial(_lm_apply, lr))
 
 
 def build_step(cfg: ModelConfig, shape_name: str, mesh=None, rules=None, **kw

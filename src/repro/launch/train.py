@@ -22,10 +22,12 @@ import numpy as np
 
 from ..checkpoint import CheckpointManager, FileCheckpointIO
 from ..configs import get_config
+from ..core.options import SessionOptions
 from ..data import SyntheticLMDataset, Prefetcher, batch_iterator
 from ..models.api import Shape
 from ..models.params import init_params, count_params
 from ..optim import adamw_init
+from .cli import add_cluster_options, add_engine_options
 from .steps import build_train_step, build_eager_train_step
 
 
@@ -34,7 +36,8 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
           log_every: int = 10, seed: int = 0,
           resume: bool = True, engine: str = "jit",
-          numerics: str = "fast") -> Dict[str, Any]:
+          numerics: str = "fast",
+          backend: Optional[str] = None) -> Dict[str, Any]:
     """``engine="jit"`` lowers the step graph and jits it (§10);
     ``engine="graph"`` drives the same graph through ``Session.run``, where
     the steady-state loop re-runs one cached Executable per step
@@ -51,7 +54,8 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
     if engine == "graph":
         eb = build_eager_train_step(cfg, shape, lr=lr,
                                     hparam_overrides=hparam_overrides,
-                                    numerics=numerics)
+                                    numerics=numerics,
+                                    options=SessionOptions(backend=backend))
         model, graph_nodes = eb.model, eb.graph_nodes
     else:
         sb = build_train_step(cfg, shape, lr=lr,
@@ -158,8 +162,8 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
     nothing can host the dead task, the whole-pool fallback remains:
     wait for the pool, restore the checkpoint, rebind, resume.
 
-    The LM Call-based steps stay single-process for now: their loss
-    closures cannot ship (ROADMAP: wire-shippable Call factories).
+    For data-parallel LM training over the pool (the §15 factory-Call
+    step stamped N times), see ``train_replicated`` / ``--replicas N``.
     """
     from ..core import Session
     from ..core.executor import ExecutorError
@@ -170,7 +174,8 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
     spec = ClusterSpec.parse(cluster)
     tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
     ws = build_wire_train_step(tasks, lr=lr, seed=seed)
-    sess = Session(ws.builder.graph, cluster=spec, standby=standby or ())
+    sess = Session(ws.builder.graph,
+                   options=SessionOptions(cluster=spec, standby=standby or ()))
     run = sess.make_callable([ws.loss, ws.train_op], [ws.feed_x, ws.feed_y])
     print(f"[train] cluster={','.join(spec.workers)} tasks={len(tasks)} "
           f"graph_nodes={len(ws.builder.graph.nodes)} (wire step)")
@@ -280,6 +285,85 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
             "executable_cache": sess.cache_stats}
 
 
+def train_replicated(cluster: Optional[str], *, arch: str = "smollm-360m",
+                     smoke: bool = True, replicas: int = 4,
+                     mode: str = "sync", steps: int = 30, batch: int = 8,
+                     seq: int = 64, lr: float = 1e-2, log_every: int = 5,
+                     seed: int = 0, numerics: str = "fast",
+                     backend: Optional[str] = None) -> Dict[str, Any]:
+    """§15 data-parallel LM training: the factory-Call train step stamped
+    ``replicas`` times over the ``--cluster`` pool by a ReplicaPlan.
+
+    ``mode="sync"`` runs one barrier step per iteration — every replica's
+    gradient flows through the per-Variable reduce tree (Send/Recv over
+    the wire) into a single averaged AdamW apply on the parameters' home
+    task.  ``mode="async"`` keeps the parameters master-side and drives
+    one thread per replica with interleaved applies and no barrier
+    (Downpour-style; bounded staleness ~ replicas).  ``cluster=None``
+    runs the same plan on in-process devices (testing/benchmarks).
+    """
+    from ..distrib.replication import ReplicaPlan
+    from .steps import build_lm_replica_spec
+
+    cfg = get_config(arch, smoke=smoke)
+    shape = Shape("custom", seq, batch, "train")
+    spec = build_lm_replica_spec(
+        cfg, shape, lr=lr, seed=seed,
+        hparam_overrides={"compute_dtype": jnp.float32,
+                          "loss_chunk": 0, "q_chunk": 0})
+    # parity_guard off: a whole fused train step (loss+grad+adamw+reduce)
+    # legitimately drifts past the per-op-class §9 tolerance, and the
+    # guard's strict fallback would serialize every step; --numerics
+    # strict restores bit-exact execution when that trade is wanted
+    plan = ReplicaPlan(spec, replicas, mode=mode, cluster=cluster,
+                       options=SessionOptions(numerics=numerics,
+                                              backend=backend,
+                                              parity_guard=False))
+    n_params = sum(np.asarray(x).size
+                   for x in jax.tree.leaves(spec.init_values["params"]))
+    print(f"[train] replicated arch={cfg.arch_id} replicas={replicas} "
+          f"mode={mode} cluster={cluster or 'in-process'} "
+          f"params={n_params/1e6:.1f}M batch={batch}x{seq} "
+          f"graph_nodes={len(plan.builder.graph.nodes)}")
+
+    def rep_batch(i: int, r: int) -> Dict[str, Any]:
+        rs = np.random.RandomState(seed * 1000003 + i * 131 + r)
+        return {"tokens": jnp.asarray(
+                    rs.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+                "labels": jnp.asarray(
+                    rs.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+
+    losses = []
+    t0 = time.time()
+    try:
+        if mode == "sync":
+            for i in range(steps):
+                shards = [rep_batch(i, r) for r in range(replicas)]
+                losses.append(float(plan.step(shards)))
+                if (i + 1) % log_every == 0:
+                    rate = ((i + 1) * replicas * batch * seq
+                            / (time.time() - t0))
+                    print(f"[train] step {i+1:5d} loss {losses[-1]:.4f} "
+                          f"({rate:,.0f} tok/s across {replicas} replicas)")
+        else:
+            def on_step(i, r, loss):
+                if (len(losses) + 1) % log_every == 0:
+                    rate = ((len(losses) + 1) * batch * seq
+                            / (time.time() - t0))
+                    print(f"[train] apply {len(losses)+1:5d} "
+                          f"(replica {r}) loss {loss:.4f} "
+                          f"({rate:,.0f} tok/s, interleaved)")
+                losses.append(loss)
+            plan.run_async(rep_batch, steps, on_step=on_step)
+    finally:
+        plan.close()
+    dt = time.time() - t0
+    n_batches = steps * (replicas if mode == "sync" else 1)
+    tok_s = n_batches * batch * seq / dt if dt > 0 else float("inf")
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "tok_per_s": tok_s, "mode": mode, "replicas": replicas}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -291,28 +375,17 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
-    ap.add_argument("--engine", choices=("jit", "graph"), default="jit",
-                    help="jit: lowered+jitted step; graph: eager Session.run "
-                         "through the cached Executable (DESIGN.md §5)")
-    ap.add_argument("--numerics", choices=("fast", "strict"), default="fast",
-                    help="graph-engine fused-region numerics (DESIGN.md §9): "
-                         "fast (default) compiles regions at full XLA "
-                         "optimization under the CI-enforced tolerance "
-                         "contract; strict restores fused==unfused "
-                         "bit-parity")
-    ap.add_argument("--cluster", default=None, metavar="HOST:PORT,...",
-                    help="run the wire-shippable train step across this "
-                         "worker pool (one `python -m repro.distrib.worker` "
-                         "process per endpoint; DESIGN.md §11) with §3.3 "
-                         "checkpointed recovery")
-    ap.add_argument("--standby", default=None, metavar="HOST:PORT,...",
-                    help="spare workers for §13 partial re-placement: a dead "
-                         "task's subgraph re-places onto the first free "
-                         "standby (survivors keep live state) before the "
-                         "whole-pool checkpoint restart is considered")
+    add_engine_options(ap)
+    add_cluster_options(ap, replication=True, standby=True)
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
-    if args.cluster:
+    if args.cluster and args.replicas > 1:
+        res = train_replicated(args.cluster, arch=args.arch, smoke=args.smoke,
+                               replicas=args.replicas, mode=args.mode,
+                               steps=args.steps, batch=args.batch,
+                               seq=args.seq, lr=args.lr,
+                               numerics=args.numerics, backend=args.backend)
+    elif args.cluster:
         res = train_cluster(args.cluster, steps=args.steps, batch=args.batch,
                             lr=args.lr, ckpt_dir=args.ckpt_dir,
                             ckpt_every=args.ckpt_every, standby=args.standby)
@@ -320,7 +393,8 @@ def main(argv=None) -> int:
         res = train(args.arch, smoke=args.smoke, steps=args.steps,
                     batch=args.batch, seq=args.seq, lr=args.lr,
                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                    engine=args.engine, numerics=args.numerics)
+                    engine=args.engine, numerics=args.numerics,
+                    backend=args.backend)
     print(f"[train] done: final loss {res['final_loss']:.4f}")
     return 0
 

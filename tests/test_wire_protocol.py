@@ -138,7 +138,8 @@ def test_gradient_graphs_ship(tmp_path):
 
 def test_closure_call_rejected_with_clear_error():
     captured = 3.0
-    with pytest.raises(ProtocolError, match="Call closures cannot ship"):
+    # the rejection must point at the §15 fix: ship a Call factory instead
+    with pytest.raises(ProtocolError, match="call_factory.*closures cannot ship"):
         pack_msg({"kind": "register_graph", "fn": lambda x: x * captured})
 
 
