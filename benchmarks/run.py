@@ -720,5 +720,54 @@ def bench_continuous_batching():
 BENCHES.append(bench_continuous_batching)
 
 
+def bench_trace_overhead():
+    """§16 distributed EEG: steps/s with tracing off vs on.
+
+    The off row is the headline — SessionOptions(trace_dir=None) must be
+    indistinguishable from pre-§16 builds, because every instrumentation
+    site reduces to one ``is None`` check.  The bench also asserts the
+    structural half of that claim: an untraced run records zero events
+    into any recorder (no buffer even exists to fill)."""
+    from repro.core import GraphBuilder, Session
+    from repro.core.options import SessionOptions
+    from repro.obs import spans as spans_mod
+
+    def build():
+        b = GraphBuilder()
+        x = b.constant(jnp.ones((8, 8)), name="x")
+        cur = x
+        for i in range(64):
+            cur = b.add(cur, x, name=f"a{i}")
+        return b, cur
+
+    spans_mod.install(None)
+    b_off, cur_off = build()
+    sess_off = Session(b_off.graph)
+    b_on, cur_on = build()
+    sess_on = Session(b_on.graph, options=SessionOptions(trace_dir="/tmp/b15"))
+    # warm BOTH before timing either: the second session to compile the
+    # (identical) fused region hits jax's compile cache, and timing it
+    # cold-vs-warm would swamp the instrumentation cost being measured
+    for _ in range(3):
+        sess_off.run(cur_off.ref)
+        sess_on.run(cur_on.ref)
+
+    us_off = _timeit(lambda: sess_off.run(cur_off.ref))
+    assert sess_off._spans is None and spans_mod.get() is sess_on._spans, \
+        "trace-off session must not own a span recorder"
+    us_on = _timeit(lambda: sess_on.run(cur_on.ref))
+    n_events = len(sess_on._spans)
+    spans_mod.install(None)
+    sess_off.close()
+    sess_on.close()
+    assert n_events > 0, "traced run recorded nothing"
+
+    emit("b15_trace_off", us_off, f"traced={us_on:.2f}us,"
+         f"overhead={us_on / us_off - 1.0:+.1%},events={n_events}")
+
+
+BENCHES.append(bench_trace_overhead)
+
+
 if __name__ == "__main__":
     main()

@@ -26,6 +26,7 @@ from .common import AnalysisContext
 from .diagnostics import (Diagnostic, GraphVerifyWarning, VerifyReport,
                           apply_suppressions, internal_failure, make)
 from ..core.graph import Graph, GraphError
+from ..obs.metrics import StatsDict
 
 # (name, pass fn) — shapes runs before sendrecv so the rendezvous
 # consistency check (C205) sees the inferred Send payload specs
@@ -38,8 +39,9 @@ PASSES = (
 )
 
 # pass-invocation counters: tests assert an Executable cache hit bumps
-# nothing here (same pattern as placement/partition/scheduler STATS)
-STATS: Dict[str, int] = {"verify_calls": 0, "wire_verify_calls": 0}
+# nothing here (same pattern as placement/partition/scheduler STATS);
+# registry-backed since §16.4 (verifier.* counters)
+STATS = StatsDict("verifier", keys=("verify_calls", "wire_verify_calls"))
 for _name, _fn in PASSES:
     STATS[_name] = 0
 

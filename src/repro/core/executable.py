@@ -390,30 +390,41 @@ class Executable:
     # ------------------------------------------------------------------
     def run(self, feeds: Optional[Dict[TensorRef, Any]] = None, *,
             trace: Optional[List[str]] = None, tracer: Any = None,
-            timeout: float = 60.0) -> List[Any]:
+            spans: Any = None, timeout: float = 60.0) -> List[Any]:
         feeds = feeds or {}
         if frozenset(feeds) != self.feed_keys:
             raise ExecutorError(
                 f"feed keys {sorted(map(str, feeds))} do not match the keys this "
                 f"Executable was compiled for {sorted(map(str, self.feed_keys))}")
+        # Session(trace_dir=) turns on the §16 span stream for every run of
+        # this session, including make_callable paths that pass no kwargs.
+        # Unlike trace=/tracer= it is NOT part of the run signature: spans
+        # observe the compiled artifact without changing it.
+        if spans is None:
+            spans = getattr(self.session, "_spans", None)
         if self.wire_plan is not None:
             # DESIGN.md §11: multi-process execution over the wire
-            # rendezvous; per-kernel tracing needs the in-process engine
+            # rendezvous; the legacy per-kernel tracer needs the in-process
+            # engine, but the §16 span stream traces cluster runs natively
             if tracer is not None or trace is not None:
                 raise ExecutorError(
                     "trace=/tracer= are not supported for cluster execution "
-                    "(run without cluster= for per-kernel EEG tracing)")
+                    "(use Session(trace_dir=) / REPRO_TRACE for the "
+                    "distributed EEG, or run without cluster= for legacy "
+                    "per-kernel tracing)")
             if self._strict_fallback:
                 # §13 breach demotion: route through the strict wire plan
                 # (same partition, strict numerics worker-side) — NOT the
                 # local unfused pipeline, which would run against stale
                 # master-side Variable state
-                return self._wire_strict_plan().run(feeds, timeout=timeout)
+                return self._wire_strict_plan().run(feeds, timeout=timeout,
+                                                    spans=spans)
             if self._parity_pending:
-                return self._guarded_wire_run(feeds, timeout)
+                return self._guarded_wire_run(feeds, timeout, spans=spans)
             if self._sample_due():
-                return self._guarded_wire_run(feeds, timeout, sampled=True)
-            return self.wire_plan.run(feeds, timeout=timeout)
+                return self._guarded_wire_run(feeds, timeout, sampled=True,
+                                              spans=spans)
+            return self.wire_plan.run(feeds, timeout=timeout, spans=spans)
         if tracer is not None and self.fusion is not None:
             # per-kernel tracing: run the faithful unfused interpretation
             # (fused kernels are opaque blobs to an EEG-style tracer)
@@ -424,13 +435,14 @@ class Executable:
             # unfused pipeline IS strict execution, bit-identical to the
             # pre-fusion engine
             return self._run_unfused(feeds, trace=trace, tracer=tracer,
-                                     timeout=timeout)
+                                     spans=spans, timeout=timeout)
         if self._parity_pending:
-            return self._guarded_run(feeds, trace, tracer, timeout)
+            return self._guarded_run(feeds, trace, tracer, timeout,
+                                     spans=spans)
         if self._sample_due():
             return self._guarded_run(feeds, trace, tracer, timeout,
-                                     sampled=True)
-        return self._dispatch(feeds, trace=trace, tracer=tracer,
+                                     sampled=True, spans=spans)
+        return self._dispatch(feeds, trace=trace, tracer=tracer, spans=spans,
                               timeout=timeout)
 
     def _sample_due(self) -> bool:
@@ -444,32 +456,34 @@ class Executable:
 
     def _dispatch(self, feeds: Dict[TensorRef, Any], *,
                   trace: Optional[List[str]], tracer: Any,
-                  timeout: float) -> List[Any]:
+                  timeout: float, spans: Any = None) -> List[Any]:
         """The prepared (possibly fused) pipeline, no guard logic."""
         if self.multi_device:
             return self._run_multi(feeds, trace=trace, tracer=tracer,
-                                   timeout=timeout)
+                                   spans=spans, timeout=timeout)
         fetches = [self._fetch_remap.get(r, r) for r in self.fetches]
         return self.executor.run(fetches, feeds, ctx=self.session._ctx(),
-                                 trace=trace, tracer=tracer)
+                                 trace=trace, tracer=tracer, spans=spans)
 
     def _run_unfused(self, feeds: Dict[TensorRef, Any], *,
                      trace: Optional[List[str]], tracer: Any,
-                     timeout: float) -> List[Any]:
+                     timeout: float, spans: Any = None) -> List[Any]:
         """The lazily-built unfused pipeline: per-kernel tracing, the
         parity-guard reference, and the post-breach strict fallback."""
         if self.multi_device:
             execs, fetch_by_dev = self._unfused_pipeline()
             return self._run_multi(
-                feeds, trace=trace, tracer=tracer, timeout=timeout,
-                executors=execs, fetch_by_dev=fetch_by_dev, remap=False)
+                feeds, trace=trace, tracer=tracer, spans=spans,
+                timeout=timeout, executors=execs, fetch_by_dev=fetch_by_dev,
+                remap=False)
         executor, _ = self._unfused_pipeline()
         return executor.run(self.fetches, feeds, ctx=self.session._ctx(),
-                            trace=trace, tracer=tracer)
+                            trace=trace, tracer=tracer, spans=spans)
 
     def _guarded_run(self, feeds: Dict[TensorRef, Any],
                      trace: Optional[List[str]], tracer: Any,
-                     timeout: float, *, sampled: bool = False) -> List[Any]:
+                     timeout: float, *, sampled: bool = False,
+                     spans: Any = None) -> List[Any]:
         """Verified run of a fast-numerics Executable (the first run, and
         with guard sampling every Nth thereafter): execute the unfused-
         strict reference AND the fused-fast pipeline on the same feeds
@@ -483,9 +497,10 @@ class Executable:
                 # raced with another first run
                 if self._strict_fallback:
                     return self._run_unfused(feeds, trace=trace,
-                                             tracer=tracer, timeout=timeout)
+                                             tracer=tracer, spans=spans,
+                                             timeout=timeout)
                 return self._dispatch(feeds, trace=trace, tracer=tracer,
-                                      timeout=timeout)
+                                      spans=spans, timeout=timeout)
             from . import numerics as numerics_mod
 
             store = self.session.variables
@@ -500,7 +515,7 @@ class Executable:
             for n, v in snap.items():
                 store.write(n, v)
             got = self._dispatch(feeds, trace=trace, tracer=tracer,
-                                 timeout=timeout)
+                                 spans=spans, timeout=timeout)
             got_vars = {n: store.read(n, g.nodes[n].attrs)
                         for n in self._guard_vars}
             # elementwise either-criterion (compare), NOT an aggregate
@@ -549,7 +564,8 @@ class Executable:
             return self._wire_strict
 
     def _guarded_wire_run(self, feeds: Dict[TensorRef, Any],
-                          timeout: float, *, sampled: bool = False) -> List[Any]:
+                          timeout: float, *, sampled: bool = False,
+                          spans: Any = None) -> List[Any]:
         """The §9 parity guard, distributed (§13): Variable state lives in
         the worker processes, so the snapshot/rewind rides
         ``get_variables``/``set_variables`` and the strict reference is a
@@ -562,8 +578,9 @@ class Executable:
             if not sampled and not self._parity_pending:
                 # raced with another first run
                 if self._strict_fallback:
-                    return self._wire_strict_plan().run(feeds, timeout=timeout)
-                return self.wire_plan.run(feeds, timeout=timeout)
+                    return self._wire_strict_plan().run(feeds, timeout=timeout,
+                                                        spans=spans)
+                return self.wire_plan.run(feeds, timeout=timeout, spans=spans)
             from . import numerics as numerics_mod
 
             plan = self.wire_plan
@@ -577,7 +594,7 @@ class Executable:
             ref = strict.run(feeds, timeout=timeout)
             ref_vars = plan.snapshot_variables(self._guard_vars)
             plan.restore_variables(snap)
-            got = plan.run(feeds, timeout=timeout)
+            got = plan.run(feeds, timeout=timeout, spans=spans)
             got_vars = plan.snapshot_variables(self._guard_vars)
             names = sorted(set(ref_vars) & set(got_vars))
             ok, drift = numerics_mod.compare(
@@ -654,7 +671,9 @@ class Executable:
                    timeout: float,
                    executors: Optional[Dict[str, Executor]] = None,
                    fetch_by_dev: Optional[Dict[str, List[int]]] = None,
-                   remap: bool = True) -> List[Any]:
+                   remap: bool = True, spans: Any = None) -> List[Any]:
+        from ..obs import metrics as metrics_mod
+
         session = self.session
         executors = executors if executors is not None else self.device_executors
         fetch_by_dev = (fetch_by_dev if fetch_by_dev is not None
@@ -666,7 +685,14 @@ class Executable:
         errors: List[BaseException] = []
         lock = threading.Lock()
 
+        def mark_progress(dev_name: str) -> None:
+            # §16.4 last-progress gauge: a hung run's report reads this to
+            # say how long each stuck device has been silent
+            metrics_mod.gauge(
+                f"exec.device.{dev_name}.last_progress_ts").set(time.time())
+
         def worker(dev_name: str, executor: Executor) -> None:
+            mark_progress(dev_name)
             ctx = ExecutionContext(
                 variables=session.variables,
                 rendezvous=run_rdv,
@@ -684,7 +710,8 @@ class Executable:
                 local_fetches = [self.fetches[i] for i in idxs]
             try:
                 vals = executor.run(local_fetches, feeds, ctx=ctx,
-                                    trace=local_trace, tracer=tracer)
+                                    trace=local_trace, tracer=tracer,
+                                    spans=spans)
                 with lock:
                     for i, v in zip(idxs, vals):
                         results[i] = v
@@ -693,6 +720,8 @@ class Executable:
             except BaseException as e:  # noqa: BLE001 — §3.3: surface any worker failure
                 with lock:
                     errors.append(e)
+            finally:
+                mark_progress(dev_name)
 
         threads = {
             dev: threading.Thread(target=worker, args=(dev, ex), daemon=True)
@@ -712,10 +741,21 @@ class Executable:
             # §3.3: name the owning worker *process*, not just the virtual
             # device — multi-process hangs are diagnosed by which OS
             # process holds the stuck executor (distrib workers report
-            # their task/pid the same way; DESIGN.md §11)
+            # their task/pid the same way; DESIGN.md §11).  Each stuck
+            # device also reports its last-progress timestamp from the
+            # metrics registry (§16.4) so the report distinguishes
+            # never-started from wedged-mid-run.
+            now = time.time()
+
+            def _age(dev: str) -> str:
+                ts = metrics_mod.gauge(
+                    f"exec.device.{dev}.last_progress_ts").value
+                return f"{now - ts:.1f}s ago" if ts else "never"
+
             ident = ", ".join(
                 f"{dev} (in-process worker thread {threads[dev].name!r}, "
-                f"pid {os.getpid()})" for dev in stuck)
+                f"pid {os.getpid()}, last progress {_age(dev)})"
+                for dev in stuck)
             raise ExecutorError(
                 f"graph execution timed out after {timeout:.1f}s: worker(s) for "
                 f"{ident} never finished (stuck Send/Recv or a hung "

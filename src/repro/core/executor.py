@@ -13,12 +13,14 @@ flight; dead tensors propagate through untaken branches, and dead
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Node, TensorRef
 from . import ops as ops_mod
 from . import control_flow as cf_mod
+from ..obs import spans as spans_mod
 from ..runtime.rendezvous import DEAD_TENSOR
 
 # A frame context: tuple of (frame_name, iteration) pairs; () is the root.
@@ -157,12 +159,14 @@ class Executor:
                  node_filter: Optional[Set[str]] = None,
                  trace: Optional[List[str]] = None,
                  tracer: Any = None,
+                 spans: Optional[spans_mod.SpanRecorder] = None,
                  device_label: str = "/job:localhost/device:cpu:0") -> None:
         self.graph = graph
         self.ctx = ctx
         self.names = set(node_filter) if node_filter is not None else set(graph.nodes)
         self.trace = trace  # records execution order for tests
         self.tracer = tracer  # §9.2 EEG-style fine-grained tracing
+        self.spans = spans  # §16 distributed EEG span stream
         self.device_label = device_label
 
         # static consumer index restricted to the executed node set
@@ -183,7 +187,8 @@ class Executor:
             feeds: Optional[Dict[TensorRef, Any]] = None, *,
             ctx: Optional[ExecutionContext] = None,
             trace: Optional[List[str]] = None,
-            tracer: Any = None) -> List[Any]:
+            tracer: Any = None,
+            spans: Optional[spans_mod.SpanRecorder] = None) -> List[Any]:
         feeds = feeds or {}
         g = self.graph
         root: FrameCtx = ()
@@ -192,6 +197,7 @@ class Executor:
         run_ctx = ctx if ctx is not None else self.ctx
         trace = trace if trace is not None else self.trace
         tracer = tracer if tracer is not None else self.tracer
+        spans = spans if spans is not None else self.spans
         if run_ctx is None:
             raise ExecutorError("Executor.run needs an ExecutionContext "
                                 "(pass ctx= or construct with one)")
@@ -368,7 +374,18 @@ class Executor:
                 pending_keys = [wire_key(node, ctx)] + [
                     wire_key(g.nodes[n], c)
                     for (n, c) in ready if g.nodes[n].op == "Recv"]
+                observing = tracer is not None or spans is not None
+                t_wait = time.time() if observing else None
                 run_ctx.rendezvous.wait_any(pending_keys)
+                if observing:
+                    t_wend = time.time()
+                    if spans is not None:
+                        spans.record(name, spans_mod.CAT_WAIT,
+                                     self.device_label, t_wait, t_wend,
+                                     args={"keys": len(pending_keys)})
+                    rw = getattr(tracer, "record_wait", None)
+                    if rw is not None:
+                        rw(name, self.device_label, t_wait, t_wend, ctx)
                 if not run_ctx.rendezvous.ready(wire_key(node, ctx)):
                     deferred = 0  # progress was made elsewhere; re-rotate
                     ready.append(key)
@@ -460,7 +477,8 @@ class Executor:
                     run_ctx.rendezvous.send(wkey, DEAD_TENSOR)
                 else:
                     v = ins[0]
-                    t_start = tracer.now() if tracer is not None else None
+                    observing = tracer is not None or spans is not None
+                    t_start = time.time() if observing else None
                     if node.attrs.get("compress", False):
                         from . import compression
 
@@ -468,12 +486,33 @@ class Executor:
                     run_ctx.rendezvous.send(wkey, v)
                     if tracer is not None:
                         tracer.record(name, node.op, self.device_label,
-                                      t_start, tracer.now(), ctx)
+                                      t_start, time.time(), ctx)
+                    elif spans is not None:
+                        spans.record(name, spans_mod.CAT_OP,
+                                     self.device_label, t_start, time.time(),
+                                     args={"op": "Send"})
                 deliver_control(name, octx)
                 continue
             if node.op == "Recv":
-                t_start = tracer.now() if tracer is not None else None
-                v = run_ctx.rendezvous.recv(wire_key(node, ctx))
+                wkey = wire_key(node, ctx)
+                observing = tracer is not None or spans is not None
+                # Wait/compute split (§16.2): if the tensor is not already
+                # sitting in the rendezvous, everything recv blocks on is
+                # *stall* — attribute it to the rendezvous lane rather than
+                # letting it inflate Recv "compute" time.
+                t_start = time.time() if observing else None
+                was_ready = (not observing
+                             or run_ctx.rendezvous.ready(wkey))
+                v = run_ctx.rendezvous.recv(wkey)
+                t_recv = time.time() if observing else None
+                if observing and not was_ready:
+                    if spans is not None:
+                        spans.record(name, spans_mod.CAT_WAIT,
+                                     self.device_label, t_start, t_recv,
+                                     args={"key": wkey})
+                    rw = getattr(tracer, "record_wait", None)
+                    if rw is not None:
+                        rw(name, self.device_label, t_start, t_recv, ctx)
                 if v is DEAD_TENSOR or any_dead:
                     # dead over the wire, or a dead iteration token (the
                     # loop's terminating iteration — the matching Send
@@ -488,7 +527,12 @@ class Executor:
                     deliver(name, 0, octx, v)
                     if tracer is not None:
                         tracer.record(name, node.op, self.device_label,
-                                      t_start, tracer.now(), ctx)
+                                      t_start, time.time(), ctx)
+                    elif spans is not None:
+                        spans.record(name, spans_mod.CAT_OP,
+                                     self.device_label, t_start, time.time(),
+                                     args={"op": "Recv",
+                                           "waited": not was_ready})
                 deliver_control(name, octx)
                 continue
 
@@ -512,6 +556,36 @@ class Executor:
                     outs = run_kernel(run_ctx, node, ins)
                     tracer.record(name, node.op, self.device_label,
                                   t_start, tracer.now(), ctx)
+            elif spans is not None:
+                # §16 span path: a FusedRegion stays ONE span over the real
+                # jitted dispatch (never demoted to per-member
+                # interpretation like the legacy tracer), annotated with
+                # its member count and any registered-kernel dispatches the
+                # call triggered (non-empty only on the compiling run —
+                # dispatch accounting is trace-time, DESIGN.md §12).
+                if node.op == "FusedRegion":
+                    from . import kernel_registry
+
+                    spec = node.attrs["spec"]
+                    before = kernel_registry.dispatch_counts(spec.backend)
+                    t_start = time.time()
+                    outs = run_kernel(run_ctx, node, ins)
+                    t_end = time.time()
+                    after = kernel_registry.dispatch_counts(spec.backend)
+                    args: Dict[str, Any] = {"members": len(spec.members),
+                                            "backend": spec.backend}
+                    delta = {k: after[k] - before.get(k, 0)
+                             for k in after if after[k] != before.get(k, 0)}
+                    if delta:
+                        args["kernels"] = delta
+                    spans.record(name, spans_mod.CAT_REGION,
+                                 self.device_label, t_start, t_end, args=args)
+                else:
+                    t_start = time.time()
+                    outs = run_kernel(run_ctx, node, ins)
+                    spans.record(name, spans_mod.CAT_OP, self.device_label,
+                                 t_start, time.time(),
+                                 args={"op": node.op})
             else:
                 outs = run_kernel(run_ctx, node, ins)
             for p, v in enumerate(outs):

@@ -53,6 +53,7 @@ from .graph import Graph, GraphError, Node, TensorRef
 from . import control_flow as cf_mod
 from . import cse as cse_mod
 from . import ops as ops_mod
+from ..obs.metrics import StatsDict
 
 CF_PRIMITIVES = {"Switch", "Merge", "Enter", "Exit", "NextIteration", "LoopCond"}
 RUNTIME_ONLY = {"Send", "Recv", "Save", "Restore", "QueueEnqueue",
@@ -72,10 +73,11 @@ FUSIBLE_STATEFUL = {"Variable", "Assign", "AssignAdd"}
 STRICT_UNFUSIBLE = {"MatMul", "Call", "ReduceSum", "ReduceMean",
                     "SoftMax", "SoftmaxXent", "SSDScan"}
 
-# pass-invocation counters (see placement.STATS; DESIGN.md §5/§7)
-STATS = {"fuse_calls": 0, "regions_built": 0, "nodes_fused": 0,
-         "consts_folded": 0, "nodes_pruned": 0, "cse_merged": 0,
-         "fallbacks": 0}
+# pass-invocation counters (see placement.STATS; DESIGN.md §5/§7),
+# registry-backed since §16.4 — also visible as fusion.* counters
+STATS = StatsDict("fusion", keys=(
+    "fuse_calls", "regions_built", "nodes_fused",
+    "consts_folded", "nodes_pruned", "cse_merged", "fallbacks"))
 
 
 def REGION_CACHE_SIZE() -> int:

@@ -31,6 +31,7 @@ import numpy as np
 
 from . import ops as ops_mod
 from .graph import Graph, Node, TensorRef
+from ..obs.metrics import StatsDict
 
 
 class BackendError(ValueError):
@@ -124,7 +125,10 @@ def available_backends() -> List[str]:
 
 _LOCK = threading.Lock()
 DISPATCH: Dict[Tuple[str, str], int] = {}
-STATS = {"planned": 0, "matched": 0, "dispatched": 0, "fallbacks": 0}
+# registry-backed (§16.4): same dict surface as before, but every count
+# is also a ``kernel_registry.*`` counter in repro.obs.metrics.REGISTRY
+STATS = StatsDict("kernel_registry",
+                  keys=("planned", "matched", "dispatched", "fallbacks"))
 
 
 def _bump_dispatch(backend: str, kernel: str) -> None:

@@ -20,17 +20,21 @@ Env-backed fields and their variables:
   ``numerics``     ``REPRO_FUSE_NUMERICS``  ``"strict"``
   ``parity_guard`` ``REPRO_NUMERICS_GUARD`` ``"1"``
   ``backend``      ``REPRO_KERNEL_BACKEND`` ``"generic"``
+  ``trace_dir``    ``REPRO_TRACE``        ``None``
   ===============  =====================  ============
 
-The sixth ``REPRO_*`` variable pair stays *process*-scoped by design and
-is therefore not a Session option: ``REPRO_REGION_CACHE`` (fusion's
+Two further ``REPRO_*`` variables stay *process*-scoped by design and
+are therefore not Session options: ``REPRO_REGION_CACHE`` (fusion's
 on-disk region cache, repro.core.fusion) and ``REPRO_FAULTS`` (worker
 fault injection, repro.distrib.faults) configure a process, not a
 session.
 
 ``RunSignature.for_session`` derives every options-dependent component of
 the Executable cache key from the resolved options object in one place —
-flipping any field above can never reuse a stale Executable.
+flipping any field above can never reuse a stale Executable.  The one
+deliberate exception is ``trace_dir``: tracing observes the compiled
+artifact rather than changing it (DESIGN.md §16), so it is NOT part of
+the cache key — turning the EEG on never forces a rebuild.
 """
 from __future__ import annotations
 
@@ -81,6 +85,7 @@ class SessionOptions:
     numerics: Optional[str] = None
     parity_guard: Any = None
     backend: Optional[str] = None
+    trace_dir: Optional[str] = None
     cluster: Any = None
     standby: Any = ()
     devices: Any = None
@@ -121,6 +126,12 @@ class SessionOptions:
 
         kernel_registry.get_backend(backend)  # raises ValueError if unknown
 
+        trace_dir = self.trace_dir
+        if trace_dir is None:
+            trace_dir = os.environ.get("REPRO_TRACE") or None
+        if trace_dir is not None:
+            trace_dir = str(trace_dir)
+
         standby = self.standby
         if isinstance(standby, str):
             standby = tuple(s.strip() for s in standby.split(",") if s.strip())
@@ -129,7 +140,8 @@ class SessionOptions:
 
         return dataclasses.replace(
             self, verify=verify, fuse_regions=fuse_regions, numerics=numerics,
-            parity_guard=parity_guard, backend=backend, standby=standby)
+            parity_guard=parity_guard, backend=backend, trace_dir=trace_dir,
+            standby=standby)
 
     @property
     def parity_guard_policy(self) -> Tuple[bool, Optional[int]]:

@@ -32,11 +32,13 @@ from typing import Dict, List, Set, Tuple
 
 from .graph import Graph, GraphError, TensorRef
 from . import control_flow as cf_mod
+from ..obs.metrics import StatsDict
 from ..runtime import rendezvous as rdv
 
 
-# pass-invocation counter (see placement.STATS; DESIGN.md §5)
-STATS = {"partition_calls": 0, "frames_replicated": 0}
+# pass-invocation counter (see placement.STATS; DESIGN.md §5),
+# registry-backed since §16.4
+STATS = StatsDict("partition", keys=("partition_calls", "frames_replicated"))
 
 
 @dataclasses.dataclass

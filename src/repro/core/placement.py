@@ -22,6 +22,7 @@ import numpy as np
 
 from .graph import Graph, Node, TensorRef
 from . import ops as ops_mod
+from ..obs.metrics import StatsDict
 from ..runtime.devices import DeviceSet
 
 WIRE_LATENCY_S = 25e-6  # per cross-device hop
@@ -29,8 +30,8 @@ WIRE_BYTES_PER_S = 12.5e9  # ~100 Gb/s interconnect
 
 # pass-invocation counter: the Executable cache's contract is that this
 # pass runs once per run *signature*, not once per Session.run — tests and
-# benchmarks assert on it (DESIGN.md §5).
-STATS = {"place_calls": 0}
+# benchmarks assert on it (DESIGN.md §5).  Registry-backed since §16.4.
+STATS = StatsDict("placement", keys=("place_calls",))
 
 
 @dataclasses.dataclass

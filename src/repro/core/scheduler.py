@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Set
 from .graph import Graph, Node, TensorRef
 from .placement import CostModel
 from . import control_flow as cf_mod
+from ..obs.metrics import StatsDict
 from ..runtime.devices import DeviceSet
 
 
@@ -56,8 +57,9 @@ def _times(g: Graph, names: Set[str], cm: CostModel, devices, placement):
     return asap, alap
 
 
-# pass-invocation counter (see placement.STATS; DESIGN.md §5)
-STATS = {"schedule_calls": 0}
+# pass-invocation counter (see placement.STATS; DESIGN.md §5),
+# registry-backed since §16.4
+STATS = StatsDict("scheduler", keys=("schedule_calls",))
 
 
 def schedule_recvs(

@@ -154,6 +154,20 @@ class Session:
         # compile-once/run-many: RunSignature -> Executable (DESIGN.md §5);
         # max_cached_executables=0 disables caching (benchmark baseline).
         self._executables = ExecutableCache(maxsize=opts.max_cached_executables)
+        # §16 distributed EEG: trace_dir turns on the span stream for every
+        # run of this session (including make_callable, which passes no
+        # per-call kwargs — Executable.run consults self._spans).  The
+        # recorder is installed process-globally too, so the RPC client
+        # layer records wire calls.  trace_dir unset => self._spans is
+        # None and every instrumentation site stays a single None check.
+        self.trace_dir = opts.trace_dir
+        self._spans = None
+        self._trace_exported = False
+        if self.trace_dir:
+            from ..obs import spans as spans_mod
+
+            self._spans = spans_mod.install(
+                spans_mod.SpanRecorder(process="master"))
 
     # ------------------------------------------------------------------
     # -- mirrored option attrs --------------------------------------------
@@ -326,8 +340,37 @@ class Session:
                 seen |= set(plan.var_owner)
         return out
 
+    def export_trace(self, path: Optional[str] = None) -> Optional[str]:
+        """Write the merged Chrome-trace JSON (§16.3): the local span
+        stream plus, for cluster sessions, every worker's buffered events
+        (shipped on ``run_graph`` replies and drained via the
+        ``collect_trace`` RPC), aligned by the master's per-task
+        clock-offset estimates.  Returns the path written, or None when
+        the session was not constructed with ``trace_dir=``."""
+        if self._spans is None:
+            return None
+        import os
+
+        from ..obs import export as export_mod
+
+        streams = [{"process": "master", "offset_s": 0.0,
+                    "events": self._spans.snapshot()}]
+        if self.cluster is not None and self._master is not None:
+            streams.extend(self._master.collect_trace_streams())
+        path = path or os.path.join(self.trace_dir, "trace.json")
+        export_mod.write_trace(path, streams)
+        self._trace_exported = True
+        return path
+
     def close(self) -> None:
-        """Stop heartbeat threads / close worker channels (cluster sessions)."""
+        """Stop heartbeat threads / close worker channels (cluster sessions).
+        A pending ``trace_dir=`` trace is flushed first (best-effort: an
+        export failure must never mask shutdown)."""
+        if self._spans is not None and not self._trace_exported:
+            try:
+                self.export_trace()
+            except Exception:
+                pass
         if self._master is not None:
             self._master.stop()
             self._master = None

@@ -35,6 +35,8 @@ from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core.executor import ExecutorError
 from ..core.graph import Graph, TensorRef
+from ..obs import metrics as obs_metrics
+from ..obs import spans as obs_spans
 from .protocol import Channel, WorkerError
 from .wire import ClusterSpec
 
@@ -96,6 +98,14 @@ class Master:
         self.plans: List["weakref.ref[WirePlan]"] = []
         self._info: Dict[int, Dict[str, Any]] = {}
         self._misses: Dict[int, int] = {}
+        # §16.3 per-task clock estimate: task -> (rtt_s, offset_s) for the
+        # minimum-RTT heartbeat seen so far.  offset = worker_clock -
+        # master_clock; the tighter the RTT, the tighter the midpoint
+        # assumption, so we keep the best sample rather than an average.
+        self._clock: Dict[int, Tuple[float, float]] = {}
+        # §16.2 spans shipped back on run_graph replies, keyed by task,
+        # drained by collect_trace_streams() at export time
+        self.worker_spans: Dict[int, List[Dict[str, Any]]] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._hb_thread: Optional[threading.Thread] = None
@@ -152,18 +162,79 @@ class Master:
                     # _attempts=1: this loop IS the retry — the channel's
                     # idempotent-RPC backoff would mask individual probe
                     # failures and make miss counting dishonest
+                    t_send = time.time()
                     rep = ch.call("heartbeat", _attempts=1,
                                   _timeout=max(1.0, self.heartbeat_interval * 4))
+                    t_recv = time.time()
+                    obs_metrics.counter("distrib.heartbeats").inc()
                     with self._lock:
                         self._info[task] = rep
                         self._misses[task] = 0
+                        if "clock" in rep:
+                            self._note_clock(task, rep["clock"], t_send, t_recv)
                 except Exception as e:  # noqa: BLE001 — count, then condemn
+                    obs_metrics.counter("distrib.heartbeat_misses").inc()
                     with self._lock:
                         self._misses[task] = self._misses.get(task, 0) + 1
                         if self._misses[task] >= self.heartbeat_misses:
+                            if task not in self.dead:
+                                obs_metrics.counter(
+                                    "distrib.workers_condemned").inc()
                             self.dead.setdefault(
                                 task, f"{self._misses[task]} consecutive "
                                       f"heartbeats failed ({type(e).__name__}: {e})")
+
+    def _note_clock(self, task: int, worker_clock: float,
+                    t_send: float, t_recv: float) -> None:
+        """§16.3 NTP-style offset sample (caller holds ``_lock``): assume
+        the worker read its clock at the RPC's midpoint, so ``offset =
+        worker_clock - (t_send + t_recv) / 2`` with error bounded by
+        RTT/2.  Keep the minimum-RTT sample — a GC pause or a loaded
+        accept loop inflates RTT and with it the error bound, so the
+        tightest bracket ever seen beats any smoothing of looser ones."""
+        rtt = t_recv - t_send
+        offset = worker_clock - (t_send + t_recv) / 2.0
+        best = self._clock.get(task)
+        if best is None or rtt < best[0]:
+            self._clock[task] = (rtt, offset)
+
+    def clock_offset(self, task: int) -> float:
+        """Estimated ``worker_clock - master_clock`` seconds for ``task``
+        (0.0 before any heartbeat completed — merge degrades to trusting
+        raw timestamps rather than failing the export)."""
+        with self._lock:
+            est = self._clock.get(task)
+        return est[1] if est else 0.0
+
+    def stash_worker_spans(self, task: int,
+                           events: List[Dict[str, Any]]) -> None:
+        if events:
+            with self._lock:
+                self.worker_spans.setdefault(task, []).extend(events)
+
+    def collect_trace_streams(self) -> List[Dict[str, Any]]:
+        """§16.2 gather every worker's spans into export-ready streams:
+        the run_graph-shipped buffers stashed here, plus a best-effort
+        ``collect_trace`` drain of each live worker's process-level
+        buffer (server-side RPC spans).  Dead workers contribute whatever
+        their replies shipped before they died."""
+        with self._lock:
+            stashed = {t: evs for t, evs in self.worker_spans.items()}
+            self.worker_spans = {}
+        for task in range(len(self.cluster.workers)):
+            if task in self.dead:
+                continue
+            try:
+                rep = self.channels[task].call("collect_trace", _timeout=10.0)
+                evs = rep.get("events") or []
+                if evs:
+                    stashed.setdefault(task, []).extend(evs)
+            except Exception:  # noqa: BLE001 — diagnostics must not kill export
+                pass
+        return [{"process": f"worker-task{task}",
+                 "offset_s": self.clock_offset(task),
+                 "events": events}
+                for task, events in sorted(stashed.items()) if events]
 
     def live_plans(self) -> List["WirePlan"]:
         out, refs = [], []
@@ -201,6 +272,7 @@ class Master:
         registrations stay valid; the caller re-registers only the
         replaced task (``WirePlan.reregister_task``) and patches
         survivors' specs (``WirePlan.update_survivors``)."""
+        obs_metrics.counter("distrib.tasks_replaced").inc()
         old = self.channels.pop(task, None)
         if old is not None:
             old.close()
@@ -463,9 +535,10 @@ class WirePlan:
                 "set_variables", _timeout=30.0,
                 namespace=self.namespace, values=vals)
 
-    def run(self, feeds: Dict[TensorRef, Any], *, timeout: float = 60.0) -> List[Any]:
+    def run(self, feeds: Dict[TensorRef, Any], *, timeout: float = 60.0,
+            spans: Any = None) -> List[Any]:
         try:
-            return self._run_once(feeds, timeout=timeout)
+            return self._run_once(feeds, timeout=timeout, spans=spans)
         except ExecutorError as e:
             # a worker's bounded graph registry may have evicted (or a
             # worker restarted under an unchanged endpoint): one
@@ -474,12 +547,18 @@ class WirePlan:
                 raise
             with self._reg_lock:
                 self._registered_gen = None
-            return self._run_once(feeds, timeout=timeout)
+            return self._run_once(feeds, timeout=timeout, spans=spans)
 
     def _run_once(self, feeds: Dict[TensorRef, Any], *,
-                  timeout: float = 60.0) -> List[Any]:
+                  timeout: float = 60.0, spans: Any = None) -> List[Any]:
         self.ensure_registered()
         eid = f"{self._eid_prefix}:{next(self._eid_counter)}"
+        # §16.2: tracing rides the run_graph payload ("trace": True) so
+        # workers attach a per-execution recorder and ship its spans back
+        # on the reply; the master-side step span brackets the whole
+        # scatter/gather from this process's point of view
+        trace = spans is not None
+        t_step = time.time() if trace else 0.0
         results: Dict[int, Any] = {}
         failures: Dict[int, BaseException] = {}
         stats: Dict[int, Dict[str, int]] = {}
@@ -494,7 +573,9 @@ class WirePlan:
                 rep = self.master.channels[task].call(
                     "run_graph", _timeout=timeout + 15.0, handle=self.handle,
                     task=task, execution_id=eid, feeds=local_feeds,
-                    timeout=timeout)
+                    timeout=timeout, trace=trace)
+                if trace:
+                    self.master.stash_worker_spans(task, rep.get("spans") or [])
                 with lock:
                     results.update(rep.get("results", {}))
                     stats[task] = {k: rep.get(k, 0) for k in
@@ -559,6 +640,10 @@ class WirePlan:
                              daemon=True).start()
 
         self.last_run_stats = stats  # per-task wire instrumentation
+        if trace:
+            spans.record(f"step:{eid}", obs_spans.CAT_STEP, "master",
+                         t_step, time.time(),
+                         args={"tasks": len(self.payloads)})
         missing = [str(self.exe.fetches[i])
                    for i in range(len(self.exe.fetches)) if i not in results]
         if missing:

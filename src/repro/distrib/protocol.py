@@ -4,7 +4,8 @@ Framing is deliberately minimal: every message is a 4-byte big-endian
 length prefix followed by that many payload bytes.  A payload is a
 pickled ``dict`` with a ``"kind"`` field naming the RPC
 (``register_graph`` / ``run_graph`` / ``recv_tensor`` / ``heartbeat`` /
-``get_variables`` / ``set_variables`` / ``cleanup`` / ``shutdown``).
+``get_variables`` / ``set_variables`` / ``cleanup`` / ``shutdown`` /
+``collect_trace`` / ``metrics_snapshot``).
 
 Tensors anywhere inside a message are hoisted through an explicit binary
 codec (:func:`encode_tensor` / :func:`decode_tensor`) instead of relying
@@ -38,6 +39,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import spans as obs_spans
 from ..runtime.rendezvous import DEAD_TENSOR, _DeadTensor
 from . import faults
 
@@ -225,11 +228,15 @@ def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
 # surfaces an execution failure that §3.3 recovery handles anyway.
 # run_graph and shutdown are deliberately absent: run_graph mutates
 # Variables per execution (a blind re-run could double-apply a training
-# step) and keeps its fail-fast contract.
+# step) and keeps its fail-fast contract.  metrics_snapshot is a pure
+# read; collect_trace drains the worker's span buffer, so a retry whose
+# first attempt reached the peer can lose those events — acceptable for
+# best-effort diagnostics, and retrying keeps trace collection alive
+# across transient transport hiccups.
 IDEMPOTENT_RPCS = frozenset({
     "heartbeat", "recv_tensor", "get_variables", "set_variables",
     "register_graph", "cleanup", "purge_execution", "update_cluster",
-    "debug_state",
+    "debug_state", "collect_trace", "metrics_snapshot",
 })
 
 RETRY_ATTEMPTS = 4          # total tries for an idempotent RPC
@@ -329,6 +336,10 @@ class Channel:
 
     def _call_once(self, kind: str, fields: Dict[str, Any],
                    deadline: float) -> Dict[str, Any]:
+        # §16 client-side RPC span: one process-global recorder check —
+        # the whole cost of the path when tracing is off
+        rec = obs_spans.get()
+        t_rpc = time.time() if rec is not None else None
         sock = self._acquire(deadline)
         try:
             faults.on_call(kind, fields, self.host, self.port)
@@ -345,6 +356,9 @@ class Channel:
         self._release(sock)
         if not reply.get("ok", False):
             raise WorkerError(reply.get("error", f"unknown {kind} failure"))
+        if rec is not None:
+            rec.record(kind, obs_spans.CAT_RPC, f"{self.host}:{self.port}",
+                       t_rpc, time.time(), args={"kind": kind})
         return reply
 
     def call(self, kind: str, *, _timeout: float = 60.0,
@@ -371,6 +385,7 @@ class Channel:
             except (OSError, ProtocolError):
                 if attempt + 1 >= attempts or not _backoff(attempt, deadline):
                     raise
+                obs_metrics.counter("distrib.rpc_retries").inc()
         raise AssertionError("unreachable")  # pragma: no cover
 
     def close(self) -> None:

@@ -47,11 +47,18 @@ from ..core.graph import Graph, TensorRef
 from ..core import fusion as fusion_mod
 from ..core import kernel_registry
 from ..core import ops as ops_mod
+from ..obs import metrics as obs_metrics
+from ..obs import spans as obs_spans
 from ..runtime.containers import ContainerManager, VariableStore
 from ..runtime.rendezvous import Rendezvous
 from . import faults
 from .protocol import Channel, recv_msg, send_msg
 from .wire import ClusterSpec, WireRendezvous
+
+# RPCs excluded from server-side span recording even when tracing: the
+# heartbeat fires continuously and the trace/metrics scrapes would trace
+# themselves.
+_UNTRACED_RPCS = frozenset({"heartbeat", "collect_trace", "metrics_snapshot"})
 
 
 @dataclasses.dataclass
@@ -106,6 +113,14 @@ class Worker:
         self._stop = threading.Event()
         self._sock: Optional[socket.socket] = None
         self._started = time.monotonic()
+        # §16 distributed EEG: the process-level span buffer (server-side
+        # RPC spans + any events not yet shipped on a run_graph reply),
+        # drained by the collect_trace RPC.  Recording stays off until the
+        # first traced run_graph arrives — the flag makes every
+        # instrumentation site a single bool check when the master never
+        # asked for tracing.
+        self.spans = obs_spans.SpanRecorder(process=f"worker-task{task}")
+        self._trace = False
 
     # ------------------------------------------------------------------
     def start(self) -> Tuple[str, int]:
@@ -171,6 +186,9 @@ class Worker:
                     reply: Dict[str, Any] = {"ok": False,
                                              "error": f"unknown RPC {kind!r}"}
                 else:
+                    t_rpc = (time.time()
+                             if self._trace and kind not in _UNTRACED_RPCS
+                             else None)
                     try:
                         reply = handler(msg)
                         reply.setdefault("ok", True)
@@ -180,6 +198,14 @@ class Worker:
                                           f"(pid {os.getpid()}) {kind} failed: "
                                           f"{type(e).__name__}: {e}\n"
                                           f"{traceback.format_exc(limit=8)}"}
+                    if t_rpc is not None:
+                        # §16 server-side RPC span, paired with the client
+                        # span the caller's Channel recorded
+                        self.spans.record(kind, obs_spans.CAT_RPC_SERVER,
+                                          f"task:{self.task}", t_rpc,
+                                          time.time(),
+                                          args={"kind": kind,
+                                                "ok": bool(reply.get("ok"))})
                 send_msg(conn, reply)
                 if kind == "shutdown":
                     self.stop()
@@ -308,6 +334,14 @@ class Worker:
         eid: str = p["execution_id"]
         timeout: float = float(p.get("timeout", 60.0))
         feeds: Dict[TensorRef, Any] = p.get("feeds") or {}
+        # §16: the master flags traced executions; one recorder per
+        # execution keeps concurrent run_graphs from draining each other,
+        # and the flag arms server-side RPC spans for the process
+        run_spans: Optional[obs_spans.SpanRecorder] = None
+        if p.get("trace"):
+            self._trace = True
+            run_spans = obs_spans.SpanRecorder(
+                process=f"worker-task{self.task}")
         wire = WireRendezvous(
             self.mailbox, reg.cluster, reg.task, eid, timeout=timeout,
             channel_of=lambda t: self._peer_channel(reg.cluster, t))
@@ -321,6 +355,10 @@ class Worker:
         timings: Dict[str, Dict[str, float]] = {}
 
         def run_device(dev: str, ex: Executor) -> None:
+            # §16.4 last-progress gauge: hang reports below read this to
+            # say how long each stuck device has been silent
+            progress = obs_metrics.gauge(f"worker.device.{dev}.last_progress_ts")
+            progress.set(time.time())
             ctx = ExecutionContext(
                 variables=store, rendezvous=wire, queues=self.queues,
                 checkpoint_io=self.checkpoint_io,
@@ -329,7 +367,7 @@ class Worker:
             local = [reg.fetch_remap.get(r, r) for _, r in specs]
             t_wall, t_cpu = time.monotonic(), time.thread_time()
             try:
-                vals = ex.run(local, feeds, ctx=ctx)
+                vals = ex.run(local, feeds, ctx=ctx, spans=run_spans)
                 with lock:
                     for (i, _), v in zip(specs, vals):
                         results[i] = v
@@ -340,10 +378,14 @@ class Worker:
                 # wall vs thread-CPU split: the gap is time this device
                 # spent blocked (Recv waits, scheduler) — §3.3 diagnostics
                 # surfaced through run_graph replies into last_run_stats
+                # AND the §16.4 metrics registry (worker.device_*)
+                wall = time.monotonic() - t_wall
+                cpu = time.thread_time() - t_cpu
+                obs_metrics.histogram("worker.device_wall_s").observe(wall)
+                obs_metrics.histogram("worker.device_cpu_s").observe(cpu)
+                progress.set(time.time())
                 with lock:
-                    timings[dev] = {
-                        "wall_s": time.monotonic() - t_wall,
-                        "cpu_s": time.thread_time() - t_cpu}
+                    timings[dev] = {"wall_s": wall, "cpu_s": cpu}
 
         threads = {dev: threading.Thread(target=run_device, args=(dev, ex),
                                          daemon=True,
@@ -360,14 +402,29 @@ class Worker:
             stuck = sorted(dev for dev, t in threads.items() if t.is_alive())
             if stuck:
                 wire.abort(RuntimeError(f"execution {eid} timed out"))
+                now = time.time()
+
+                def _age(dev: str) -> str:
+                    ts = obs_metrics.gauge(
+                        f"worker.device.{dev}.last_progress_ts").value
+                    return f"{now - ts:.1f}s ago" if ts else "never"
+
                 raise TimeoutError(
                     f"worker task:{reg.task} (pid {os.getpid()}): device(s) "
-                    f"{stuck} never finished within {timeout:.1f}s (stuck "
+                    + ", ".join(f"{d} (last progress {_age(d)})"
+                                for d in stuck)
+                    + f" never finished within {timeout:.1f}s (stuck "
                     f"Send/Recv or hung kernel; §3.3 failure reporting)")
-            return {"results": results,
-                    "sends": wire.sends, "bytes_sent": wire.bytes_sent,
-                    "remote_fetches": wire.remote_fetches,
-                    "timings": timings}
+            out = {"results": results,
+                   "sends": wire.sends, "bytes_sent": wire.bytes_sent,
+                   "remote_fetches": wire.remote_fetches,
+                   "timings": timings}
+            if run_spans is not None:
+                # ship this execution's spans on the reply; the clock
+                # sample lets the master sanity-check its offset estimate
+                out["spans"] = run_spans.drain()
+                out["clock"] = time.time()
+            return out
         finally:
             # stop straggler fetcher threads (blocked in recv_tensor RPCs
             # for up to their timeout) from depositing into the mailbox
@@ -398,10 +455,28 @@ class Worker:
         return {"value": value}
 
     def _rpc_heartbeat(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        # "clock" piggybacks NTP-style offset estimation on the liveness
+        # probe (§16.3): the master brackets the call with its own send /
+        # receive times and assumes this sample was taken at the midpoint
         return {"task": self.task, "pid": os.getpid(),
                 "active": len(self._active),
                 "uptime_s": time.monotonic() - self._started,
-                "registered": len(self._graphs)}
+                "registered": len(self._graphs),
+                "clock": time.time()}
+
+    def _rpc_collect_trace(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        """§16.2 drain the process-level span buffer (server-side RPC
+        spans; run_graph spans ship on their own replies).  Draining is
+        destructive, so a retried call can lose the events the first
+        attempt drained — acceptable for diagnostics, and why this RPC
+        is marked idempotent rather than given dedup bookkeeping."""
+        return {"events": self.spans.drain(), "clock": time.time(),
+                "task": self.task}
+
+    def _rpc_metrics_snapshot(self, p: Dict[str, Any]) -> Dict[str, Any]:
+        """§16.4 read-only dump of this process's metrics registry."""
+        return {"metrics": obs_metrics.snapshot(), "task": self.task,
+                "pid": os.getpid()}
 
     def _rpc_get_variables(self, p: Dict[str, Any]) -> Dict[str, Any]:
         ns = p.get("namespace", "s")

@@ -60,6 +60,26 @@ def add_cluster_options(ap: argparse.ArgumentParser,
     return ap
 
 
+def add_obs_options(ap: argparse.ArgumentParser,
+                    *, summary: bool = False) -> argparse.ArgumentParser:
+    """--trace-dir / --metrics-every (and --summary-dir for train): the
+    §16 observability surface — distributed EEG traces, periodic metrics
+    registry dumps, §9.1 scalar summaries."""
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write a merged Chrome-trace/Perfetto JSON of the "
+                         "run there (§16 distributed EEG; also REPRO_TRACE). "
+                         "Unset = tracing fully off, zero per-op cost")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="every N steps (or requests), print a snapshot of "
+                         "the §16.4 metrics registry (0 = never)")
+    if summary:
+        ap.add_argument("--summary-dir", default=None, metavar="DIR",
+                        help="append per-step scalar summaries (loss, "
+                             "tokens/sec) as JSONL events there (§9.1; "
+                             "read back with repro.tools.summary.read_events)")
+    return ap
+
+
 def session_options_from_args(args: argparse.Namespace,
                               **overrides) -> SessionOptions:
     """A SessionOptions carrying every session-relevant flag the parser
@@ -71,6 +91,8 @@ def session_options_from_args(args: argparse.Namespace,
         v = getattr(args, field, None)
         if v is not None:
             kw[field] = v
+    if getattr(args, "trace_dir", None):
+        kw["trace_dir"] = args.trace_dir
     if getattr(args, "cluster", None):
         kw["cluster"] = args.cluster
     kw.update(overrides)

@@ -18,8 +18,24 @@ from ..configs import get_config
 from ..core.options import SessionOptions
 from ..models.api import Model, Shape
 from ..models.params import init_params
-from .cli import add_cluster_options, add_engine_options
+from ..obs import metrics as obs_metrics
+from .cli import add_cluster_options, add_engine_options, add_obs_options
 from .steps import build_serve_step, build_eager_serve_step
+
+
+def print_metrics(label: str = "serve") -> None:
+    """One-line §16.4 registry digest: serving latency percentiles when
+    any request completed, plus the distrib counters when non-zero."""
+    snap = obs_metrics.snapshot()
+    lat = snap["histograms"].get("serving.request_latency_s")
+    parts = []
+    if lat and lat.get("count"):
+        parts.append(f"latency p50={lat['p50']*1e3:.1f}ms "
+                     f"p99={lat['p99']*1e3:.1f}ms n={lat['count']}")
+    for name, v in snap["counters"].items():
+        if v and name.startswith(("distrib.", "serving.")):
+            parts.append(f"{name}={v}")
+    print(f"[{label}] metrics: " + ("; ".join(parts) or "empty"))
 
 
 def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
@@ -106,7 +122,9 @@ def serve(arch: str = "qwen2-0.5b", *, smoke: bool = True, batch: int = 4,
 
 
 def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
-                  seed: int = 0, log_every: int = 25) -> Dict[str, Any]:
+                  seed: int = 0, log_every: int = 25,
+                  trace_dir: Optional[str] = None,
+                  metrics_every: int = 0) -> Dict[str, Any]:
     """DESIGN.md §11 distributed scoring loop over a TCP worker pool.
 
     Serves the wire-shippable primitive-op MLP's logits: the forward
@@ -125,7 +143,8 @@ def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
     spec = ClusterSpec.parse(cluster)
     tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
     ws = build_wire_train_step(tasks, seed=seed)
-    sess = Session(ws.builder.graph, options=SessionOptions(cluster=spec))
+    sess = Session(ws.builder.graph,
+                   options=SessionOptions(cluster=spec, trace_dir=trace_dir))
     # fetching only the logits prunes the whole loss/grad/update subgraph
     # (§4.2), so the shipped graph is the pure forward pass
     run = sess.make_callable([ws.logits], [ws.feed_x])
@@ -135,11 +154,16 @@ def serve_cluster(cluster: str, *, batch: int = 32, requests: int = 100,
     try:
         for r in range(requests):
             x = jnp.asarray(rs.randn(batch, 16).astype("f"))
+            t_req = time.time()
             (last,) = run(x)
+            obs_metrics.histogram("serving.request_latency_s").observe(
+                time.time() - t_req)
             if (r + 1) % log_every == 0:
                 rate = (r + 1) / (time.time() - t0)
                 print(f"[serve] request {r+1:4d} "
                       f"({rate:.1f} req/s over the wire)")
+            if metrics_every and (r + 1) % metrics_every == 0:
+                print_metrics()
     finally:
         stats = sess.cache_stats
         sess.close()
@@ -160,16 +184,21 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=32)
     add_engine_options(ap)
     add_cluster_options(ap)
+    add_obs_options(ap)
     ap.add_argument("--requests", type=int, default=100,
                     help="number of scoring requests in --cluster mode")
     args = ap.parse_args(argv)
     if args.cluster:
-        serve_cluster(args.cluster, batch=args.batch, requests=args.requests)
+        serve_cluster(args.cluster, batch=args.batch, requests=args.requests,
+                      trace_dir=args.trace_dir,
+                      metrics_every=args.metrics_every)
         return 0
     res = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, engine=args.engine,
                 numerics=args.numerics, backend=args.backend)
     print("[serve] sample token ids:", res["generated"][0][:16].tolist())
+    if args.metrics_every:
+        print_metrics()
     return 0
 
 

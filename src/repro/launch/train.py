@@ -26,8 +26,9 @@ from ..core.options import SessionOptions
 from ..data import SyntheticLMDataset, Prefetcher, batch_iterator
 from ..models.api import Shape
 from ..models.params import init_params, count_params
+from ..obs import metrics as obs_metrics
 from ..optim import adamw_init
-from .cli import add_cluster_options, add_engine_options
+from .cli import add_cluster_options, add_engine_options, add_obs_options
 from .steps import build_train_step, build_eager_train_step
 
 
@@ -37,7 +38,9 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
           log_every: int = 10, seed: int = 0,
           resume: bool = True, engine: str = "jit",
           numerics: str = "fast",
-          backend: Optional[str] = None) -> Dict[str, Any]:
+          backend: Optional[str] = None,
+          summary_dir: Optional[str] = None,
+          metrics_every: int = 0) -> Dict[str, Any]:
     """``engine="jit"`` lowers the step graph and jits it (§10);
     ``engine="graph"`` drives the same graph through ``Session.run``, where
     the steady-state loop re-runs one cached Executable per step
@@ -103,10 +106,10 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
     pipe = Prefetcher(batch_iterator(ds, batch, start_step), capacity=4).start()
 
     writer = None
-    if ckpt_dir:  # §9.1: summary events next to the checkpoints
+    if summary_dir or ckpt_dir:  # §9.1: explicit dir, else next to ckpts
         from ..tools import SummaryWriter
 
-        writer = SummaryWriter(os.path.join(ckpt_dir, "events"))
+        writer = SummaryWriter(summary_dir or os.path.join(ckpt_dir, "events"))
 
     losses = []
     t0 = time.time()
@@ -117,16 +120,25 @@ def train(arch: str = "smollm-360m", *, smoke: bool = True, steps: int = 200,
         if model.is_encdec:
             feeds["frames"] = jnp.zeros(
                 (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        t_step = time.time()
         loss, variables = step_fn(feeds, variables)
         losses.append(float(loss))
         if writer:
             writer.add(i + 1, "train/loss", losses[-1])
+            writer.add(i + 1, "train/tokens_per_sec",
+                       batch * seq / max(time.time() - t_step, 1e-9))
         if mgr and mgr.should_save(i + 1):
             mgr.save(i + 1, {"variables": snapshot_variables()})
         if (i + 1) % log_every == 0:
             rate = (i + 1 - start_step) * batch * seq / (time.time() - t0)
             print(f"[train] step {i+1:5d} loss {float(loss):.4f} "
                   f"({rate:,.0f} tok/s)")
+        if metrics_every and (i + 1) % metrics_every == 0:
+            snap = obs_metrics.snapshot()
+            interesting = {k: v for k, v in snap["counters"].items() if v}
+            print(f"[train] metrics step={i+1}: "
+                  + (" ".join(f"{k}={v}" for k, v
+                              in sorted(interesting.items())) or "empty"))
     pipe.stop()
     if writer:
         writer.close()
@@ -145,7 +157,9 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
                   ckpt_every: int = 10, log_every: int = 10, seed: int = 0,
                   max_recoveries: int = 3, retry_wait: float = 3.0,
                   run_timeout: float = 60.0,
-                  standby: Optional[str] = None) -> Dict[str, Any]:
+                  standby: Optional[str] = None,
+                  trace_dir: Optional[str] = None,
+                  metrics_every: int = 0) -> Dict[str, Any]:
     """§3.3/DESIGN.md §11/§13 multi-process training over a TCP pool.
 
     Drives the wire-shippable primitive-op classifier step
@@ -175,8 +189,56 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
     tasks = [f"/job:worker/task:{t}" for t in range(len(spec.workers))]
     ws = build_wire_train_step(tasks, lr=lr, seed=seed)
     sess = Session(ws.builder.graph,
-                   options=SessionOptions(cluster=spec, standby=standby or ()))
+                   options=SessionOptions(cluster=spec, standby=standby or (),
+                                          trace_dir=trace_dir))
     run = sess.make_callable([ws.loss, ws.train_op], [ws.feed_x, ws.feed_y])
+
+    def step_stats_line() -> str:
+        """Per-task StepStats from the last run_graph fan-out (§16.4):
+        device wall/cpu totals plus wire counters, one clause per task."""
+        master = getattr(sess, "_master", None)
+        if master is None:
+            return ""
+        parts = []
+        for plan in master.live_plans():
+            stats = getattr(plan, "last_run_stats", None) or {}
+            for task, st in sorted(stats.items()):
+                t = st.get("timings", {})
+                wall = sum(d.get("wall_s", 0.0) for d in t.values())
+                cpu = sum(d.get("cpu_s", 0.0) for d in t.values())
+                parts.append(
+                    f"task{task} wall={wall*1e3:.1f}ms cpu={cpu*1e3:.1f}ms "
+                    f"sends={st.get('sends', 0)} "
+                    f"bytes={st.get('bytes_sent', 0)}")
+            if parts:
+                break
+        return "; ".join(parts)
+
+    def print_cluster_metrics(step: int) -> None:
+        """Master-side distrib counters + each live worker's
+        ``metrics_snapshot`` digest (§16.4)."""
+        snap = obs_metrics.snapshot()
+        dist = {k: v for k, v in snap["counters"].items()
+                if v and k.startswith("distrib.")}
+        print(f"[train] metrics step={step} master: "
+              + (" ".join(f"{k}={v}" for k, v in sorted(dist.items()))
+                 or "none"))
+        master = getattr(sess, "_master", None)
+        if master is None:
+            return
+        for task in range(len(spec.workers)):
+            if task in master.dead:
+                continue
+            try:
+                rep = master.channels[task].call("metrics_snapshot",
+                                                 _timeout=5.0)
+            except Exception:  # noqa: BLE001 — diagnostics stay best-effort
+                continue
+            h = rep["metrics"]["histograms"].get("worker.device_wall_s") or {}
+            if h.get("count"):
+                print(f"[train]   task{task}: device wall "
+                      f"p50={h['p50']*1e3:.1f}ms p99={h['p99']*1e3:.1f}ms "
+                      f"n={h['count']}")
     print(f"[train] cluster={','.join(spec.workers)} tasks={len(tasks)} "
           f"graph_nodes={len(ws.builder.graph.nodes)} (wire step)")
 
@@ -218,6 +280,11 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
                     rate = (i - start_step) / max(time.time() - t0, 1e-9)
                     print(f"[train] step {i:5d} loss {losses[-1]:.4f} "
                           f"({rate:.1f} steps/s over the wire)")
+                    stats_line = step_stats_line()
+                    if stats_line:
+                        print(f"[train] StepStats step={i}: {stats_line}")
+                if metrics_every and i % metrics_every == 0:
+                    print_cluster_metrics(i)
             except (ExecutorError, WorkerError, OSError) as e:
                 if recoveries >= max_recoveries:
                     raise
@@ -278,6 +345,11 @@ def train_cluster(cluster: str, *, steps: int = 50, batch: int = 64,
                     # store at registration, so the next attempt is correct
         if mgr:
             mgr.save(steps, sess.pull_cluster_variables())
+        if trace_dir:
+            path = sess.export_trace()
+            if path:
+                print(f"[train] wrote merged trace to {path} "
+                      f"(load in Perfetto / chrome://tracing)")
     finally:
         sess.close()
     return {"losses": losses, "final_loss": losses[-1] if losses else None,
@@ -377,6 +449,7 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=100)
     add_engine_options(ap)
     add_cluster_options(ap, replication=True, standby=True)
+    add_obs_options(ap, summary=True)
     ap.set_defaults(smoke=True)
     args = ap.parse_args(argv)
     if args.cluster and args.replicas > 1:
@@ -388,13 +461,16 @@ def main(argv=None) -> int:
     elif args.cluster:
         res = train_cluster(args.cluster, steps=args.steps, batch=args.batch,
                             lr=args.lr, ckpt_dir=args.ckpt_dir,
-                            ckpt_every=args.ckpt_every, standby=args.standby)
+                            ckpt_every=args.ckpt_every, standby=args.standby,
+                            trace_dir=args.trace_dir,
+                            metrics_every=args.metrics_every)
     else:
         res = train(args.arch, smoke=args.smoke, steps=args.steps,
                     batch=args.batch, seq=args.seq, lr=args.lr,
                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                     engine=args.engine, numerics=args.numerics,
-                    backend=args.backend)
+                    backend=args.backend, summary_dir=args.summary_dir,
+                    metrics_every=args.metrics_every)
     print(f"[train] done: final loss {res['final_loss']:.4f}")
     return 0
 

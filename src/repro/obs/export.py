@@ -1,0 +1,119 @@
+"""Merge span streams into one Chrome-trace/Perfetto JSON (DESIGN.md §16.3).
+
+A *stream* is one process's events plus the clock-offset estimate that
+aligns it with the master's clock::
+
+    {"process": "worker-task1", "offset_s": 0.0031, "events": [...]}
+
+``merge_streams`` lays the result out as the EEG does: one pid per
+process (named via ``process_name`` metadata), one tid per device inside
+it, plus a dedicated ``rendezvous`` lane per process that collects the
+``wait`` spans — stall time is visible as its own track instead of being
+buried inside Recv compute.  Timestamps are normalised so the earliest
+event across all streams lands at t=0.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List
+
+from . import spans as _spans
+
+RENDEZVOUS_LANE = "rendezvous"
+
+
+def merge_streams(streams: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Merge per-process span streams into one Chrome-trace object."""
+    streams = [s for s in streams if s.get("events")]
+    if not streams:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    t0 = min(e["ts"] - s.get("offset_s", 0.0)
+             for s in streams for e in s["events"])
+
+    events: List[Dict[str, Any]] = []
+    for pid, stream in enumerate(streams, start=1):
+        process = str(stream.get("process", f"process{pid}"))
+        offset = float(stream.get("offset_s", 0.0))
+        tid_of: Dict[str, int] = {}
+
+        def tid(lane: str) -> int:
+            if lane not in tid_of:
+                tid_of[lane] = len(tid_of) + 1
+                events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                               "tid": tid_of[lane], "cat": "__metadata",
+                               "args": {"name": f"{process}/{lane}"}})
+            return tid_of[lane]
+
+        events.append({"name": "process_name", "ph": "M", "pid": pid,
+                       "tid": 0, "cat": "__metadata",
+                       "args": {"name": process}})
+
+        for e in stream["events"]:
+            cat = e.get("cat", _spans.CAT_OP)
+            lane = RENDEZVOUS_LANE if cat == _spans.CAT_WAIT \
+                else str(e.get("device", "?"))
+            args = dict(e.get("args", ()))
+            op = args.get("op")
+            if cat == _spans.CAT_REGION:
+                name = f"FusedRegion:{e['name']}"
+            elif op:
+                name = f"{op}:{e['name']}"
+            else:
+                name = str(e["name"])
+            events.append({
+                "name": name,
+                "cat": cat,
+                "ph": "X",
+                "pid": pid,
+                "tid": tid(lane),
+                "ts": (e["ts"] - offset - t0) * 1e6,
+                "dur": max(e["dur"] * 1e6, 0.01),
+                "args": args,
+            })
+
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_trace(path: str, streams: Iterable[Dict[str, Any]]) -> str:
+    """Write the merged trace JSON; returns the path written."""
+    obj = merge_streams(streams)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return path
+
+
+def validate_trace(obj: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema-check a merged trace; raises ``ValueError`` on violation.
+
+    Returns ``{"events": N, "processes": [...], "lanes": [...]}`` so
+    callers (the CI smoke job) can additionally assert lane coverage.
+    """
+    evs = obj.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        raise ValueError("trace has no traceEvents")
+    processes, lanes = [], []
+    for e in evs:
+        if not isinstance(e, dict):
+            raise ValueError(f"non-dict event: {e!r}")
+        missing = {"name", "ph", "pid", "tid"} - set(e)
+        if missing:
+            raise ValueError(f"event missing {sorted(missing)}: {e!r}")
+        if e["ph"] == "M":
+            if e["name"] == "process_name":
+                processes.append(e["args"]["name"])
+            elif e["name"] == "thread_name":
+                lanes.append(e["args"]["name"])
+        elif e["ph"] == "X":
+            if "ts" not in e or "dur" not in e:
+                raise ValueError(f"X event missing ts/dur: {e!r}")
+            if e["ts"] < 0 or e["dur"] <= 0:
+                raise ValueError(f"non-causal event: {e!r}")
+        else:
+            raise ValueError(f"unexpected phase {e['ph']!r}")
+    return {"events": sum(1 for e in evs if e["ph"] == "X"),
+            "processes": processes, "lanes": lanes}

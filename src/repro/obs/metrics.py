@@ -1,0 +1,212 @@
+"""Process-global metrics registry (DESIGN.md §16.4).
+
+One named home for the counters that used to live in scattered
+module-level ``STATS`` dicts, plus gauges and latency histograms for the
+serving tier.  Names follow ``<subsystem>.<metric>[.<detail>]``
+(``fusion.regions_built``, ``distrib.rpc_retries``,
+``serving.request_latency_s``); the full scheme is documented in
+DESIGN.md §16.4.
+
+The legacy dicts keep working through :class:`StatsDict`, a
+``MutableMapping`` whose items are registry counters — ``STATS["x"] += 1``
+still reads naturally at the call site but the value is now visible in
+``snapshot()`` and over the ``metrics_snapshot`` RPC.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Dict, Iterator, List, MutableMapping, Optional, Tuple
+
+
+class Counter:
+    """A monotonic-by-convention integer counter (``set`` exists so the
+    legacy ``for k in STATS: STATS[k] = 0`` reset idiom keeps working)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    def set(self, v: int) -> None:
+        with self._lock:
+            self._value = int(v)
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """A last-write-wins float sample (e.g. a last-progress timestamp)."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._value: Optional[float] = None
+
+    def set(self, v: float) -> None:
+        self._value = float(v)
+
+    @property
+    def value(self) -> Optional[float]:
+        return self._value
+
+
+class Histogram:
+    """Latency histogram with exact count/sum and a bounded reservoir of
+    the most recent observations for quantiles.  2048 samples bound both
+    memory and the sort cost of a ``percentile`` call while keeping
+    p50/p99 of the recent window accurate — the serving numbers ROADMAP
+    item 1 asks for are windowed anyway."""
+
+    RESERVOIR = 2048
+
+    __slots__ = ("name", "count", "sum", "_recent", "_lock")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self._recent: deque = deque(maxlen=self.RESERVOIR)
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            self._recent.append(v)
+
+    def percentile(self, p: float) -> Optional[float]:
+        with self._lock:
+            if not self._recent:
+                return None
+            xs = sorted(self._recent)
+        idx = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
+        return xs[idx]
+
+    def summary(self) -> Dict[str, Any]:
+        with self._lock:
+            xs = sorted(self._recent)
+            count, total = self.count, self.sum
+        if not xs:
+            return {"count": count, "sum": total}
+        pick = lambda p: xs[min(len(xs) - 1, int(round(p * (len(xs) - 1))))]
+        return {"count": count, "sum": total, "min": xs[0], "max": xs[-1],
+                "p50": pick(0.50), "p90": pick(0.90), "p99": pick(0.99)}
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named counters/gauges/histograms."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(name)
+            return h
+
+    def snapshot(self) -> Dict[str, Any]:
+        """A plain-dict, picklable view of everything registered — the
+        payload of the ``metrics_snapshot`` RPC."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            histograms = dict(self._histograms)
+        return {
+            "counters": {n: c.value for n, c in sorted(counters.items())},
+            "gauges": {n: g.value for n, g in sorted(gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(histograms.items())},
+        }
+
+
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str) -> Histogram:
+    return REGISTRY.histogram(name)
+
+
+def snapshot() -> Dict[str, Any]:
+    return REGISTRY.snapshot()
+
+
+class StatsDict(MutableMapping):
+    """Module-level ``STATS`` dict, registry-backed.
+
+    Drop-in for the old ad-hoc dicts: iteration order is insertion
+    order, missing keys raise ``KeyError``, and ``STATS[k] = v`` both
+    declares the key and sets the counter.  Every key ``k`` is the
+    registry counter ``<prefix>.<k>``, so existing call sites keep their
+    shape while the values surface in :func:`snapshot`.
+    """
+
+    def __init__(self, prefix: str, keys: Tuple[str, ...] = (),
+                 registry: Optional[MetricsRegistry] = None) -> None:
+        self._prefix = prefix
+        self._registry = registry if registry is not None else REGISTRY
+        self._keys: List[str] = []
+        for k in keys:
+            self[k] = 0
+
+    def _counter(self, key: str) -> Counter:
+        return self._registry.counter(f"{self._prefix}.{key}")
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._keys:
+            raise KeyError(key)
+        return self._counter(key).value
+
+    def __setitem__(self, key: str, value: int) -> None:
+        if key not in self._keys:
+            self._keys.append(key)
+        self._counter(key).set(value)
+
+    def __delitem__(self, key: str) -> None:
+        self._keys.remove(key)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(list(self._keys))
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def __repr__(self) -> str:
+        return repr({k: self[k] for k in self._keys})

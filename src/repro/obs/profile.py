@@ -1,0 +1,104 @@
+"""Offline profile reader for merged EEG traces (DESIGN.md §16.5).
+
+::
+
+    python -m repro.obs.profile /tmp/trace/trace.json [--top 10]
+                                [--stalls-over-us 100] [--validate]
+
+Renders the per-op / per-region / per-RPC time summary from a merged
+Chrome-trace JSON produced by ``Session(trace_dir=)``, plus the top
+rendezvous stalls — the textual equivalent of eyeballing the EEG lanes.
+``--validate`` additionally schema-checks the file and exits non-zero on
+violation (used by the CI smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+from . import spans as _spans
+from .export import validate_trace
+
+
+def _rows(events: List[Dict[str, Any]], cat: str) -> List[Dict[str, Any]]:
+    acc: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "total_us": 0.0, "max_us": 0.0})
+    for e in events:
+        if e.get("ph") != "X" or e.get("cat") != cat:
+            continue
+        key = e["name"].split(":", 1)[0] if cat == _spans.CAT_OP else e["name"]
+        r = acc[key]
+        r["count"] += 1
+        r["total_us"] += e["dur"]
+        r["max_us"] = max(r["max_us"], e["dur"])
+    return sorted(({"name": k, **v} for k, v in acc.items()),
+                  key=lambda r: -r["total_us"])
+
+
+def _table(title: str, rows: List[Dict[str, Any]], top: int) -> List[str]:
+    out = [f"## {title}"]
+    if not rows:
+        out.append("  (none)")
+        return out
+    out.append(f"  {'name':<40} {'count':>7} {'total_us':>12} {'max_us':>10}")
+    for r in rows[:top]:
+        out.append(f"  {r['name']:<40} {r['count']:>7} "
+                   f"{r['total_us']:>12.1f} {r['max_us']:>10.1f}")
+    if len(rows) > top:
+        out.append(f"  ... {len(rows) - top} more")
+    return out
+
+
+def render(obj: Dict[str, Any], *, top: int = 10,
+           stalls_over_us: float = 100.0) -> str:
+    events = [e for e in obj.get("traceEvents", []) if isinstance(e, dict)]
+    lines: List[str] = []
+    lines += _table("ops", _rows(events, _spans.CAT_OP), top)
+    lines += _table("fused regions", _rows(events, _spans.CAT_REGION), top)
+    lines += _table("rpcs (client)", _rows(events, _spans.CAT_RPC), top)
+    lines += _table("rpcs (server)", _rows(events, _spans.CAT_RPC_SERVER), top)
+
+    stalls = sorted((e for e in events
+                     if e.get("ph") == "X" and e.get("cat") == _spans.CAT_WAIT
+                     and e.get("dur", 0.0) >= stalls_over_us),
+                    key=lambda e: -e["dur"])
+    lines.append(f"## top rendezvous stalls (>= {stalls_over_us:.0f}us)")
+    if not stalls:
+        lines.append("  (none)")
+    for e in stalls[:top]:
+        lines.append(f"  {e['dur']:>10.1f}us  pid={e['pid']} {e['name']}")
+    return "\n".join(lines)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.profile",
+        description="per-op/per-region/per-RPC summary of a merged EEG trace")
+    ap.add_argument("trace", help="path to a merged Chrome-trace JSON")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--stalls-over-us", type=float, default=100.0)
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the trace; exit 1 on violation")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        obj = json.load(f)
+
+    if args.validate:
+        try:
+            info = validate_trace(obj)
+        except ValueError as e:
+            print(f"INVALID: {e}", file=sys.stderr)
+            return 1
+        print(f"valid: {info['events']} events, "
+              f"processes={info['processes']}, lanes={info['lanes']}")
+
+    print(render(obj, top=args.top, stalls_over_us=args.stalls_over_us))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

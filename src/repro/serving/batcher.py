@@ -27,6 +27,7 @@ import numpy as np
 
 from ..models.api import Model
 from ..models.params import init_params
+from ..obs import metrics as obs_metrics
 from ..runtime.queues import FIFOQueue, QueueClosed
 
 
@@ -174,11 +175,18 @@ class ContinuousBatcher:
                         or (req.eos_id is not None and tok == req.eos_id)
                         or self.slot_pos[s] >= self.max_seq - 1)
             if finished:
+                latency = time.time() - self.slot_t0[s]
                 self.results[req.rid] = RequestResult(
                     rid=req.rid, tokens=list(self.slot_out[s]),
                     prompt_len=len(req.prompt),
                     steps=int(self.slot_steps[s]),
-                    latency_s=time.time() - self.slot_t0[s])
+                    latency_s=latency)
+                # §16.4: request latency lands in the process registry so
+                # serve.py (and the metrics_snapshot RPC) can report
+                # p50/p99 without reaching into batcher internals
+                obs_metrics.histogram("serving.request_latency_s").observe(
+                    latency)
+                obs_metrics.counter("serving.requests_completed").inc()
                 self.slot_req[s] = None
                 done += 1
         return done

@@ -1,38 +1,63 @@
-"""§9.2 EEG analogue: fine-grained execution tracing.
+"""§9.2 EEG analogue: fine-grained execution tracing (legacy front-end).
 
-A :class:`Tracer` records (node, device, start, end, frame) for every
-kernel the eager executor dispatches; ``chrome_trace`` converts the
-record stream into the Chrome trace-event JSON format (load in
-chrome://tracing or Perfetto — the modern stand-in for the paper's EEG
-visualisation server).  Cross-device Send/Recv pairs show up as separate
-lanes, making communication stalls visible exactly as in Figures 12-14.
+:class:`Tracer` is the original in-process tracing API, kept working as
+a thin adapter over the §16 span stream (:mod:`repro.obs.spans`): the
+executor still calls ``record``/``record_wait`` with raw timestamps, but
+the events land in a :class:`~repro.obs.spans.SpanRecorder` and the
+legacy ``events`` view is derived from it.  For multi-process tracing
+use ``Session(trace_dir=)`` — the span pipeline this adapter rides.
+
+``critical_stalls`` reads the dedicated Recv-*wait* spans, not total
+Recv duration: a Recv whose tensor was already sitting in the rendezvous
+costs microseconds of transfer and zero wait, and the old
+total-duration filter mislabelled exactly those as stalls.
 """
 from __future__ import annotations
 
 import json
-import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
+
+from ..obs import spans as spans_mod
+from ..obs import export as export_mod
 
 
 class Tracer:
     def __init__(self) -> None:
-        self.events: List[Dict[str, Any]] = []
-        self._lock = threading.Lock()
-        self._t0 = time.perf_counter()
+        self.spans = spans_mod.SpanRecorder(process="local")
+        self._t0 = time.time()
 
     def record(self, node_name: str, op: str, device: str,
                t_start: float, t_end: float, frame: Any = ()) -> None:
-        with self._lock:
-            self.events.append({
-                "name": node_name, "op": op, "device": device,
-                "ts": (t_start - self._t0) * 1e6,
-                "dur": max((t_end - t_start) * 1e6, 0.01),
-                "frame": str(frame),
-            })
+        self.spans.record(node_name, spans_mod.CAT_OP, device, t_start, t_end,
+                          args={"op": op, "frame": str(frame)})
+
+    def record_wait(self, node_name: str, device: str,
+                    t_start: float, t_end: float, frame: Any = ()) -> None:
+        """Time the executor spent blocked on the rendezvous for this
+        node (Recv not ready, or a deferral ``wait_any``)."""
+        self.spans.record(node_name, spans_mod.CAT_WAIT, device,
+                          t_start, t_end,
+                          args={"op": "RecvWait", "frame": str(frame)})
 
     def now(self) -> float:
-        return time.perf_counter()
+        return time.time()
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        """The legacy event view: microseconds relative to construction."""
+        out = []
+        for e in self.spans.snapshot():
+            args = e.get("args", {})
+            out.append({
+                "name": e["name"],
+                "op": args.get("op", e["cat"]),
+                "device": e["device"],
+                "ts": (e["ts"] - self._t0) * 1e6,
+                "dur": max(e["dur"] * 1e6, 0.01),
+                "frame": args.get("frame", "()"),
+            })
+        return out
 
     def summarize(self) -> Dict[str, Dict[str, float]]:
         """Total time per op type (the EEG 'summarize at detail level')."""
@@ -44,24 +69,19 @@ class Tracer:
         return out
 
     def critical_stalls(self, threshold_us: float = 100.0) -> List[Dict]:
-        """Recv-side waits longer than threshold (highlighted with arrows
-        in the paper's UI; we just list them)."""
+        """Rendezvous waits longer than threshold (highlighted with arrows
+        in the paper's UI; we just list them).  Reads the wait spans —
+        wait time, not transfer time."""
         return [e for e in self.events
-                if e["op"] == "Recv" and e["dur"] >= threshold_us]
+                if e["op"] == "RecvWait" and e["dur"] >= threshold_us]
 
 
 def chrome_trace(tracer: Tracer) -> str:
-    """Chrome trace-event JSON (one lane per device)."""
-    devices = sorted({e["device"] for e in tracer.events})
-    pid_of = {d: i for i, d in enumerate(devices)}
-    events = [{"name": d, "ph": "M", "pid": pid_of[d], "tid": 0,
-               "args": {"name": d}, "cat": "__metadata"}
-              for d in devices]
-    for e in tracer.events:
-        events.append({
-            "name": f"{e['op']}:{e['name']}", "ph": "X",
-            "pid": pid_of[e["device"]], "tid": 0,
-            "ts": e["ts"], "dur": e["dur"],
-            "args": {"frame": e["frame"]},
-        })
-    return json.dumps({"traceEvents": events})
+    """Chrome trace-event JSON for one in-process tracer (single stream
+    through the §16 merge — same layout as ``Session(trace_dir=)``)."""
+    obj = export_mod.merge_streams([{
+        "process": tracer.spans.process,
+        "offset_s": 0.0,
+        "events": tracer.spans.snapshot(),
+    }])
+    return json.dumps(obj)
